@@ -1,0 +1,62 @@
+"""Paper Fig. 3 analogue: chunk-size scaling of the collective strategies.
+
+The paper sweeps message sizes between two nodes and shows per-message
+overhead separating the parcelports (TCP's latency vs LCI). Here the
+strategies (fused a2a / scatter ring / bisection) are swept over local
+pencil sizes on 2 host devices: measured wall time shows the dispatch/
+fusion overheads; the derived columns give the alpha-beta v5e model where
+the latency-vs-bandwidth crossover actually lives.
+"""
+
+from __future__ import annotations
+
+from repro.configs.fft_bench import CHUNK_SWEEP_SIZES
+from repro.core import comm_model
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import fft2, FFTConfig
+
+mesh = jax.make_mesh((2,), ("model",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+for n in __SIZES__:
+    x = jnp.asarray((rng.standard_normal((n, n)) + 1j*rng.standard_normal((n, n))).astype(np.complex64))
+    for strat in ["alltoall", "scatter", "bisection"]:
+        fn = jax.jit(lambda v, s=strat: fft2(v, mesh, "model", FFTConfig(strategy=s)))
+        jax.block_until_ready(fn(x))
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter(); jax.block_until_ready(fn(x)); ts.append(time.perf_counter()-t0)
+        ts.sort()
+        print(f"ROW,{n},{strat},{ts[len(ts)//2]*1e6:.1f}")
+"""
+
+
+def run() -> list[str]:
+    sizes = CHUNK_SWEEP_SIZES[:4]  # CPU budget
+    out = run_devices_subprocess(_CODE.replace("__SIZES__", repr(sizes)), devices=2)
+    rows = []
+    for line in out.splitlines():
+        if not line.startswith("ROW,"):
+            continue
+        _, n, strat, us = line.split(",")
+        n = int(n)
+        chunk_bytes = n * n * 8 // 4  # per-chunk payload at P=2: (n/P)*(n/P)... per message
+        p = 2
+        m_local = n * n * 8 / p
+        model = {
+            "alltoall": comm_model.t_alltoall(m_local, p),
+            "scatter": comm_model.t_scatter_ring(m_local, p),
+            "bisection": comm_model.t_bisection(m_local, p),
+        }[strat]
+        rows.append(
+            f"fig3_chunk/{strat}/n{n},{us},v5e_model_us={model*1e6:.2f};local_MB={m_local/2**20:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

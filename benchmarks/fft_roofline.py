@@ -1,0 +1,61 @@
+"""The paper's own workload through the roofline machinery: lower the
+2^14 x 2^14 c64 FFT (Figs. 4-5's problem) on the production 16-way axis
+and derive the three terms per collective strategy -- the dry-run
+quantification of the paper's all-to-all vs N-scatter comparison.
+
+Run in a subprocess (needs the 512-device host platform):
+    PYTHONPATH=src python -m benchmarks.fft_roofline
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import os, jax, jax.numpy as jnp
+from repro.core import FFTConfig, make_plan
+from repro.core import comm_model, hlo_analysis
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()  # 16x16: FFT shards over the 16-way 'model' axis
+n = 16384
+for strategy in ("alltoall", "scatter", "bisection", "xla_auto"):
+    cfgs = [(strategy, False)]
+    if strategy == "scatter":
+        cfgs.append((strategy, True))
+    for strat, fuse in cfgs:
+        plan = make_plan((n, n), mesh, strategy=strat, fuse_dft=fuse)
+        compiled = plan.lower().compile()
+        cost = hlo_analysis.analyze_compiled(compiled)
+        roof = comm_model.Roofline(
+            flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+            coll_bytes=cost.coll_bytes, chips=int(mesh.size),
+        )
+        ma = compiled.memory_analysis()
+        tag = strat + ("+fusedft" if fuse else "")
+        # useful flops: 5 N^2 log2(N^2) complex-radix2 reference / chips
+        useful = 5 * n * n * (2 * 14) / mesh.size / comm_model.PEAK_FLOPS_BF16
+        tb = max(roof.t_compute, roof.t_memory, roof.t_collective)
+        print(
+            f"ROW,{tag},{roof.t_compute*1e3:.2f},{roof.t_memory*1e3:.2f},"
+            f"{roof.t_collective*1e3:.2f},{roof.bottleneck},"
+            f"{ma.temp_size_in_bytes/2**30:.2f},{useful/tb*100:.1f}"
+        )
+"""
+
+
+def run() -> list[str]:
+    out = run_devices_subprocess(_CODE, devices=512, timeout=900)
+    rows = []
+    for line in out.splitlines():
+        if line.startswith("ROW,"):
+            _, tag, tc, tm, tl, bound, gib, frac = line.split(",")
+            rows.append(
+                f"fft_roofline_2^14/{tag},{float(tl)*1e3:.0f},"
+                f"t_ms=({tc},{tm},{tl});bound={bound};mem_GiB={gib};frac={frac}%"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,34 @@
+"""Local FFT implementation bench: XLA FFT vs MXU-matmul vs Pallas stage
+(interpret mode -- correctness-path timing; TPU timing is the target)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fftmath
+from repro.kernels import ops
+
+from benchmarks.common import time_fn
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in (1024, 4096):
+        x = jnp.asarray(
+            (rng.standard_normal((8, n)) + 1j * rng.standard_normal((8, n))).astype(np.complex64)
+        )
+        f_jnp = jax.jit(lambda v: fftmath.local_fft(v, impl="jnp"))
+        f_mm = jax.jit(lambda v: fftmath.local_fft(v, impl="matmul"))
+        rows.append(f"local_fft/jnp/n{n},{time_fn(f_jnp, x)*1e6:.1f},batch8")
+        rows.append(f"local_fft/matmul/n{n},{time_fn(f_mm, x)*1e6:.1f},batch8")
+        # pallas interpret mode is python-speed; time one call only
+        t = time_fn(lambda v: ops.fft_last_axis(v), x, warmup=1, iters=2)
+        rows.append(f"local_fft/pallas_interp/n{n},{t*1e6:.1f},batch8;interpret")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

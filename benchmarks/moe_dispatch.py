@@ -1,0 +1,57 @@
+"""MoE dispatch strategy A/B (the paper's technique generalized to the
+LM stack): fused gspmd collectives vs the explicit ring (batched + the
+paper-faithful interleaved variant) on 4 host devices."""
+
+from __future__ import annotations
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import dataclasses, time
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+import repro.models.moe as M
+
+mesh = jax.make_mesh((1, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+base = get_config("deepseek-v3-671b", reduced=True)
+base = dataclasses.replace(base, d_model=256,
+    moe=dataclasses.replace(base.moe, num_experts=16, expert_d_ff=512, top_k=2))
+rng = np.random.default_rng(0)
+p, _ = moe_lib.init_moe(jax.random.PRNGKey(0), base)
+x = jnp.asarray(rng.standard_normal((4, 64, base.d_model)), jnp.bfloat16)
+
+def bench(tag, cfg, interleave=False):
+    orig = M._ring_exchange_ffn
+    if interleave:
+        M._ring_exchange_ffn = lambda *a, **k: orig(*a, **{**k, "interleave": True})
+    try:
+        fn = jax.jit(lambda p, x: moe_lib.apply_moe(p, x, cfg, mesh=mesh)[0])
+        jax.block_until_ready(fn(p, x))
+        ts = []
+        for _ in range(10):
+            t0 = time.perf_counter(); jax.block_until_ready(fn(p, x)); ts.append(time.perf_counter()-t0)
+        ts.sort()
+        print(f"ROW,{tag},{ts[len(ts)//2]*1e6:.1f}")
+    finally:
+        M._ring_exchange_ffn = orig
+
+bench("gspmd_fused", dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="einsum")))
+bench("ring_batched", dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="ring")))
+bench("ring_interleaved", dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="ring")), interleave=True)
+"""
+
+
+def run() -> list[str]:
+    out = run_devices_subprocess(_CODE, devices=4)
+    rows = []
+    for line in out.splitlines():
+        if line.startswith("ROW,"):
+            _, tag, us = line.split(",")
+            rows.append(f"moe_dispatch/{tag},{us},16e_top2_4dev")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,88 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "phi-3-vision-4.2b", "mixtral-8x22b", "deepseek-v3-671b", "qwen2.5-32b",
+    "gemma2-9b", "nemotron-4-15b", "phi3-medium-14b", "xlstm-1.3b",
+    "hymba-1.5b", "whisper-medium",
+]
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json")):
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = [
+        "| arch | shape | mem/chip | t_comp | t_mem | t_coll | bound | useful_flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        ro = r["roofline"]
+        t_bound = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        # roofline fraction: useful model flops time / achievable bound time
+        t_useful = r["model_flops_per_chip"] / 197e12
+        frac = t_useful / t_bound if t_bound else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['memory']['peak_device_bytes']/2**30:.1f}Gi "
+            f"| {fmt_s(ro['t_compute_s'])} | {fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} "
+            f"| {ro['bottleneck']} | {r['useful_flops_frac']*100:.0f}% | {frac*100:.1f}% |"
+        )
+    return "\n".join(out)
+
+
+def summary(mesh: str = "single") -> Dict:
+    rows = load(mesh)
+    worst = min(rows, key=lambda r: _frac(r))
+    coll = max(rows, key=lambda r: r["roofline"]["t_collective_s"] / max(_tb(r), 1e-12))
+    return {"worst_frac": worst, "most_collective": coll}
+
+
+def _tb(r):
+    ro = r["roofline"]
+    return max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+
+
+def _frac(r):
+    return (r["model_flops_per_chip"] / 197e12) / max(_tb(r), 1e-12)
+
+
+def run() -> List[str]:
+    rows = []
+    for r in load("single"):
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        tb = _tb(r)
+        rows.append(f"{name},{tb*1e6:.0f},bound={r['roofline']['bottleneck']};frac={_frac(r)*100:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    print(roofline_table("single"))
+    print()
+    print("== multi-pod ==")
+    print(roofline_table("multi"))

@@ -1,0 +1,57 @@
+"""Benchmark harness -- one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig3_chunk/*     chunk-size scaling of collective strategies (Fig. 3)
+  fig45_strong/*   FFT strong scaling per strategy + reference (Figs. 4-5)
+  moe_dispatch/*   paper technique on the LM stack (MoE a2a strategies)
+  local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel]
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="fig3,fig45,moe,kernel")
+    args = ap.parse_args()
+    wanted = set(args.only.split(","))
+    print("name,us_per_call,derived")
+    rows = []
+    if "kernel" in wanted:
+        from benchmarks import kernel_bench
+
+        rows += kernel_bench.run()
+        _flush(rows)
+    if "fig3" in wanted:
+        from benchmarks import chunk_scaling
+
+        rows += chunk_scaling.run()
+        _flush(rows)
+    if "fig45" in wanted:
+        from benchmarks import strong_scaling
+
+        rows += strong_scaling.run()
+        _flush(rows)
+    if "moe" in wanted:
+        from benchmarks import moe_dispatch
+
+        rows += moe_dispatch.run()
+        _flush(rows)
+
+
+_printed = 0
+
+
+def _flush(rows):
+    global _printed
+    for r in rows[_printed:]:
+        print(r)
+        sys.stdout.flush()
+    _printed = len(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Figs. 4-5 analogue: FFT strong scaling, all-to-all vs scatter,
+vs the compiler-auto reference (the FFTW3 stand-in).
+
+The paper: 2-D FFT of 2^14 x 2^14 over 1..16 nodes, one figure per
+collective formulation, FFTW3 MPI+pthreads as the reference line. Here:
+2^10 x 2^10 (CPU-tractable; same shape family) over 1/2/4/8 host
+devices x {alltoall, scatter, bisection, xla_auto}; derived columns give
+the alpha-beta v5e projection for the paper's full 2^14 problem.
+"""
+
+from __future__ import annotations
+
+from repro.core import comm_model
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import fft2, FFTConfig
+
+n = __N__
+devs = __DEVS__
+mesh = jax.make_mesh((devs,), ("model",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+x = jnp.asarray((rng.standard_normal((n, n)) + 1j*rng.standard_normal((n, n))).astype(np.complex64))
+for strat in ["alltoall", "scatter", "bisection", "xla_auto"]:
+    cfgs = [("jnp", strat)]
+    if strat == "scatter":
+        cfgs.append(("jnp+fuse", strat))
+    for impl, s in cfgs:
+        cfg = FFTConfig(strategy=s, fuse_dft=(impl == "jnp+fuse"))
+        fn = jax.jit(lambda v, c=cfg: fft2(v, mesh, "model", c))
+        jax.block_until_ready(fn(x))
+        ts = []
+        for _ in range(8):
+            t0 = time.perf_counter(); jax.block_until_ready(fn(x)); ts.append(time.perf_counter()-t0)
+        ts.sort()
+        print(f"ROW,{devs},{s},{impl},{ts[len(ts)//2]*1e6:.1f}")
+"""
+
+
+def run(n: int = 1024) -> list[str]:
+    rows = []
+    for devs in (1, 2, 4, 8):
+        out = run_devices_subprocess(_CODE.replace("__N__", str(n)).replace("__DEVS__", str(devs)), devices=devs)
+        for line in out.splitlines():
+            if not line.startswith("ROW,"):
+                continue
+            _, d, strat, impl, us = line.split(",")
+            d = int(d)
+            # v5e projection for the PAPER's 2^14 problem at this device count
+            m_local = (16384 * 16384 * 8) / max(d, 1)
+            proj = {
+                "alltoall": comm_model.t_alltoall(m_local, d),
+                "scatter": comm_model.t_scatter_ring(m_local, d),
+                "bisection": comm_model.t_bisection(m_local, d),
+                "xla_auto": comm_model.t_alltoall(m_local, d),
+            }[strat]
+            tag = strat if impl != "jnp+fuse" else strat + "+fusedft"
+            rows.append(
+                f"fig45_strong/{tag}/p{d},{us},v5e_comm_2e14_us={proj*1e6:.0f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,50 @@
+"""Quickstart: distributed 2-D FFT with switchable collective strategies.
+
+Run (any machine; forces 8 host devices for a visible mesh):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.core import FFTConfig, fft2, ifft2, make_plan
+
+
+def main():
+    mesh = jax.make_mesh((len(jax.devices()),), ("model",), axis_types=(AxisType.Auto,))
+    print(f"mesh: {dict(mesh.shape)}")
+
+    rng = np.random.default_rng(0)
+    n = 512
+    x = jnp.asarray(
+        (rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))).astype(np.complex64)
+    )
+    ref = np.fft.fft2(np.asarray(x))
+
+    # the paper's comparison: one synchronized all-to-all vs N scatters
+    for strategy in ("alltoall", "scatter", "bisection", "xla_auto"):
+        y = fft2(x, mesh, "model", FFTConfig(strategy=strategy))
+        err = float(jnp.abs(jnp.asarray(y) - jnp.asarray(ref.T)).max())
+        print(f"  fft2[{strategy:9s}] max err vs numpy: {err:.2e}")
+
+    # beyond-paper: fold the second-dimension DFT into the scatter ring
+    y = fft2(x, mesh, "model", FFTConfig(strategy="scatter", fuse_dft=True))
+    print(f"  fft2[scatter+fused-dft] err: {float(jnp.abs(y - ref.T).max()):.2e}")
+
+    # plans (FFTW-style), roundtrip
+    plan = make_plan((n, n), mesh, strategy="scatter")
+    z = ifft2(plan.execute(x), mesh, "model", FFTConfig(strategy="scatter"))
+    print(f"  ifft2(fft2(x)) roundtrip err: {float(jnp.abs(z - x).max()):.2e}")
+    print(f"  per-device pencil exchange: {plan.comm_bytes()/2**20:.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

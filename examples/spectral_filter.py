@@ -1,0 +1,52 @@
+"""Scientific-compute example: distributed spectral low-pass filtering of
+a 3-D field using the collective-strategy FFT (paper's application class:
+multi-dimensional FFT on a partitioned domain).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/spectral_filter.py
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType
+
+from repro.core import FFTConfig, fft3
+
+
+def main():
+    mesh = jax.make_mesh((len(jax.devices()),), ("model",), axis_types=(AxisType.Auto,))
+    d = 64
+    rng = np.random.default_rng(0)
+    # smooth field + high-frequency noise
+    grid = np.stack(np.meshgrid(*[np.linspace(0, 2 * np.pi, d)] * 3, indexing="ij"))
+    smooth = np.sin(grid[0]) * np.cos(2 * grid[1]) + 0.5 * np.sin(3 * grid[2])
+    field = (smooth + 0.5 * rng.standard_normal((d, d, d))).astype(np.complex64)
+
+    cfg = FFTConfig(strategy="scatter")
+    spec = fft3(jnp.asarray(field), mesh, "model", cfg)
+    # low-pass mask (keep |k| < d/8 per axis)
+    freqs = np.fft.fftfreq(d) * d
+    keep = (np.abs(freqs) < d / 8)
+    mask = keep[:, None, None] & keep[None, :, None] & keep[None, None, :]
+    filt = spec * jnp.asarray(mask)
+    back = fft3(filt, mesh, "model", cfg, inverse=True)
+
+    residual = np.asarray(jnp.real(back)) - smooth
+    noise_in = field.real - smooth
+    print(f"noise std before: {noise_in.std():.3f}  after filter: {residual.std():.3f}")
+    assert residual.std() < 0.45 * noise_in.std()
+    print("OK: distributed spectral filter removed the high-frequency noise")
+
+
+if __name__ == "__main__":
+    main()

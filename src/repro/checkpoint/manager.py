@@ -1,0 +1,130 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, cross-mesh.
+
+Durability contract for 1000-node runs:
+
+- *atomic*: a checkpoint is written into ``step_<N>.tmp`` and
+  ``os.replace``d into place only when complete; a crash mid-save never
+  corrupts the latest good checkpoint.
+- *async*: the device->host transfer blocks, the disk write happens on a
+  background thread (joined before the next save / on close) so the
+  train loop loses ~0 step time.
+- *keep-N*: bounded disk usage with the newest N checkpoints retained.
+- *mesh-agnostic restore*: leaves are stored as full logical arrays with
+  a manifest of shapes/dtypes; ``restore(..., shardings=...)`` re-shards
+  onto whatever mesh the restart got (elastic re-scale). On multi-host,
+  each process would write its addressable shards under
+  ``proc<k>/`` -- the layout already carries the process index.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in path
+        )
+        flat[name] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, process_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.process_index = process_index
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        self.wait()
+        flat = _flatten_with_names(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device -> host now
+        manifest = {
+            "step": int(step),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in host.items()},
+        }
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, f"proc{self.process_index}.npz"), **host)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, *, shardings: Any = None) -> Any:
+        """Restore into the structure of ``target``; ``shardings`` (same
+        structure, NamedShardings) re-shards for the current mesh."""
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step:010d}", f"proc{self.process_index}.npz")
+        data = np.load(path)
+        names = list(_flatten_with_names(target).keys())
+        flat_target, treedef = jax.tree.flatten(target)
+        flat_sh = treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(
+            flat_target
+        )
+        out = []
+        for name, tgt, sh in zip(names, flat_target, flat_sh):
+            arr = data[name]
+            if tuple(arr.shape) != tuple(jnp.shape(tgt)):
+                raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {jnp.shape(tgt)}")
+            arr = arr.astype(np.dtype(jnp.result_type(tgt)) if hasattr(tgt, "dtype") else arr.dtype)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        return treedef.unflatten(out)
+
+    def restore_latest(self, target: Any, *, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target, shardings=shardings)

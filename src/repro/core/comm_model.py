@@ -1,0 +1,247 @@
+"""ICI communication cost model + compiled-HLO collective accounting.
+
+Two roles:
+
+1. **alpha-beta napkin model** of the collective strategies (DESIGN.md §2)
+   -- drives the hypothesis step of every perf iteration and the
+   chunk-size benchmark's derived columns (the paper's Fig. 3 regime:
+   per-message overhead alpha vs bandwidth beta).
+
+2. **HLO collective parser** for the roofline's collective term: walks
+   ``compiled.as_text()``, sums the shipped bytes of every collective op
+   (with the standard (P-1)/P ring factors), since ``cost_analysis()``
+   does not report communication.
+
+v5e constants are module-level so benchmarks and the dry-run agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW_PER_LINK = 50e9  # bytes/s (per direction, per link)
+ICI_LINKS = 4  # torus links usable by a well-mapped collective
+ICI_LATENCY_S = 1e-6  # per-hop software+switch latency (alpha)
+VMEM_BYTES = 128 * 1024 * 1024
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta strategy model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommParams:
+    alpha_s: float = ICI_LATENCY_S  # per message
+    beta_bytes_s: float = ICI_BW_PER_LINK * ICI_LINKS  # per device
+    compute_overlap: float = 0.0  # fraction of per-chunk compute hidden
+
+
+def t_alltoall(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
+    """One fused all-to-all: every device ships (1-1/P)*M once; the fabric
+    moves it in a single synchronized phase."""
+    if p <= 1:
+        return 0.0
+    return prm.alpha_s + (1 - 1 / p) * m_bytes / prm.beta_bytes_s
+
+
+def t_scatter_ring(m_bytes: float, p: int, prm: CommParams = CommParams(),
+                   chunk_compute_s: float = 0.0) -> float:
+    """P-1 direct sends of M/P each; per-chunk compute overlaps the next
+    send (fully, if chunk_compute <= chunk_comm)."""
+    if p <= 1:
+        return max(chunk_compute_s, 0.0)
+    per_chunk = prm.alpha_s + (m_bytes / p) / prm.beta_bytes_s
+    exposed = max(0.0, chunk_compute_s - per_chunk) * (p - 1)
+    return (p - 1) * per_chunk + chunk_compute_s + exposed * 0  # last chunk's compute exposed
+
+
+def t_bisection(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
+    """ceil(log2 P) rounds of M/2 each (Bruck): fewest messages, most
+    bytes -- wins in the alpha-dominated small-chunk regime."""
+    import math
+
+    if p <= 1:
+        return 0.0
+    rounds = math.ceil(math.log2(p))
+    return rounds * (prm.alpha_s + (m_bytes / 2) / prm.beta_bytes_s)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_ITOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the op's result (first shape after '=', incl. tuples)."""
+    rhs = line.split("=", 1)[1]
+    # take shapes up to the op name's '(' -- i.e. the result type only
+    head = rhs.split("(", 1)[0]
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype in _DTYPE_BYTES:
+            total += _shape_bytes(dtype, dims)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_moved: Dict[str, float]  # per-device bytes shipped over ICI
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_moved.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveStats:
+    """Sum per-device ICI bytes for every collective in compiled HLO.
+
+    Ring-factor accounting (result size S, group size P):
+      all-gather:          each device receives (P-1)/P * S
+      reduce-scatter:      ships (P-1)/P * (P*S) /P ... = (P-1)/P * operand = (P-1)*S
+      all-reduce:          ring RS+AG = 2 (P-1)/P * S
+      all-to-all:          (P-1)/P * S
+      collective-permute:  S (point-to-point)
+    '-start' async forms counted once; '-done' skipped.
+    """
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    bytes_moved: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lowered = s.split("=", 1)[1].lstrip()
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            # op name appears right after the result type, e.g.
+            # "%ag = f32[8,4]{1,0} all-gather-start(...)"
+            if re.search(rf"\b{k}(-start)?\(", lowered):
+                kind = k
+                break
+        if kind is None or f"{kind}-done" in lowered:
+            continue
+        size = _result_bytes(s)
+        if kind == "collective-permute":
+            counts[kind] += 1
+            bytes_moved[kind] += size
+            continue
+        p = _group_size(s, default_group)
+        if p <= 1:
+            factor = 0.0
+        elif kind == "all-reduce":
+            factor = 2 * (p - 1) / p
+        elif kind == "reduce-scatter":
+            factor = (p - 1)  # result is 1/P of operand; ships (P-1)/P*operand
+        elif kind == "collective-permute":
+            factor = 1.0
+        else:  # all-gather, all-to-all
+            factor = (p - 1) / p
+        counts[kind] += 1
+        bytes_moved[kind] += size * factor
+    return CollectiveStats(counts=counts, bytes_moved=bytes_moved)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # HLO flops, whole program, per device
+    hbm_bytes: float  # HLO bytes accessed, per device
+    coll_bytes: float  # ICI bytes shipped, per device
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_BW_PER_LINK * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def roofline_from_compiled(compiled, *, chips: int, default_group: int = 1) -> Roofline:
+    ca = compiled.cost_analysis()
+    if not isinstance(ca, dict):  # older jax returned [dict]
+        ca = ca[0]
+    stats = parse_collectives(compiled.as_text(), default_group=default_group)
+    return Roofline(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=stats.total_bytes,
+        chips=chips,
+    )

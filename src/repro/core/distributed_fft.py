@@ -1,0 +1,288 @@
+"""Pencil-decomposed distributed FFT composed from local FFTs + the
+collective-strategy transpose (the paper's application, §2).
+
+Global data model for ``fft2``: x has shape (..., R, C) with R sharded
+over ``axis_name`` (P shards); leading axes are batch. The paper's four
+steps per dimension map to:
+
+    1. local FFT along the contiguous axis (C)
+    2/3. chunk + communicate: ``distributed_transpose`` (strategy-switchable)
+    4. chunk re-transpose -- folded into the strategy (the ``scatter``
+       strategy transposes each chunk as it arrives; the fused collectives
+       transpose after assembly)
+
+then the second dimension's local FFT. Output is the transposed spectrum
+F^T (C sharded) by default -- standard for pencil FFT libraries -- or the
+natural layout with ``transpose_back=True`` (one more exchange).
+
+``fuse_dft=True`` (beyond-paper, scatter strategy only) goes further than
+the paper's "transpose chunks on arrival": it folds the *second
+dimension's DFT itself* into the ring via decimation across source ranks
+(R = P*r, DFT_R = DFT_P across ranks x twiddle x DFT_r within chunks).
+Each arriving chunk contributes W_P[:, src] (x) chunk to the accumulator,
+so the post-communication serial FFT_R disappears into the ring. See
+EXPERIMENTS.md §Perf for the roofline accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.core.fftmath as lf
+import repro.core.transpose as tr
+from repro.core.overlap import ring_scatter_reduce
+
+
+# ---------------------------------------------------------------------------
+# shard_map-local building blocks
+# ---------------------------------------------------------------------------
+
+
+def _fft_local_then_transpose(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    strategy: tr.Strategy,
+    impl: lf.LocalImpl,
+) -> jax.Array:
+    """Steps 1-4 for one dimension: local FFT along the contiguous axis,
+    then the strategy-switched pencil exchange."""
+    y = lf.local_fft(x, axis=-1, impl=impl)
+    return tr.distributed_transpose(y, axis_name, strategy=strategy)
+
+
+def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> jax.Array:
+    """fft2 second dimension folded into the ring (fuse_dft=True).
+
+    After the row FFT, the column DFT of length R = P*r decomposes across
+    source ranks (decimation in time with n1 = P, n2 = r):
+
+        F[k1 + P*k2] = DFT_r over j2 [ T[k1, j2] * sum_src W_P[k1, src] * chunk_src[j2] ]
+
+    The inner sum is exactly a ring_scatter_reduce whose per-chunk compute
+    is a cheap rank-1 outer product -- fully overlapped with the sends.
+    """
+    y = lf.local_fft(x, axis=-1, impl=impl)
+    p = lax.axis_size(axis_name)
+    r = y.shape[-2]
+    c = y.shape[-1] // p
+    n = p * r
+    w_p = jnp.asarray(lf._dft_matrix_np(p))  # (k1, src)
+
+    def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
+        # chunk (..., r, c) = rows [src*r,...) x my column block; transpose
+        # to (..., c, r) then expand across the k1 dimension.
+        ct = jnp.swapaxes(chunk, -1, -2)  # (..., c, j2=r)
+        col = lax.dynamic_slice_in_dim(w_p, src, 1, axis=1)[:, 0]  # (k1=p,)
+        return ct[..., None, :] * col[:, None]  # (..., c, k1=p, j2=r)
+
+    acc = ring_scatter_reduce(y, axis_name, chunk_fn, split_axis=-1)
+    # Twiddle T[k1, j2] = w_n^(k1*j2), then DFT over j2 -> k2.
+    tw = jnp.asarray(lf._twiddle_np(p, r))
+    acc = acc * tw
+    acc = lf.local_fft(acc, axis=-1, impl=impl)  # (..., c, k1=p, k2=r)
+    # F index k = k1 + P*k2 -> order (k2 major, k1 minor).
+    out = jnp.swapaxes(acc, -1, -2)  # (..., c, k2, k1)
+    del c, n
+    return out.reshape(out.shape[:-2] + (p * r,))
+
+
+# ---------------------------------------------------------------------------
+# Public distributed transforms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTConfig:
+    strategy: str = "alltoall"  # alltoall | scatter | bisection | xla_auto
+    local_impl: lf.LocalImpl = "jnp"
+    fuse_dft: bool = False  # scatter-only: fold 2nd-dim DFT into the ring
+    transpose_back: bool = False  # return natural (row-sharded) layout
+
+
+def _check(cfg: FFTConfig) -> None:
+    if cfg.fuse_dft and cfg.strategy != "scatter":
+        raise ValueError("fuse_dft requires strategy='scatter'")
+    if cfg.strategy not in ("alltoall", "scatter", "bisection", "xla_auto"):
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+
+def fft2(
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    *,
+    inverse: bool = False,
+) -> jax.Array:
+    """Distributed 2-D FFT of (..., R, C), R sharded over ``axis_name``.
+
+    Returns F^T (= fft2(x).swapaxes(-1,-2)) with C sharded, unless
+    ``cfg.transpose_back`` -- mirroring the paper's pencil layout. With
+    ``inverse``, computes the unitary-unnormalized ifft2 (1/(R*C) factor),
+    same layout conventions.
+    """
+    _check(cfg)
+    if cfg.strategy == "xla_auto":
+        return _fft2_xla_auto(x, mesh, axis_name, inverse=inverse, transpose_back=cfg.transpose_back)
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = jnp.conj(xl) if inverse else xl
+        if cfg.fuse_dft:
+            out = _fft2_fused_scatter(v, axis_name, impl=cfg.local_impl)
+        else:
+            out = _fft_local_then_transpose(v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl)
+            out = lf.local_fft(out, axis=-1, impl=cfg.local_impl)
+        if cfg.transpose_back:
+            out = tr.distributed_transpose(
+                out, axis_name, strategy=cfg.strategy if cfg.strategy != "xla_auto" else "alltoall"
+            )
+        if inverse:
+            out = jnp.conj(out) / (x.shape[-1] * x.shape[-2])
+        return out
+
+    ndim = x.ndim
+    spec_in = P(*([None] * (ndim - 2) + [axis_name, None]))
+    spec_out = spec_in if cfg.transpose_back else P(*([None] * (ndim - 2) + [axis_name, None]))
+    return jax.shard_map(fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out)(x)
+
+
+def ifft2(x: jax.Array, mesh: Mesh, axis_name: str, cfg: FFTConfig = FFTConfig()) -> jax.Array:
+    return fft2(x, mesh, axis_name, cfg, inverse=True)
+
+
+def _fft2_xla_auto(
+    x: jax.Array, mesh: Mesh, axis_name: str, *, inverse: bool, transpose_back: bool
+) -> jax.Array:
+    """The 'FFTW3 reference' analogue: hand the sharded array to XLA's own
+    FFT op under jit and let GSPMD choose the communication schedule."""
+    ndim = x.ndim
+    spec = P(*([None] * (ndim - 2) + [axis_name, None]))
+    sh = NamedSharding(mesh, spec)
+
+    def fn(v: jax.Array) -> jax.Array:
+        out = jnp.fft.ifft2(v) if inverse else jnp.fft.fft2(v)
+        if not transpose_back:
+            out = jnp.swapaxes(out, -1, -2)
+        return out
+
+    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(x)
+
+
+def fft3(
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    *,
+    inverse: bool = False,
+) -> jax.Array:
+    """Slab-decomposed 3-D FFT of (..., D0, D1, D2), D0 sharded.
+
+    Local batched 2-D FFT over (D1, D2), then one strategy-switched
+    exchange to localize D0, FFT, and the exchange back (natural layout is
+    always restored: 3-D users expect it)."""
+    _check(cfg)
+    if cfg.strategy == "xla_auto":
+        ndim = x.ndim
+        spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
+        sh = NamedSharding(mesh, spec)
+        f = jnp.fft.ifftn if inverse else jnp.fft.fftn
+        return jax.jit(lambda v: f(v, axes=(-3, -2, -1)), in_shardings=sh, out_shardings=sh)(x)
+
+    d0, d1, d2 = x.shape[-3:]
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = jnp.conj(xl) if inverse else xl
+        v = lf.local_fft2(v, impl=cfg.local_impl)  # over (D1, D2), both local
+        flat = v.reshape(v.shape[:-2] + (d1 * d2,))  # (..., d0_local, D1*D2)
+        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
+        t = lf.local_fft(t, axis=-1, impl=cfg.local_impl)  # along D0
+        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        out = back.reshape(v.shape)
+        if inverse:
+            out = jnp.conj(out) / (d0 * d1 * d2)
+        return out
+
+    ndim = x.ndim
+    spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
+    return jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def fft1d_large(
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    *,
+    rows: Optional[int] = None,
+) -> jax.Array:
+    """Distributed 1-D FFT of a signal too large for one device.
+
+    x: (..., N) viewed as (R, C) row-major with R = rows (default: R = P *
+    ceil-balanced) sharded. Six-step algorithm: transpose, FFT_R, twiddle
+    (fused into the second exchange's chunks under ``scatter``), transpose,
+    FFT_C, transpose. Returns the standard-ordered spectrum, R-sharded.
+    """
+    _check(cfg)
+    if cfg.strategy == "xla_auto":
+        ndim = x.ndim
+        sh = NamedSharding(mesh, P(*([None] * (ndim - 1) + [axis_name])))
+        return jax.jit(jnp.fft.fft, in_shardings=sh, out_shardings=sh)(x)
+
+    n = x.shape[-1]
+    p = mesh.shape[axis_name]
+    r = rows or p
+    if n % r or (n // r) % p or r % p:
+        raise ValueError(f"N={n} must factor as rows({r}) x cols with both divisible by P={p}")
+    c = n // r
+
+    def fn(xl: jax.Array) -> jax.Array:
+        me = lax.axis_index(axis_name)
+        # local rows block of A = x.reshape(R, C): (..., R/p, C)
+        a = xl.reshape(xl.shape[:-1] + (r // p, c))
+        # exchange 1: localize columns j2; FFT_R over j1 -> k1
+        t1 = tr.distributed_transpose(a, axis_name, strategy=cfg.strategy)
+        g = lf.local_fft(t1, axis=-1, impl=cfg.local_impl)  # (..., C/p, R)
+
+        # Twiddle w_n^(j2*k1). Under ``scatter`` it is fused into exchange
+        # 2's per-chunk compute (applied to each chunk as it arrives --
+        # the paper's 'hide computation behind communication'); otherwise
+        # applied up-front to the whole block.
+        if cfg.strategy == "scatter":
+
+            def tw_chunk(chunk: jax.Array, src: jax.Array) -> jax.Array:
+                # chunk (..., R/p, C/p): my k1 block x src's j2 block.
+                k1 = me * (r // p) + jnp.arange(r // p)
+                j2 = src * (c // p) + jnp.arange(c // p)
+                tw = jnp.exp(-2j * jnp.pi * (k1[:, None] * j2[None, :]) / n)
+                return chunk * tw.astype(chunk.dtype)
+
+            t2 = tr.distributed_transpose(g, axis_name, strategy="scatter", chunk_fn=tw_chunk)
+        else:
+            j2 = me * (c // p) + jnp.arange(c // p)
+            k1 = jnp.arange(r)
+            tw = jnp.exp(-2j * jnp.pi * (j2[:, None] * k1[None, :]) / n).astype(g.dtype)
+            t2 = tr.distributed_transpose(g * tw, axis_name, strategy=cfg.strategy)
+        f = lf.local_fft(t2, axis=-1, impl=cfg.local_impl)  # (..., R/p, C): F[k1, k2]
+        # X[k2*R + k1] = F[k1, k2]  =>  natural order is F^T flattened; one
+        # final exchange re-shards k2 and emits X contiguously.
+        t3 = tr.distributed_transpose(f, axis_name, strategy=cfg.strategy)
+        return t3.reshape(xl.shape[:-1] + (c // p * r,))
+
+    ndim = x.ndim
+    spec = P(*([None] * (ndim - 1) + [axis_name]))
+    return jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def reference_fft2(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Single-device oracle (numpy semantics) for tests/benchmarks."""
+    return jnp.fft.ifft2(x) if inverse else jnp.fft.fft2(x)

@@ -1,0 +1,336 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes/collectives by the
+layer count -- useless for a roofline. This module re-derives the three
+roofline inputs directly from the scheduled HLO:
+
+- **flops**: every ``dot`` op's 2*prod(result)*prod(contracting) from
+  the operand symbol table (elementwise/transcendental flops are noise
+  next to the matmuls at LM shapes).
+- **hbm bytes**: matmul-boundary traffic -- ``dot`` operands + results,
+  slice/gather/scatter results, dynamic-update-slice update payloads --
+  which is what a well-fused TPU executable actually moves per layer.
+  Inside loop bodies, elementwise/convert/broadcast/copy results are
+  assumed fused into their producers (counting them would inflate the
+  term ~10x with CPU-HLO's unfused soup); at the entry level they ARE
+  counted (that's where param/optimizer update traffic lives).
+- **collective bytes**: per-kind ring-factor accounting (comm_model.py)
+  of every collective op.
+
+All three roll up through the call graph: ``while`` bodies multiply by
+``known_trip_count`` (from backend_config), fusions/calls add once,
+conditional branches contribute their max. Validated against analytic
+6ND counts in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.comm_model import COLLECTIVE_KINDS, _DTYPE_BYTES
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPNAME = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r"known_trip_count[\"':\s{]+n[\"':\s]+(\d+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_OPS = frozenset(
+    "tuple get-tuple-element parameter constant bitcast copy-start copy-done "
+    "after-all add-dependency partition-id replica-id".split()
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes in a type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    kind: str
+    result_type: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]  # param name -> type string
+    ops: List[OpLine]
+
+
+def _parse_operand_names(raw: str) -> List[str]:
+    """Operand %names from the op's argument list."""
+    m = re.search(r"\w[\w\-]*\(", raw.split("=", 1)[1] if "=" in raw else raw)
+    if not m:
+        return []
+    start = raw.index(m.group(0)) + len(m.group(0)) - 1
+    depth = 0
+    end = start
+    for i in range(start, len(raw)):
+        if raw[i] == "(":
+            depth += 1
+        elif raw[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = raw[start + 1 : end]
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and ("%" in line.split("(")[0] or line.strip().startswith("ENTRY")):
+                name = m.group(1)
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\)|[^,)]+))", m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name, params, [])
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        om = _OPNAME.match(s)
+        if not om or "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1].lstrip()
+        # result type = text before the op name token
+        km = re.search(r"([\w\-]+)\(", rhs)
+        if km is None:
+            continue
+        result_type = rhs[: km.start()].strip()
+        kind = km.group(1)
+        cur.ops.append(
+            OpLine(
+                name=om.group(1),
+                kind=kind,
+                result_type=result_type,
+                operands=_parse_operand_names(s),
+                raw=s,
+            )
+        )
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + mult * v
+        for k, v in other.coll_bytes_by_kind.items():
+            self.coll_bytes_by_kind[k] = self.coll_bytes_by_kind.get(k, 0.0) + mult * v
+
+
+_MEMORY_OPS = frozenset(
+    "gather scatter dynamic-slice slice concatenate reduce sort".split()
+)
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, *, default_group: int = 1):
+        self.comps, self.entry = parse_hlo(text)
+        self.default_group = default_group
+        self._memo: Dict[Tuple[str, bool, bool], Cost] = {}
+
+    # -- symbol table ---------------------------------------------------------
+    def _type_of(self, comp: Computation, name: str) -> str:
+        for op in comp.ops:
+            if op.name == name:
+                return op.result_type
+        if name in comp.params:
+            return comp.params[name]
+        # e.g. %param.3 inside header with different dotting
+        base = name.split("/")[-1]
+        return comp.params.get(base, "")
+
+    # -- per-op costs ----------------------------------------------------------
+    def _dot_flops(self, comp: Computation, op: OpLine) -> float:
+        res_dims = _shape_dims(op.result_type)
+        cm = _CONTRACT.search(op.raw)
+        if not cm or not op.operands:
+            return 0.0
+        lhs_type = self._type_of(comp, op.operands[0])
+        lhs_dims = _shape_dims(lhs_type)
+        cdims = [int(x) for x in cm.group(1).split(",") if x]
+        k = 1
+        for c in cdims:
+            if c < len(lhs_dims):
+                k *= lhs_dims[c]
+        out = 1
+        for d in res_dims:
+            out *= d
+        return 2.0 * out * k
+
+    def _collective_bytes(self, op: OpLine) -> Tuple[str, float]:
+        kind = op.kind.replace("-start", "")
+        base = None
+        for c in COLLECTIVE_KINDS:
+            if kind == c:
+                base = c
+                break
+        if base is None:
+            return "", 0.0
+        size = _shape_bytes(op.result_type)
+        if base == "collective-permute":
+            # point-to-point: bytes = result size (source_target_pairs,
+            # no replica_groups attribute)
+            return base, float(size)
+        gm = _GROUPS_IOTA.search(op.raw)
+        if gm:
+            p = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_LIST.search(op.raw)
+            p = len(gm2.group(1).split(",")) if gm2 else self.default_group
+        if p <= 1:
+            return base, 0.0
+        if base == "all-reduce":
+            f = 2 * (p - 1) / p
+        elif base == "reduce-scatter":
+            f = p - 1  # result is 1/P of the operand
+        elif base == "collective-permute":
+            f = 1.0
+        else:
+            f = (p - 1) / p
+        return base, size * f
+
+    # -- roll-up ----------------------------------------------------------------
+    def cost_of(
+        self, comp_name: str, *, inside_fusion: bool = False, in_loop: bool = False
+    ) -> Cost:
+        key = (comp_name, inside_fusion, in_loop)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[key] = total  # break cycles
+        for op in comp.ops:
+            if op.kind in _SKIP_OPS:
+                continue
+            if op.kind == "while":
+                tm = _TRIP.search(op.raw)
+                trips = int(tm.group(1)) if tm else 1
+                body = _CALLS.search(op.raw)
+                if body:
+                    total.add(self.cost_of(body.group(1), in_loop=True), trips)
+                continue
+            if op.kind == "conditional":
+                bm = _BRANCHES.search(op.raw)
+                if bm:
+                    branches = re.findall(r"%?([\w\.\-]+)", bm.group(1))
+                    costs = [self.cost_of(b, in_loop=in_loop) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.hbm_bytes)
+                        total.add(best)
+                continue
+            if op.kind == "fusion":
+                fm = _CALLS.search(op.raw)
+                if fm:
+                    total.add(self.cost_of(fm.group(1), inside_fusion=True, in_loop=in_loop))
+                if not in_loop:
+                    total.hbm_bytes += _shape_bytes(op.result_type)  # e.g. optimizer writes
+                continue
+            if op.kind in ("call", "custom-call", "async-start"):
+                fm = _CALLS.search(op.raw)
+                if fm:
+                    total.add(
+                        self.cost_of(fm.group(1), inside_fusion=inside_fusion, in_loop=in_loop)
+                    )
+                if op.kind == "custom-call":
+                    total.hbm_bytes += _shape_bytes(op.result_type)
+                continue
+            ckind, cbytes = self._collective_bytes(op)
+            if ckind:
+                if op.kind.endswith("-done"):
+                    continue
+                total.coll_bytes += cbytes
+                total.coll_counts[ckind] = total.coll_counts.get(ckind, 0.0) + 1
+                total.coll_bytes_by_kind[ckind] = (
+                    total.coll_bytes_by_kind.get(ckind, 0.0) + cbytes
+                )
+                continue
+            if op.kind == "dot":
+                total.flops += self._dot_flops(comp, op)
+                total.hbm_bytes += _shape_bytes(op.result_type) + sum(
+                    _shape_bytes(self._type_of(comp, o)) for o in op.operands
+                )
+            elif op.kind == "fft":
+                # XLA FFT op: standard 5 N log2 N per transform (c2c)
+                import math as _m
+
+                dims = _shape_dims(op.result_type)
+                if dims:
+                    n = dims[-1]
+                    batch = 1
+                    for d in dims[:-1]:
+                        batch *= d
+                    total.flops += 5.0 * batch * n * max(_m.log2(max(n, 2)), 1.0)
+                total.hbm_bytes += _shape_bytes(op.result_type) * 2
+            elif op.kind == "dynamic-update-slice":
+                # writes only the update payload (operand 1)
+                if len(op.operands) > 1:
+                    total.hbm_bytes += _shape_bytes(self._type_of(comp, op.operands[1]))
+            elif op.kind in _MEMORY_OPS:
+                total.hbm_bytes += _shape_bytes(op.result_type)
+            elif not in_loop:
+                total.hbm_bytes += _shape_bytes(op.result_type)
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze_compiled(compiled, *, default_group: int = 1) -> Cost:
+    return HloAnalyzer(compiled.as_text(), default_group=default_group).entry_cost()

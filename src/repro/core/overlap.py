@@ -1,0 +1,165 @@
+"""Decomposed collectives with interleaved compute -- the paper's technique
+as a reusable layer.
+
+The paper's contribution generalizes past FFT: *replace one synchronized
+collective with a sequence of smaller direct sends so per-chunk compute
+can hide behind the remaining communication*. This module provides that
+pattern for the three collective shapes the rest of the framework needs:
+
+- ``ring_scatter_reduce``  : all-to-all whose received chunks are folded
+  into an accumulator (used by the fused scatter-FFT and MoE combine).
+- ``ring_all_gather``      : all-gather decomposed into P-1 ppermutes with
+  an optional per-chunk consumer (ring attention / collective matmul).
+- ``collective_matmul_ag`` : y = all_gather(x) @ w without materializing
+  the gather -- each arriving x-chunk is multiplied into the accumulator
+  while the next chunk is in flight (Wang et al.-style overlap; here it
+  is the direct LM-side analogue of the paper's scatter-FFT).
+- ``ring_reduce_scatter``  : psum_scatter decomposed into a ring with the
+  running partial folded at each hop.
+
+All functions must run inside ``shard_map`` over ``axis_name``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ring_scatter_reduce(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    *,
+    split_axis: int = -1,
+) -> jax.Array:
+    """All-to-all + reduce: chunk j of every rank's ``x`` is sent to rank j,
+    and each rank folds arriving chunks with ``sum(chunk_fn(chunk, src))``.
+
+    ``x`` local shape (..., P*c) along ``split_axis``; chunk_fn receives the
+    (..., c) chunk and the (traced) source rank, returning the partial to
+    accumulate. The own-chunk partial is computed first (step 0), then each
+    ppermute hop delivers the next partial's input while the previous
+    partial is being computed.
+    """
+    p = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    split_axis = split_axis % x.ndim
+    if x.shape[split_axis] % p:
+        raise ValueError(f"axis {split_axis} ({x.shape[split_axis]}) not divisible by {p}")
+    c = x.shape[split_axis] // p
+
+    def chunk(i: jax.Array) -> jax.Array:
+        return lax.dynamic_slice_in_dim(x, i * c, c, axis=split_axis)
+
+    if p == 1:
+        return chunk_fn(chunk(jnp.asarray(0)), jnp.asarray(0))
+
+    acc = chunk_fn(chunk(me), me)
+    for s in range(1, p):
+        perm = [(i, (i + s) % p) for i in range(p)]
+        recv = lax.ppermute(chunk((me + s) % p), axis_name, perm)
+        src = (me - s) % p
+        acc = acc + chunk_fn(recv, src)
+    return acc
+
+
+def ring_all_gather(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None,
+    *,
+    axis: int = 0,
+) -> jax.Array:
+    """All-gather decomposed into a P-1 step neighbour ring.
+
+    Without ``chunk_fn`` returns the gathered array (shards concatenated in
+    rank order along ``axis``). With ``chunk_fn(chunk, src)`` returns the
+    *sum* of per-chunk results instead, never materializing the gather.
+    """
+    p = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    axis = axis % x.ndim
+    if p == 1:
+        return chunk_fn(x, jnp.asarray(0)) if chunk_fn is not None else x
+
+    perm = [(i, (i + 1) % p) for i in range(p)]  # pass left-to-right
+    if chunk_fn is None:
+        out_shape = x.shape[:axis] + (p * x.shape[axis],) + x.shape[axis + 1 :]
+        out = jnp.zeros(out_shape, x.dtype)
+        buf = x
+        src = me
+        out = lax.dynamic_update_slice_in_dim(out, buf, src * x.shape[axis], axis=axis)
+        for _ in range(p - 1):
+            buf = lax.ppermute(buf, axis_name, perm)
+            src = (src - 1) % p
+            out = lax.dynamic_update_slice_in_dim(out, buf, src * x.shape[axis], axis=axis)
+        return out
+
+    buf = x
+    acc = chunk_fn(buf, me)
+    src = me
+    for _ in range(p - 1):
+        buf = lax.ppermute(buf, axis_name, perm)
+        src = (src - 1) % p
+        acc = acc + chunk_fn(buf, src)
+    return acc
+
+
+def collective_matmul_ag(
+    x: jax.Array,
+    w: jax.Array,
+    axis_name: str,
+    *,
+    contract_chunks_of: str = "w",
+) -> jax.Array:
+    """y = all_gather(x, axis=-1) @ w  without the materialized gather.
+
+    ``x`` local (..., k/P); ``w`` local (k, n) when chunks index rows of the
+    *full* weight (``contract_chunks_of='w'`` means each rank holds the full
+    w and consumes row-block src*k/P of it per arriving chunk), so
+    y = sum_src x_src @ w[src*kc:(src+1)*kc].  This is the LM-side
+    instantiation of the paper's scatter-FFT: a reduction whose terms are
+    computed as their operands arrive.
+    """
+    del contract_chunks_of
+    p = lax.axis_size(axis_name)
+    kc = x.shape[-1]
+
+    def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
+        w_slice = lax.dynamic_slice_in_dim(w, src * kc, kc, axis=0)
+        return jnp.einsum("...k,kn->...n", chunk, w_slice)
+
+    del p
+    return ring_all_gather(x, axis_name, chunk_fn, axis=-1)
+
+
+def ring_reduce_scatter(x: jax.Array, axis_name: str, *, axis: int = -1) -> jax.Array:
+    """psum_scatter decomposed into a P-1 step ring with the running partial
+    added at each hop (result shard s = sum over ranks of their chunk s).
+    """
+    p = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    axis = axis % x.ndim
+    if x.shape[axis] % p:
+        raise ValueError(f"axis {axis} ({x.shape[axis]}) not divisible by {p}")
+    c = x.shape[axis] // p
+    if p == 1:
+        return x
+
+    def chunk(i: jax.Array) -> jax.Array:
+        return lax.dynamic_slice_in_dim(x, i * c, c, axis=axis)
+
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    # The partial destined to rank c starts at rank c+1 and travels P-1
+    # forward hops, absorbing each visited rank's chunk c; so rank ``me``
+    # seeds chunk (me-1), and after hop t receives the partial for chunk
+    # (me-1-t), finishing with its own fully-reduced chunk ``me``.
+    acc = chunk((me - 1) % p)
+    for t in range(1, p):
+        acc = lax.ppermute(acc, axis_name, perm)
+        acc = acc + chunk((me - 1 - t) % p)
+    return acc

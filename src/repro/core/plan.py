@@ -1,0 +1,112 @@
+"""FFTW-style plan objects for the distributed FFT.
+
+The paper's FFTW3 reference works through plans; we mirror that UX: a
+plan captures (global shape, mesh, shard axis, strategy, local impl),
+pre-jits the transform, and exposes ``execute`` / ``inverse``. Plans are
+also where the benchmark harness hangs its per-strategy measurements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import distributed_fft as dfft
+from repro.core.distributed_fft import FFTConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    global_shape: Tuple[int, ...]  # (..., R, C) for 2-D, (..., D0, D1, D2) for 3-D
+    mesh: Mesh
+    axis_name: str
+    cfg: FFTConfig = FFTConfig()
+    ndim_transform: int = 2  # 1, 2 or 3
+
+    def __post_init__(self):
+        p = self.mesh.shape[self.axis_name]
+        if self.ndim_transform == 2:
+            r, c = self.global_shape[-2:]
+            if r % p or c % p:
+                raise ValueError(f"2-D shape {(r, c)} not divisible by shards {p}")
+        elif self.ndim_transform == 3:
+            d0, d1, d2 = self.global_shape[-3:]
+            if d0 % p or (d1 * d2) % p:
+                raise ValueError(f"3-D shape {(d0, d1, d2)} not shardable by {p}")
+        elif self.ndim_transform == 1:
+            n = self.global_shape[-1]
+            if n % (p * p):
+                raise ValueError(f"1-D size {n} must be divisible by P^2={p*p}")
+        else:
+            raise ValueError("ndim_transform must be 1, 2 or 3")
+
+    # -- sharding specs ------------------------------------------------------
+    def input_sharding(self) -> NamedSharding:
+        nd = len(self.global_shape)
+        k = {1: 1, 2: 2, 3: 3}[self.ndim_transform]
+        spec = [None] * nd
+        spec[nd - k] = self.axis_name  # shard the leading transform dim
+        return NamedSharding(self.mesh, P(*spec))
+
+    def input_spec(self, dtype=jnp.complex64) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.global_shape, dtype, sharding=self.input_sharding())
+
+    # -- execution -----------------------------------------------------------
+    def _fn(self, inverse: bool):
+        if self.ndim_transform == 2:
+            return lambda x: dfft.fft2(x, self.mesh, self.axis_name, self.cfg, inverse=inverse)
+        if self.ndim_transform == 3:
+            return lambda x: dfft.fft3(x, self.mesh, self.axis_name, self.cfg, inverse=inverse)
+        if inverse:
+            raise NotImplementedError("1-D large inverse: conjugate externally")
+        return lambda x: dfft.fft1d_large(x, self.mesh, self.axis_name, self.cfg)
+
+    def execute(self, x: jax.Array) -> jax.Array:
+        return self._fn(False)(x)
+
+    def inverse(self, x: jax.Array) -> jax.Array:
+        return self._fn(True)(x)
+
+    def lower(self, inverse: bool = False):
+        """Abstract lowering for dry-run / roofline (no allocation)."""
+        return jax.jit(self._fn(inverse)).lower(self.input_spec())
+
+    # -- napkin model ---------------------------------------------------------
+    def comm_bytes(self) -> float:
+        """Bytes each device ships per pencil exchange ((1-1/P) of local)."""
+        import numpy as np
+
+        p = self.mesh.shape[self.axis_name]
+        local = np.prod(self.global_shape) * 8 / p  # c64
+        return float(local * (1 - 1 / p))
+
+
+def make_plan(
+    global_shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    axis_name: Optional[str] = None,
+    strategy: str = "alltoall",
+    local_impl: str = "jnp",
+    fuse_dft: bool = False,
+    transpose_back: bool = False,
+    ndim_transform: int = 2,
+) -> FFTPlan:
+    from repro.core.sharding import fft_axis
+
+    return FFTPlan(
+        global_shape=tuple(global_shape),
+        mesh=mesh,
+        axis_name=axis_name or fft_axis(mesh),
+        cfg=FFTConfig(
+            strategy=strategy,
+            local_impl=local_impl,  # type: ignore[arg-type]
+            fuse_dft=fuse_dft,
+            transpose_back=transpose_back,
+        ),
+        ndim_transform=ndim_transform,
+    )

@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style) + mesh helpers.
+
+Model code annotates arrays with *logical* axis names; the rules below
+map them onto whatever mesh axes exist. Missing mesh axes resolve to
+replication, so the same model code runs on the 1-device test mesh, the
+single-pod (16,16) mesh and the multi-pod (2,16,16) mesh unchanged.
+
+Scheme (see DESIGN.md §5): DP over ('pod','data') for activations; FSDP
+(weight d_model/embed dim) over ('pod','data'); TP (heads / d_ff / vocab
+/ experts) over 'model'. GSPMD pads non-divisible dims (e.g. qwen2.5's
+40 heads on 16-way TP), keeping every assigned arch runnable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None]
+
+# logical name -> tuple of preferred mesh axes (first existing ones kept)
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),  # weight sharding along d_model/embed dim
+    "tp": ("model",),  # heads / d_ff / experts / vocab
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("model",),  # fallback when expert count < TP width
+    "mlp": ("model",),
+    "seq": (),  # sequence kept unsharded by default
+    "seq_shard": ("data",),  # explicit sequence parallelism (long-context)
+    "seq_act": ("model",),  # Megatron-style SP: saved residual stream seq dim
+    "embed": (),  # activation d_model dim: replicated
+    "fft_rows": ("model",),  # FFT pencil decomposition
+}
+
+
+def resolve(mesh: Mesh, *logical: Axis, shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec valid for ``mesh``.
+
+    With ``shape`` given, the resolution is *shape-aware*: a mesh axis is
+    only claimed by a dim it evenly divides, and unclaimed axes remain
+    available for later dims. Input shardings (unlike internal
+    constraints) must divide exactly, and this rule is also what routes
+    the TP axis to d_ff when an arch's expert/head count doesn't divide
+    it (mixtral's 8 experts, qwen's 40 heads -> flattened head dims).
+    """
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = [a for a in DEFAULT_RULES.get(name, ()) if a in mesh.shape and a not in used]
+        if shape is not None:
+            # greedily keep the longest prefix whose product divides the dim
+            dim = shape[i]
+            kept = []
+            prod = 1
+            for a in axes:
+                if dim % (prod * mesh.shape[a]) == 0:
+                    kept.append(a)
+                    prod *= mesh.shape[a]
+            axes = kept
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape: Sequence[int]) -> P:
+    """Drop mesh axes from a PartitionSpec that don't divide the dim
+    (required for input shardings; constraints tolerate padding)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            if a not in mesh.shape:
+                continue
+            if shape[i] % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def named(mesh: Mesh, *logical: Axis) -> NamedSharding:
+    return NamedSharding(mesh, resolve(mesh, *logical))
+
+
+def constrain(x: jax.Array, mesh: Mesh, *logical: Axis) -> jax.Array:
+    """with_sharding_constraint via logical names (no-op on 1-device)."""
+    if mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, named(mesh, *logical))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, shape_tree=None):
+    """Map a pytree of logical-name tuples to NamedShardings. With
+    ``shape_tree`` (matching abstract arrays), resolution is shape-aware
+    (input-sharding safe)."""
+    is_names = lambda t: isinstance(t, tuple) and all(isinstance(x, (str, type(None))) for x in t)
+    if shape_tree is None:
+        return jax.tree.map(lambda names: named(mesh, *names), logical_tree, is_leaf=is_names)
+    return jax.tree.map(
+        lambda names, a: NamedSharding(mesh, resolve(mesh, *names, shape=a.shape)),
+        logical_tree,
+        shape_tree,
+        is_leaf=is_names,
+    )
+
+
+def batch_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Standard data-batch sharding: leading axis over ('pod','data')."""
+    return named(mesh, *(["batch"] + [None] * (ndim - 1)))
+
+
+def make_test_mesh(shape: Sequence[int] = (1, 1), axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """Small mesh over however many real devices exist (tests/benches)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, tuple(axes))
+
+
+def fft_axis(mesh: Mesh) -> str:
+    """Mesh axis the FFT pencil decomposition shards over."""
+    for a in DEFAULT_RULES["fft_rows"]:
+        if a in mesh.shape:
+            return a
+    return list(mesh.shape)[-1]

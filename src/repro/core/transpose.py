@@ -1,0 +1,212 @@
+"""Distributed transpose strategies -- the paper's experimental axis.
+
+The FFT pencil exchange moves chunk *i* of every node's local block to
+node *i* (each node keeps 1/P and ships (1-1/P) of its data). The paper
+realizes this with either one synchronized ``all-to-all`` or with N
+``scatter`` collectives that let arriving chunks be transposed while the
+rest of the communication is still in flight.
+
+TPU adaptation (see DESIGN.md #2): the switchable "parcelport" becomes a
+switchable *collective lowering strategy* over the fixed ICI fabric:
+
+``alltoall``
+    One fused ``jax.lax.all_to_all`` -- the paper's synchronized baseline.
+``scatter``
+    P-1 direct ``ppermute`` sends (a ring walk over distances 1..P-1).
+    The per-chunk callback runs as soon as chunk *k* lands, so XLA's
+    async collective-permute overlaps step k+1's communication with
+    chunk k's compute -- the paper's N-scatter overlap, as dataflow.
+``bisection``
+    Bruck / hypercube exchange: ceil(log2 P) rounds of half-the-buffer
+    messages. Fewer, larger messages -- wins when per-message latency
+    (the paper's TCP-overhead regime, Fig. 3) dominates. Beyond-paper.
+
+All strategies are SPMD-uniform (masks/permutations do not branch on the
+device id except through ``lax.axis_index`` arithmetic) and are validated
+against each other and a numpy routing simulation in tests.
+
+Inside ``shard_map`` the local block is ``(..., r, C)`` where the global
+rows ``R = P*r`` are sharded over ``axis_name``; the transposed result is
+``(..., c, R)`` with the global columns ``C = P*c`` now sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Strategy = Literal["alltoall", "scatter", "bisection"]
+
+#: chunk_fn(chunk, src_index) -> processed chunk. ``chunk`` is the
+#: (..., r, c) block received from shard ``src_index``, already transposed
+#: to (..., c, r) when ``pre_transposed`` -- see _scatter below.
+ChunkFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def _axis_size(axis_name: str) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _split_chunks(x: jax.Array, p: int) -> jax.Array:
+    """(..., r, C) -> (p, ..., r, c): chunk j holds columns [j*c, (j+1)*c)."""
+    *lead, r, C = x.shape
+    c = C // p
+    x = x.reshape(*lead, r, p, c)
+    return jnp.moveaxis(x, -2, 0)
+
+
+def _merge_rows(chunks: jax.Array) -> jax.Array:
+    """(p, ..., r, c) -> (..., p*r, c): stack chunk j as rows [j*r, (j+1)*r)."""
+    p = chunks.shape[0]
+    chunks = jnp.moveaxis(chunks, 0, -3)  # (..., p, r, c)
+    *lead, _, r, c = chunks.shape
+    return chunks.reshape(*lead, p * r, c)
+
+
+def _transpose_local(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# Strategy: fused all-to-all (the paper's synchronized collective)
+# ---------------------------------------------------------------------------
+
+
+def _alltoall(x: jax.Array, axis_name: str) -> jax.Array:
+    # (..., r, C) --split cols/concat rows--> (..., R, c) --local T--> (..., c, R)
+    y = lax.all_to_all(x, axis_name, split_axis=x.ndim - 1, concat_axis=x.ndim - 2, tiled=True)
+    return _transpose_local(y)
+
+
+# ---------------------------------------------------------------------------
+# Strategy: N-scatter ring (the paper's proposed decomposition)
+# ---------------------------------------------------------------------------
+
+
+def _scatter(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: Optional[ChunkFn] = None,
+) -> jax.Array:
+    """P-1 direct sends; each received chunk is transposed (and optionally
+    further processed by ``chunk_fn``) immediately -- 'the arriving data
+    chunks can be transposed as soon as they are received' (paper, §3).
+
+    Dataflow note: every send uses a *pre-existing* chunk of the input, so
+    no ppermute depends on any chunk_fn result. XLA is free to issue the
+    next ring step while the previous chunk's transpose/compute runs;
+    on TPU the sends lower to async collective-permute-start/done pairs.
+    """
+    p = _axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    chunks = _split_chunks(x, p)  # (p, ..., r, c)
+    r, c = x.shape[-2], x.shape[-1] // p
+
+    def process(chunk: jax.Array, src: jax.Array) -> jax.Array:
+        out = _transpose_local(chunk)  # (..., c, r)
+        if chunk_fn is not None:
+            out = chunk_fn(out, src)
+        return out
+
+    # Own chunk (distance 0) -- compute immediately, no communication.
+    own = jnp.take(chunks, me, axis=0)
+    parts = [(me, process(own, me))]
+    for s in range(1, p):
+        perm = [(i, (i + s) % p) for i in range(p)]
+        send = jnp.take(chunks, (me + s) % p, axis=0)  # destined to me+s
+        recv = lax.ppermute(send, axis_name, perm)  # from me-s
+        src = (me - s) % p
+        parts.append((src, process(recv, src)))
+
+    # Assemble (..., c, R): chunk from src j supplies columns [j*r, (j+1)*r).
+    out_shape = x.shape[:-2] + (c, p * r)
+    out = jnp.zeros(out_shape, x.dtype)
+    for src, part in parts:
+        out = lax.dynamic_update_slice_in_dim(out, part, src * r, axis=out.ndim - 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Strategy: Bruck / bisection exchange (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def _bisection(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bruck all-to-all: ceil(log2 P) rounds, each shipping the slots whose
+    round-bit is set. Message count log P (vs P-1), bytes P/2 slots per
+    round (vs 1 slot per step) -- the latency/bandwidth trade the paper
+    probes with its chunk-size benchmark.
+
+    Slot invariant: after the initial rotation, slot j at rank i holds the
+    chunk destined to (i + j) mod P; slot j travels a total distance j by
+    moving +2^t on each set bit t; the final flip+rotation orders the
+    received chunks by source rank.
+    """
+    p = _axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    chunks = _split_chunks(x, p)  # (p, ..., r, c), slot d = chunk destined to d
+    r = x.shape[-2]
+
+    # Phase 1: rotate so slot j holds destination (me + j) mod p.
+    buf = jnp.roll(chunks, -me, axis=0)
+
+    # Phase 2: log rounds of exchange with rank (me + 2^t). The travelling
+    # slot set {j : bit t of j set} is static and identical on every rank,
+    # so we ship exactly those slots (half the buffer), not a masked copy.
+    t = 0
+    while (1 << t) < p:
+        step = 1 << t
+        idx = tuple(j for j in range(p) if (j >> t) & 1)
+        perm = [(i, (i + step) % p) for i in range(p)]
+        recv = lax.ppermute(buf[idx, ...], axis_name, perm)
+        buf = buf.at[idx, ...].set(recv)
+        t += 1
+
+    # Phase 3: slot j now holds the chunk from source (me - j) mod p.
+    by_src = jnp.flip(jnp.roll(buf, -(me + 1), axis=0), axis=0)  # slot s = from rank s
+    stacked = _merge_rows(by_src)  # (..., R, c)
+    return _transpose_local(stacked)  # (..., c, R)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+def distributed_transpose(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    strategy: Strategy = "alltoall",
+    chunk_fn: Optional[ChunkFn] = None,
+) -> jax.Array:
+    """Transpose a (..., R, C) array whose R axis is sharded over
+    ``axis_name`` into a (..., C, R) array with C sharded. Must be called
+    inside ``shard_map``; local in (..., r, C), local out (..., c, R).
+
+    ``chunk_fn`` is only honoured by the ``scatter`` strategy (the others
+    are monolithic collectives with nothing to interleave -- exactly the
+    paper's point).
+    """
+    p = _axis_size(axis_name)
+    if x.shape[-1] % p:
+        raise ValueError(f"column count {x.shape[-1]} not divisible by shards {p}")
+    if p == 1:
+        y = _transpose_local(x)
+        if chunk_fn is not None:
+            y = chunk_fn(y, jnp.asarray(0))
+        return y
+    if strategy == "alltoall":
+        if chunk_fn is not None:
+            raise ValueError("chunk_fn requires the 'scatter' strategy")
+        return _alltoall(x, axis_name)
+    if strategy == "scatter":
+        return _scatter(x, axis_name, chunk_fn)
+    if strategy == "bisection":
+        if chunk_fn is not None:
+            raise ValueError("chunk_fn requires the 'scatter' strategy")
+        return _bisection(x, axis_name)
+    raise ValueError(f"unknown transpose strategy: {strategy!r}")

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM, make_batch_arrays
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLM", "make_batch_arrays"]

@@ -1,0 +1,113 @@
+"""Synthetic LM data pipeline: deterministic, host-sharded, resumable.
+
+Design constraints of a 1000-node deployment baked in:
+
+- *stateless index -> batch map*: batch(step) is a pure function of
+  (seed, step, host), so resume-after-failure needs only the step number
+  (no iterator state in checkpoints) and any host can recompute any
+  shard (elastic re-scale just changes the host slice).
+- *host sharding*: each process materializes only its rows of the global
+  batch; `jax.make_array_from_process_local_data` would assemble the
+  global array on multi-host (single-process here: direct device_put).
+- *prefetch*: a daemon thread keeps a bounded queue of ready batches so
+  host-side generation overlaps device compute (straggler slack).
+
+The token stream is learnable-but-nontrivial: each sequence is an affine
+progression (random start/stride per sequence) XOR low-entropy noise, so
+cross-entropy falls quickly from ln(V) -- used by the e2e training tests
+to assert optimization actually works.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.05
+
+
+class SyntheticLM:
+    """Deterministic synthetic next-token data."""
+
+    def __init__(self, cfg: DataConfig, *, process_index: int = 0, process_count: int = 1):
+        self.cfg = cfg
+        self.process_index = process_index
+        self.process_count = process_count
+        if cfg.global_batch % process_count:
+            raise ValueError("global_batch must divide across processes")
+        self.local_batch = cfg.global_batch // process_count
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Pure function of (seed, step, host): the resumability contract."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, step, self.process_index])
+        )
+        b, s = self.local_batch, c.seq_len
+        start = rng.integers(0, c.vocab_size, (b, 1))
+        stride = rng.integers(1, 17, (b, 1))
+        seq = (start + stride * np.arange(s + 1)) % c.vocab_size
+        flips = rng.random((b, s + 1)) < c.noise
+        noise_tok = rng.integers(0, c.vocab_size, (b, s + 1))
+        seq = np.where(flips, noise_tok, seq).astype(np.int32)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Bounded background prefetch of (step, batch) pairs."""
+
+    def __init__(self, ds: SyntheticLM, start_step: int = 0, depth: int = 2, sharding=None):
+        self.ds = ds
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.sharding = sharding
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.ds.batch_at(step)
+            try:
+                self.q.put((step, batch), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        step, batch = self.q.get()
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+        return step, batch
+
+    def stop(self):
+        self._stop.set()
+
+
+def make_batch_arrays(batch: Dict[str, np.ndarray], mesh=None):
+    """Device-put a host batch with the standard batch sharding."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from repro.core.sharding import batch_sharding
+
+    return {k: jax.device_put(v, batch_sharding(mesh, v.ndim)) for k, v in batch.items()}

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the FFT compute hot-spot (DESIGN.md §2).
+
+fft_stage.py: fused complex DFT-matmul + twiddle (pl.pallas_call +
+BlockSpec); ops.py: jit'd wrappers; ref.py: pure-jnp oracles.
+"""

@@ -1,0 +1,116 @@
+"""jit'd public wrappers around the Pallas FFT kernels.
+
+``fft_last_axis(x)`` runs the four-step local FFT with both matmul stages
+executed by the fused Pallas kernel (fft_stage.py):
+
+    A = x.reshape(-1, n1, n2)
+    B = stage_left(W_n1, A, T_n1n2)      # column DFT + twiddle, fused
+    D = stage_right(B, W_n2)             # row DFT
+    out[k1 + n1*k2] = D[k1, k2]
+
+On non-TPU backends the kernels run in interpret mode (set explicitly or
+auto-detected), which executes the kernel body op-by-op -- bitwise the
+same math, so tests/benches on CPU validate exactly what the TPU runs.
+
+Factor choice: n1 * n2 = n with both MXU-aligned where possible; the
+wrapper falls back to the pure-jnp matmul FFT for shapes the kernel
+cannot tile (non-128-multiples on TPU, primes, n < 256).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.fftmath as lf
+from repro.kernels import fft_stage
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _split_planar(x: jax.Array):
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def _kernel_factors(n: int) -> Optional[tuple[int, int]]:
+    """Pick (n1, n2), both multiples of the MXU lane width when possible."""
+    n1 = lf.split_factor(n, lf.MAX_DFT)
+    if n1 in (0, n):
+        return None
+    n2 = n // n1
+    if n2 > lf.MAX_DFT:
+        return None
+    return n1, n2
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret", "bm", "bn"))
+def _fft_last_axis(x, *, inverse: bool, interpret: bool, bm: int, bn: int):
+    n = x.shape[-1]
+    factors = _kernel_factors(n)
+    if factors is None:  # pragma: no cover - guarded by caller
+        return lf.fft_matmul(x, inverse=inverse)
+    n1, n2 = factors
+
+    v = jnp.conj(x) if inverse else x
+    lead = v.shape[:-1]
+    a = v.reshape((-1, n1, n2))
+    w1 = jnp.asarray(lf._dft_matrix_np(n1))
+    tw = jnp.asarray(lf._twiddle_np(n1, n2))
+    w2 = jnp.asarray(lf._dft_matrix_np(n2))
+
+    b_re, b_im = fft_stage.stage_left(
+        _split_planar(w1), _split_planar(a), _split_planar(tw),
+        bm=min(bm, n1), bn=min(bn, n2), interpret=interpret,
+    )
+    d_re, d_im = fft_stage.stage_right(
+        (b_re, b_im), _split_planar(w2),
+        bm=min(bm, n1), bn=min(bn, n2), interpret=interpret,
+    )
+    d = d_re + 1j * d_im  # (B, k1, k2); flat index k1 + n1*k2
+    out = jnp.swapaxes(d, -1, -2).reshape(lead + (n,)).astype(jnp.complex64)
+    if inverse:
+        out = jnp.conj(out) / n
+    return out
+
+
+def fft_last_axis(
+    x: jax.Array,
+    *,
+    inverse: bool = False,
+    interpret: Optional[bool] = None,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """FFT along the last axis via the Pallas fused-stage kernels."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    if interpret is None:
+        interpret = _default_interpret()
+    n = x.shape[-1]
+    factors = _kernel_factors(n)
+    if factors is None:
+        return lf.fft_matmul(x, inverse=inverse)
+    n1, n2 = factors
+    if not interpret and (n1 % 128 or n2 % 128):
+        # TPU tiling wants 128-lane alignment; fall back rather than pad.
+        return lf.fft_matmul(x, inverse=inverse)
+    return _fft_last_axis(x, inverse=inverse, interpret=interpret, bm=bm, bn=bn)
+
+
+def stage_left(w, a, t, **kw):
+    """Fused complex (W@A)*T -- thin public re-export (planar operands)."""
+    kw.setdefault("interpret", _default_interpret())
+    return fft_stage.stage_left(w, a, t, **kw)
+
+
+def stage_right(a, w, **kw):
+    """Complex A @ W^T -- thin public re-export (planar operands)."""
+    kw.setdefault("interpret", _default_interpret())
+    return fft_stage.stage_right(a, w, **kw)

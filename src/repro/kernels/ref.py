@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _to_c(re: jax.Array, im: jax.Array) -> jax.Array:
+    return re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+
+
+def stage_left_ref(
+    w: Tuple[jax.Array, jax.Array],
+    a: Tuple[jax.Array, jax.Array],
+    t: Tuple[jax.Array, jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    """(W @ A) * T, complex planar: w (M,K), a (B,K,N), t (M,N)."""
+    wc, ac, tc = _to_c(*w), _to_c(*a), _to_c(*t)
+    out = jnp.einsum("mk,bkn->bmn", wc, ac) * tc
+    return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)
+
+
+def stage_right_ref(
+    a: Tuple[jax.Array, jax.Array],
+    w: Tuple[jax.Array, jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    """A @ W^T, complex planar: a (B,M,K), w (N,K)."""
+    ac, wc = _to_c(*a), _to_c(*w)
+    out = jnp.einsum("bmk,nk->bmn", ac, wc)
+    return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)
+
+
+def fft_last_axis_ref(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Oracle for ops.fft_last_axis: XLA's own FFT."""
+    x = x.astype(jnp.complex64)
+    return jnp.fft.ifft(x) if inverse else jnp.fft.fft(x)

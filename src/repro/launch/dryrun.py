@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces the proof artifacts required by DESIGN.md:
+  - ``compiled.memory_analysis()``  -> bytes/device (fits-HBM check)
+  - ``compiled.cost_analysis()``    -> per-device HLO FLOPs / bytes
+  - collective bytes parsed from ``compiled.as_text()``
+  - the three roofline terms (core/comm_model.py, v5e constants)
+
+The 512 placeholder host devices exist ONLY here (the env var above must
+run before any jax import -- this module must be the process entry).
+Results are written as JSON under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-v3-671b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 1]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import comm_model, hlo_analysis
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.train import step as train_step_lib
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+#: long_500k runs only for sub-quadratic archs (DESIGN.md §Arch-applicability)
+LONG_OK = ("xlstm-1.3b", "hymba-1.5b")
+
+
+def cells(arch_filter=None, shape_filter=None):
+    from repro.configs import _MODULES
+
+    for arch in _MODULES:
+        if arch_filter and arch != arch_filter:
+            continue
+        for sname in SHAPES:
+            if shape_filter and sname != shape_filter:
+                continue
+            if sname == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, sname
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "code_bytes": float(ma.generated_code_size_in_bytes),
+        # donated state aliases its output (decode caches, train state):
+        # count the aliased bytes once.
+        "peak_device_bytes": float(
+            ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes
+        ),
+    }
+
+
+def lower_cell(arch: str, sname: str, mesh, *, reduced: bool = False):
+    """Build the right step program for the cell and lower it abstractly."""
+    cfg = get_config(arch, reduced=reduced)
+    shape = SHAPES[sname]
+    model = Model(cfg, mesh=mesh, attn_impl="chunked")
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatch=4, opt_state_dtype="bfloat16")  # production defaults
+        state_abs = jax.eval_shape(
+            lambda k: train_step_lib.init_train_state(model, k, tcfg)[0], jax.random.PRNGKey(0)
+        )
+        param_specs = _static_specs(model)
+        st_sh = train_step_lib.state_shardings(mesh, param_specs, state_abs)
+        state_in = specs_lib.with_shardings(state_abs, st_sh)
+        batch_in = specs_lib.batch_input_specs(cfg, shape, mesh)
+        step = train_step_lib.make_train_step(model, tcfg, mesh)
+        return jax.jit(step, donate_argnums=(0,)).lower(state_in, batch_in)
+
+    params_abs = _abstract_params(model)
+    if shape.kind == "prefill":
+        state_abs = specs_lib.abstract_decode_state(model, b, s)
+        st_sh = specs_lib.decode_state_shardings(
+            state_abs, mesh, replicate_batch=(b == 1), seq_shard=(sname == "long_500k")
+        )
+        state_in = specs_lib.with_shardings(state_abs, st_sh)
+        batch_in = specs_lib.batch_input_specs(cfg, shape, mesh)
+
+        def prefill_step(params, batch, state):
+            return model.prefill(params, batch, state)
+
+        return jax.jit(prefill_step, donate_argnums=(2,)).lower(params_abs, batch_in, state_in)
+
+    # decode: one new token against a seq_len cache
+    state_abs = specs_lib.abstract_decode_state(model, b, s)
+    st_sh = specs_lib.decode_state_shardings(
+        state_abs, mesh, replicate_batch=(b == 1), seq_shard=(sname == "long_500k")
+    )
+    state_in = specs_lib.with_shardings(state_abs, st_sh)
+    ba = None if b == 1 else tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tok_in = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=NamedSharding(mesh, P(ba, None)))
+
+    def serve_step(params, tokens, state):
+        return model.decode_step(params, tokens, state)
+
+    return jax.jit(serve_step, donate_argnums=(2,)).lower(params_abs, tok_in, state_in)
+
+
+def _static_specs(model: Model):
+    """Param logical specs without touching device state: the specs tree
+    is plain Python built during tracing, so capture it under eval_shape."""
+    out = {}
+
+    def capture(key):
+        p, s = model.init(key)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return out["specs"]
+
+
+def _abstract_params(model: Model):
+    params_abs = jax.eval_shape(lambda k: model.init(k)[0], jax.random.PRNGKey(0))
+    specs = _static_specs(model)
+    sh = _specs_to_shardings(specs, model.mesh, params_abs)
+    return specs_lib.with_shardings(params_abs, sh)
+
+
+def _specs_to_shardings(specs, mesh, abstract_tree):
+    from repro.core import sharding as shlib
+
+    return shlib.tree_shardings(mesh, specs, abstract_tree)
+
+
+def run_cell(arch: str, sname: str, mesh_kind: str, *, reduced=False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    lowered = lower_cell(arch, sname, mesh, reduced=reduced)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    print(compiled.memory_analysis())  # proves it fits (bytes/device)
+    ca = compiled.cost_analysis()
+    ca = ca if isinstance(ca, dict) else ca[0]
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+    # loop-aware analysis: scan bodies x trip count (cost_analysis counts
+    # a while body ONCE -- useless for scanned-layer programs)
+    cost = hlo_analysis.analyze_compiled(compiled)
+    roof = comm_model.Roofline(
+        flops=cost.flops, hbm_bytes=cost.hbm_bytes, coll_bytes=cost.coll_bytes, chips=chips
+    )
+    cfg = get_config(arch, reduced=reduced)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    shape = SHAPES[sname]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    # 6ND for train (fwd 2ND + bwd 4ND); forward-only passes are 2ND.
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    result = {
+        "arch": arch,
+        "shape": sname,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "memory": _mem_dict(ma),
+        "roofline": roof.as_dict(),
+        "collectives": {"counts": cost.coll_counts, "bytes": cost.coll_bytes_by_kind},
+        "xla_cost_analysis": {"flops_once": float(ca.get("flops", 0.0)),
+                              "bytes_once": float(ca.get("bytes accessed", 0.0))},
+        "params": n_params,
+        "active_params": n_active,
+        "tokens_per_step": tokens,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / chips,
+        "useful_flops_frac": (model_flops / chips) / max(roof.flops, 1.0),
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true", help="reduced configs (CI sanity)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    out_dir = args.out or os.path.abspath(RESULT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = list(cells(args.arch, args.shape)) if (args.all or not args.arch or not args.shape) else [
+        (args.arch, args.shape)
+    ]
+    failures = 0
+    for arch, sname in todo:
+        for mk in meshes:
+            tag = f"{arch}_{sname}_{mk}" + ("_reduced" if args.reduced else "")
+            path = os.path.join(out_dir, tag + ".json")
+            try:
+                res = run_cell(arch, sname, mk, reduced=args.reduced)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                r = res["roofline"]
+                print(
+                    f"[OK] {tag}: compile={res['compile_s']:.1f}s "
+                    f"mem/dev={res['memory']['peak_device_bytes']/2**30:.2f}GiB "
+                    f"bottleneck={r['bottleneck']} "
+                    f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},{r['t_collective_s']:.2e})s"
+                )
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+                with open(os.path.join(out_dir, tag + ".FAILED"), "w") as f:
+                    f.write(traceback.format_exc())
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders (functions, never module-level constants --
+importing this module must not touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment meshes: 16x16 = 256 chips per pod (v5e),
+    2 pods = 512 chips with a leading 'pod' axis for cross-pod DP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever this host has (tests, benches, CPU runs)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    )

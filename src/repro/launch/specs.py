@@ -1,0 +1,132 @@
+"""Abstract input/state specs for the dry-run: ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for every model input.
+
+Three lowered programs, per the shape kind:
+  train_*    -> train_step(TrainState, batch)
+  prefill_*  -> prefill(params, batch, decode_state)  [cache filled 0:S]
+  decode_*   -> serve_step(params, tokens(B,1), decode_state[S])  -- one
+                new token against a seq_len cache.
+
+Sharding rules: batch over ('pod','data'); KV/latent caches additionally
+over 'model' (heads) -- except long_500k (batch=1), where the batch is
+replicated and the *sequence* axis of the caches shards over 'data'
+(distributed-cache decode; see EXPERIMENTS.md §Perf for the explicit
+flash-decode combine that optimizes it)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+
+
+def _batch_axes(mesh: Mesh, *, replicate_batch: bool = False):
+    if replicate_batch:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if axes else None
+
+
+def batch_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    """Abstract train/prefill inputs for one architecture x shape."""
+    from repro.core.sharding import sanitize_spec
+
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh, replicate_batch=(b == 1))
+    tok_sh = NamedSharding(mesh, sanitize_spec(mesh, P(ba, None), (b, s)))
+    emb_sh = NamedSharding(mesh, sanitize_spec(mesh, P(ba, None, None), (b, s, 1)))
+    out: Dict[str, Any] = {}
+    if cfg.is_encdec:
+        out["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16, sharding=emb_sh)
+        dec_len = max(s // cfg.decoder_ratio, 1)
+        out["tokens"] = jax.ShapeDtypeStruct((b, dec_len), jnp.int32, sharding=tok_sh)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, dec_len), jnp.int32, sharding=tok_sh)
+        return out
+    if cfg.input_kind == "embeddings":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16, sharding=emb_sh)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh)
+        if cfg.mtp_depth > 0 and "tokens" not in out:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=tok_sh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode-state shardings (name-based rules over the state pytree)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(path: str, ndim: int, *, ba, seq_shard: bool, shape=(), tp: int = 1) -> P:
+    """Sharding for one stacked decode-state leaf (leading axis = layer)."""
+    seq_ax = "data" if seq_shard else None
+    if path.endswith("length") and ndim == 2:  # (L, B)
+        return P(None, ba)
+    if path.endswith("pos"):
+        return P()
+    if path.endswith((".k", ".v")) and ndim == 5:  # (L,B,S,KVH,D)
+        # kv_heads < TP width (GQA): shard head_dim instead -- a replicated
+        # 32k cache is 10s of GiB/device otherwise
+        if shape and shape[3] % tp and shape[4] % tp == 0:
+            return P(None, ba, seq_ax, None, "model")
+        return P(None, ba, seq_ax, "model", None)
+    if path.endswith("ckv") and ndim == 4:  # (L,B,S,r)
+        return P(None, ba, seq_ax, None)
+    if path.endswith("k_rope") and ndim == 4:
+        return P(None, ba, seq_ax, None)
+    if ".cross" in path and ndim == 5:  # (L,B,S_enc,H,D)
+        return P(None, ba, None, "model", None)
+    if path.endswith(".h") and ndim == 4:  # mamba state (L,B,di,N)
+        return P(None, ba, "model", None)
+    if path.endswith(".conv") and ndim == 4:  # (L,B,W,di)
+        return P(None, ba, None, "model")
+    if path.endswith(".c") and ndim == 5:  # mlstm C (L,B,H,dk,dv)
+        return P(None, ba, "model", None, None)
+    if path.endswith(".n") and ndim == 4:
+        return P(None, ba, "model", None)
+    if path.endswith(".m") and ndim == 3:
+        return P(None, ba, "model")
+    if ndim >= 3:  # slstm h/c/n/m (L,B,d) and anything else batched
+        return P(None, ba, *([None] * (ndim - 2)))
+    return P(*([None] * ndim))
+
+
+def decode_state_shardings(state, mesh: Mesh, *, replicate_batch: bool, seq_shard: bool):
+    from repro.core.sharding import sanitize_spec
+
+    ba = _batch_axes(mesh, replicate_batch=replicate_batch)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in path)
+        # normalize: NamedTuple fields appear as .name attrs in path str
+        dotted = name.replace("/", ".")
+        spec = _leaf_spec(
+            "." + dotted, np.ndim(leaf), ba=ba, seq_shard=seq_shard,
+            shape=np.shape(leaf), tp=mesh.shape.get("model", 1),
+        )
+        spec = sanitize_spec(mesh, spec, np.shape(leaf))  # input shardings must divide
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_decode_state(model: Model, b: int, s_max: int):
+    return jax.eval_shape(lambda: model.init_decode_state(b, s_max))
+
+
+def with_shardings(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, sh: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh),
+        abstract_tree,
+        sharding_tree,
+    )

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as composable blocks."""
+
+from repro.models.model import Model, build_groups
+
+__all__ = ["Model", "build_groups"]

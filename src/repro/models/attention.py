@@ -1,0 +1,668 @@
+"""Attention: GQA/MHA with chunked (flash-style) softmax, sliding-window
++ global patterns, logit softcap, MLA (DeepSeek latent attention), and
+cache-based decode including the distributed flash-decode combine.
+
+Memory discipline: the chunked impl never materializes (Sq, Skv) scores
+-- it scans KV blocks carrying the online-softmax (m, l, acc) state, so
+prefill_32k compiles at full scale (the naive impl is kept as the tiny-
+shape oracle). This is the pure-JAX formulation of the flash kernel; on
+TPU the same blocking is what a Pallas port would use, and the chunk
+sizes are MXU/VMEM aligned.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import common
+from repro.models.common import Params, Specs
+
+NEG_INF = -1e30
+
+
+def _constrain_heads(x: jax.Array, mesh, kind: str = "heads") -> jax.Array:
+    """SP->TP transition at the attention boundary: (B, S, H, D) compute
+    must be head-sharded with the sequence whole -- without this, the
+    sequence-parallel residual carry propagates seq-sharding INTO the
+    flash scan and GSPMD leaves all heads on every device (3 GB/tensor
+    at deepseek's 128 MLA heads)."""
+    if mesh is None or mesh.size == 1:
+        return x
+    from repro.core.sharding import constrain
+
+    return constrain(x, mesh, "batch", None, kind, None)
+
+
+def _use_context_parallel(cfg: ModelConfig, mesh) -> bool:
+    """Head-sharded attention needs num_heads % TP == 0; otherwise GSPMD
+    pads the head dim and every in-scan dynamic op on the uneven shard
+    triggers involuntary full rematerialization (measured: ~46 TB/chip of
+    resharding traffic at qwen's 40 heads / 16-way TP, prefill_32k).
+    Context-parallel attention instead keeps Q *sequence*-sharded and
+    gathers the (small, GQA) KV once per layer -- §Perf iteration 1."""
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    tp = mesh.shape["model"]
+    if cfg.attn_partition == "context":
+        return True
+    if cfg.attn_partition == "heads":
+        return False
+    return cfg.num_heads % tp != 0  # auto
+
+
+def _constrain_qkv(q, k, v, mesh, cfg: ModelConfig):
+    """Partition q/k/v for the flash scan per the chosen scheme."""
+    if mesh is None or mesh.size == 1:
+        return q, k, v
+    from repro.core.sharding import constrain
+
+    if _use_context_parallel(cfg, mesh):
+        q = constrain(q, mesh, "batch", "seq_act", None, None)
+        k = constrain(k, mesh, "batch", None, None, None)  # gathered: KV is small
+        v = constrain(v, mesh, "batch", None, None, None)
+        return q, k, v
+    q = constrain(q, mesh, "batch", None, "heads", None)
+    k = constrain(k, mesh, "batch", None, "kv_heads", None)
+    v = constrain(v, mesh, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _constrain_out(o, mesh, cfg: ModelConfig):
+    if mesh is None or mesh.size == 1:
+        return o
+    from repro.core.sharding import constrain
+
+    if _use_context_parallel(cfg, mesh):
+        return constrain(o, mesh, "batch", "seq_act", None, None)
+    return constrain(o, mesh, "batch", None, "heads", None)
+
+
+class AttnSpec(NamedTuple):
+    """Static per-call attention behaviour."""
+
+    causal: bool = True
+    window: int = 0  # 0 = full
+    softcap: float = 0.0
+    prefix: int = 0  # keys with idx < prefix always visible (meta tokens)
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (naive + chunked)
+# ---------------------------------------------------------------------------
+
+
+def _mask(
+    q_idx: jax.Array, k_idx: jax.Array, spec: AttnSpec
+) -> jax.Array:
+    """(..., Sq, Skv) boolean visibility. q_idx: (Sq,) or (B, Sq) for
+    per-row decode positions; k_idx: (Skv,)."""
+    ok = k_idx <= q_idx[..., None] if spec.causal else jnp.ones(
+        q_idx.shape + k_idx.shape, bool
+    )
+    if spec.window > 0:
+        inwin = k_idx > q_idx[..., None] - spec.window
+        if spec.prefix > 0:
+            inwin |= k_idx < spec.prefix
+        ok &= inwin
+    return ok
+
+
+def attention_naive(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,  # (B, Skv, KVH, Dv)
+    spec: AttnSpec,
+    *,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    s = common.softcap(s, spec.softcap)
+    q_idx = q_offset + jnp.arange(sq)
+    k_idx = jnp.arange(k.shape[1])
+    s = jnp.where(_mask(q_idx, k_idx, spec), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhe->bqhge", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttnSpec,
+    *,
+    q_offset: int | jax.Array = 0,
+    kv_chunk: int = 512,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Flash-style online softmax over KV chunks (O(Sq) memory).
+
+    ``kv_valid_len``: number of valid cache entries (decode with a
+    preallocated ring/linear cache).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    dv = v.shape[-1]
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = (skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = (q / math.sqrt(d)).reshape(b, sq, kvh, g, d)  # stay bf16; f32 via dot accum
+    q_off = jnp.asarray(q_offset)
+    q_idx = q_off[..., None] + jnp.arange(sq) if q_off.ndim else q_off + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, dv)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kb, preferred_element_type=jnp.float32
+        )
+        s = common.softcap(s, spec.softcap)
+        k_idx = ci * kv_chunk + jnp.arange(kv_chunk)
+        ok = _mask(q_idx, k_idx, spec)  # (Sq,K) or (B,Sq,K)
+        if kv_valid_len is not None:
+            valid = jnp.asarray(kv_valid_len)
+            ok = ok & (k_idx < valid[..., None, None] if valid.ndim else k_idx < valid)
+        ok = ok & (k_idx < skv)  # padding
+        if ok.ndim == 2:  # (Sq, K) -> broadcast over (B, KVH, G)
+            ok = ok[None, None, None]
+        else:  # (B, Sq, K) -> (B, 1, 1, Sq, K)
+            ok = ok[:, None, None]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhe->bhgqe", p.astype(vb.dtype), vb, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+    # flash-style backward: recompute per-chunk scores instead of saving
+    # them (the inner scan would otherwise stash (Sq, kv_chunk) f32 score/
+    # prob tensors per step for autodiff -- exactly what flash avoids).
+    step = jax.checkpoint(step)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with custom VJP (train path: q_offset=0, no valid_len)
+#
+# The plain chunked scan saves its (m, l, acc) carry at EVERY kv step for
+# autodiff -- O(n_chunks) copies of the (B,H,Sq,Dv) f32 accumulator
+# (~17 GB/layer at deepseek MLA train shapes). Flash's backward instead
+# recomputes per-chunk probabilities from the final logsumexp stats:
+#     p = exp(s - L);  dv += p^T dO;  dp = dO v^T
+#     ds = p * (dp - rowsum(dO*O)) [* dsoftcap];  dq += ds k;  dk += ds^T q
+# so the residuals are just (q, k, v, out, L).
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_scan(qg, kc, vc, spec: AttnSpec, skv: int, kv_chunk: int):
+    b, sq, kvh, g, d = qg.shape
+    dv = vc.shape[-1]
+    n_chunks = kc.shape[1]
+    q_idx = jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb, preferred_element_type=jnp.float32)
+        s = common.softcap(s, spec.softcap)
+        k_idx = ci * kv_chunk + jnp.arange(kv_chunk)
+        ok = _mask(q_idx, k_idx, spec) & (k_idx < skv)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhe->bhgqe", p.astype(vb.dtype), vb, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,KVH,G,Sq)
+    return out, lse
+
+
+def _make_flash(spec: AttnSpec, kv_chunk: int, skv: int):
+    @jax.custom_vjp
+    def flash(qg, kc, vc):
+        out, _ = _flash_fwd_scan(qg, kc, vc, spec, skv, kv_chunk)
+        return out
+
+    def fwd(qg, kc, vc):
+        out, lse = _flash_fwd_scan(qg, kc, vc, spec, skv, kv_chunk)
+        return out, (qg, kc, vc, out, lse)
+
+    def bwd(res, dout):
+        qg, kc, vc, out, lse = res
+        b, sq, kvh, g, d = qg.shape
+        n_chunks = kc.shape[1]
+        kv_ch = kc.shape[2]
+        q_idx = jnp.arange(sq)
+        dout = dout.astype(jnp.float32)
+        dmat = jnp.sum(dout * out, axis=-1)  # (B,KVH,G,Sq)
+
+        def step(dq_acc, inp):
+            ci, kb, vb = inp
+            s_raw = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb, preferred_element_type=jnp.float32)
+            if spec.softcap > 0:
+                t = jnp.tanh(s_raw / spec.softcap)
+                s = spec.softcap * t
+                dcap = 1.0 - t * t
+            else:
+                s = s_raw
+                dcap = None
+            k_idx = ci * kv_chunk + jnp.arange(kv_ch)
+            ok = _mask(q_idx, k_idx, spec) & (k_idx < skv)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse[..., None])  # (B,KVH,G,Sq,K)
+            pv = p.astype(vb.dtype)
+            dv_c = jnp.einsum("bhgqk,bhgqe->bkhe", pv, dout.astype(vb.dtype),
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhgqe,bkhe->bhgqk", dout, vb, preferred_element_type=jnp.float32)
+            ds = p * (dp - dmat[..., None])
+            if dcap is not None:
+                ds = ds * dcap
+            dsv = ds.astype(kb.dtype)
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", dsv, kb, preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", dsv, qg, preferred_element_type=jnp.float32)
+            return dq_acc + dq_c, (dk_c, dv_c)
+
+        dq0 = jnp.zeros(qg.shape, jnp.float32)
+        dq, (dks, dvs) = lax.scan(
+            jax.checkpoint(step), dq0,
+            (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+        )
+        dk = jnp.moveaxis(dks, 0, 1).astype(kc.dtype)
+        dv = jnp.moveaxis(dvs, 0, 1).astype(vc.dtype)
+        return dq.astype(qg.dtype), dk, dv
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention_train(q, k, v, spec: AttnSpec, *, kv_chunk: int = 512) -> jax.Array:
+    """Memory-optimal flash for the train/prefill path (q_offset=0)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    dvd = v.shape[-1]
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = (skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q / math.sqrt(d)).reshape(b, sq, kvh, g, d)
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, dvd)
+    flash = _make_flash(spec, kv_chunk, skv)
+    out = flash(qg, kc, vc)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dvd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q, k, v, spec: AttnSpec, *, impl: str = "chunked", q_offset=0, kv_chunk: int = 512,
+    kv_valid_len=None,
+) -> jax.Array:
+    if impl == "naive":
+        assert kv_valid_len is None
+        return attention_naive(q, k, v, spec, q_offset=q_offset)
+    if kv_valid_len is None and isinstance(q_offset, int) and q_offset == 0:
+        return flash_attention_train(q, k, v, spec, kv_chunk=kv_chunk)
+    return attention_chunked(
+        q, k, v, spec, q_offset=q_offset, kv_chunk=kv_chunk, kv_valid_len=kv_valid_len
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA projection layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
+    """Weights stored FLAT -- (d, H*hd) not (d, H, hd) -- so the TP axis
+    shards the flattened head dim, which divides 16 even when the head
+    count doesn't (qwen 40H, hymba 25H, phi3-medium 10 kv heads)."""
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, h * hd)),
+        "wk": common.dense_init(ks[1], (d, kvh * hd)),
+        "wv": common.dense_init(ks[2], (d, kvh * hd)),
+        "wo": common.dense_init(ks[3], (h * hd, d)),
+    }
+    s = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvh * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvh * hd,), jnp.float32)
+        s["bq"] = ("heads",)
+        s["bk"] = ("kv_heads",)
+        s["bv"] = ("kv_heads",)
+    return p, s
+
+
+def qkv_proj(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    dt = x.dtype
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.rope_theta > 0:
+        q = common.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = common.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def out_proj(p: Params, attn_out: jax.Array) -> jax.Array:
+    b, s, h, hd = attn_out.shape
+    flat = attn_out.reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", flat, p["wo"].astype(attn_out.dtype))
+
+
+def apply_attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    *,
+    positions: Optional[jax.Array] = None,
+    impl: str = "chunked",
+    mesh=None,
+) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = qkv_proj(p, x, cfg, positions)
+    q, k, v = _constrain_qkv(q, k, v, mesh, cfg)
+    o = attention(q, k, v, spec, impl=impl, kv_chunk=cfg.attn_kv_chunk)
+    o = _constrain_out(o, mesh, cfg)
+    return out_proj(p, o)
+
+
+# --- decode with cache -------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KVH, D)
+    v: jax.Array
+    length: jax.Array  # (B,) int32 -- valid entries per row (ragged slots)
+
+
+def init_kv_cache(b: int, s_max: int, kvh: int, hd: int, dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((b, s_max, kvh, hd), dtype),
+        v=jnp.zeros((b, s_max, kvh, hd), dtype),
+        length=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def decode_attention(
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    *,
+    kv_chunk: int = 512,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step: append K/V at each row's cache.length, attend over
+    the cache. Rows may be at different positions (serving slots)."""
+    pos = cache.length  # (B,)
+    b = x.shape[0]
+    q, k, v = qkv_proj(p, x, cfg, positions=pos[:, None])
+    rows = jnp.arange(b)
+    kc = cache.k.at[rows, pos].set(k[:, 0].astype(cache.k.dtype))
+    vc = cache.v.at[rows, pos].set(v[:, 0].astype(cache.v.dtype))
+    new = KVCache(kc, vc, pos + 1)
+    o = attention_chunked(
+        q, kc, vc, spec, q_offset=pos, kv_chunk=kv_chunk, kv_valid_len=pos + 1
+    )
+    return out_proj(p, o), new
+
+
+def prefill_attention(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cache: KVCache,
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    *,
+    impl: str = "chunked",
+    mesh=None,
+) -> Tuple[jax.Array, KVCache]:
+    """Causal full-sequence pass that also populates the KV cache[0:S]."""
+    b, s, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg, positions=jnp.arange(s))
+    # cache rows written from the pre-gather (cache-layout) K/V
+    kc = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    q, k, v = _constrain_qkv(q, k, v, mesh, cfg)
+    o = attention(q, k, v, spec, impl=impl, kv_chunk=cfg.attn_kv_chunk)
+    o = _constrain_out(o, mesh, cfg)
+    length = jnp.full((b,), s, jnp.int32)
+    return out_proj(p, o), KVCache(kc, vc, length)
+
+
+def flash_decode_combine(
+    partial_out: jax.Array,  # (B, 1, H, Dv) local
+    partial_m: jax.Array,  # (B, H) local max
+    partial_l: jax.Array,  # (B, H) local sum
+    axis_name: str,
+) -> jax.Array:
+    """Distributed decode over sequence-sharded KV: each shard computes a
+    partial online-softmax; the global combine rescales by the global max
+    and sums -- a decomposed collective in the spirit of the paper's
+    scatter (the combine is two small psums instead of gathering KV)."""
+    m_glob = lax.pmax(partial_m, axis_name)
+    scale = jnp.exp(partial_m - m_glob)  # (B, H)
+    num = lax.psum(partial_out * scale[:, None, :, None], axis_name)
+    den = lax.psum(partial_l * scale, axis_name)
+    return num / jnp.maximum(den[:, None, :, None], 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wdq": common.dense_init(ks[0], (d, m.q_lora_rank)),
+        "wuq": common.dense_init(ks[1], (m.q_lora_rank, h * qd)),
+        "wdkv": common.dense_init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim)),
+        "wukv": common.dense_init(ks[3], (m.kv_lora_rank, h * (m.nope_head_dim + m.v_head_dim))),
+        "wo": common.dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+    nq, _ = common.init_norm(m.q_lora_rank, "rmsnorm")
+    nkv, _ = common.init_norm(m.kv_lora_rank, "rmsnorm")
+    p["q_norm"], p["kv_norm"] = nq, nkv
+    s = {
+        "wdq": ("fsdp", None),
+        "wuq": (None, "heads"),
+        "wdkv": ("fsdp", None),
+        "wukv": (None, "heads"),
+        "wo": ("heads", "fsdp"),
+        "q_norm": {"scale": (None,)},
+        "kv_norm": {"scale": (None,)},
+    }
+    return p, s
+
+
+def _mla_qkv(p, x, cfg, positions):
+    m: MLAConfig = cfg.mla
+    h = cfg.num_heads
+    dt = x.dtype
+    cq = common.apply_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wdq"].astype(dt)), "rmsnorm")
+    qd = m.nope_head_dim + m.rope_head_dim
+    q = jnp.einsum("bsr,re->bse", cq, p["wuq"].astype(dt))
+    q = q.reshape(q.shape[0], q.shape[1], h, qd)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = common.rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(dt))
+    ckv = common.apply_norm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank], "rmsnorm")
+    k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope_d)
+    k_rope = common.rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def apply_mla(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: AttnSpec,
+    *,
+    positions: Optional[jax.Array] = None,
+    impl: str = "chunked",
+    mesh=None,
+) -> jax.Array:
+    """Training/prefill MLA: expand latent to per-head K/V, run GQA=MHA."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,re->bse", ckv, p["wukv"].astype(x.dtype))
+    kv = kv.reshape(b, s, h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim :]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = _constrain_heads(q, mesh, "heads")
+    k = _constrain_heads(k, mesh, "heads")
+    v = _constrain_heads(v, mesh, "heads")
+    o = attention(q, k, v, spec, impl=impl)
+    o = _constrain_heads(o, mesh, "heads")
+    o = o.reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array  # (B, S_max, kv_lora_rank)
+    k_rope: jax.Array  # (B, S_max, rope_head_dim)
+    length: jax.Array  # (B,)
+
+
+def init_mla_cache(b: int, s_max: int, m: MLAConfig, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        ckv=jnp.zeros((b, s_max, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((b, s_max, m.rope_head_dim), dtype),
+        length=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def prefill_mla(
+    p: Params, x: jax.Array, cache: MLACache, cfg: ModelConfig, spec: AttnSpec,
+    *, impl: str = "chunked",
+) -> Tuple[jax.Array, MLACache]:
+    """Full-sequence MLA pass that populates the latent cache[0:S]."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    new = MLACache(
+        ckv=lax.dynamic_update_slice_in_dim(cache.ckv, ckv.astype(cache.ckv.dtype), 0, axis=1),
+        k_rope=lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope[:, :, 0, :].astype(cache.k_rope.dtype), 0, axis=1
+        ),
+        length=jnp.full((b,), s, jnp.int32),
+    )
+    h = cfg.num_heads
+    kv = jnp.einsum("bsr,re->bse", ckv, p["wukv"].astype(x.dtype))
+    kv = kv.reshape(b, s, h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim :]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attention(q, k, v, spec, impl=impl)
+    o = o.reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)), new
+
+
+def decode_mla(
+    p: Params, x: jax.Array, cache: MLACache, cfg: ModelConfig, spec: AttnSpec
+) -> Tuple[jax.Array, MLACache]:
+    """Absorbed-matrix MLA decode: scores against the *latent* cache.
+
+    score_h = (W_uk[h]^T q_nope[h]) . ckv + q_rope[h] . k_rope, so the
+    cache stays rank-(kv_lora + rope_d) per token -- MLA's raison d'etre.
+    """
+    m: MLAConfig = cfg.mla
+    h = cfg.num_heads
+    pos = cache.length  # (B,)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    q_nope, q_rope, ckv_t, k_rope_t = _mla_qkv(p, x, cfg, positions=pos[:, None])
+    ckv_c = cache.ckv.at[rows, pos].set(ckv_t[:, 0].astype(cache.ckv.dtype))
+    kr_c = cache.k_rope.at[rows, pos].set(k_rope_t[:, 0, 0, :].astype(cache.k_rope.dtype))
+    new = MLACache(ckv_c, kr_c, pos + 1)
+
+    wukv = p["wukv"].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
+    wuk = wukv[..., : m.nope_head_dim].astype(x.dtype)  # (r, h, nope)
+    wuv = wukv[..., m.nope_head_dim :].astype(x.dtype)  # (r, h, v)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, wuk)  # absorbed query
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv_c.astype(x.dtype))
+    s_rope = jnp.einsum("bshe,bte->bhst", q_rope, kr_c.astype(x.dtype))
+    scores = (s_lat + s_rope).astype(jnp.float32) / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    t_idx = jnp.arange(scores.shape[-1])
+    scores = jnp.where((t_idx <= pos[:, None])[:, None, None, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    lat_sum = jnp.einsum("bhst,btr->bshr", pr.astype(x.dtype), ckv_c.astype(x.dtype))
+    o = jnp.einsum("bshr,rhe->bshe", lat_sum, wuv)
+    o = o.reshape(b, o.shape[1], h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)), new

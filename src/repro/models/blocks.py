@@ -1,0 +1,411 @@
+"""Per-family transformer blocks, assembled for lax.scan over layers.
+
+Heterogeneity strategy (keeps HLO small -> fast 512-device compiles):
+
+- *mask-only* differences (gemma2 local/global alternation, hymba's
+  first/middle/last global layers, mixtral SWA) use a per-layer flag
+  vector inside ONE scan -- params stay homogeneous, lax.cond switches
+  the attention spec.
+- *structural* differences (deepseek dense-vs-MoE FFN, xlstm mLSTM/sLSTM
+  alternation) use separate scan groups (see model.py).
+
+Every block returns (x, aux) where aux accumulates MoE load-balance loss.
+Decode variants thread per-layer state pytrees (KV caches or SSM states).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common, mlp, moe, ssm
+from repro.models.attention import AttnSpec, KVCache, MLACache
+from repro.models.common import Params, Specs
+
+
+def _attn_spec(cfg: ModelConfig, *, is_global: bool, causal: bool = True) -> AttnSpec:
+    window = 0 if is_global else cfg.window_size
+    return AttnSpec(
+        causal=causal, window=window, softcap=cfg.attn_logit_softcap, prefix=cfg.meta_tokens
+    )
+
+
+def _maybe_post(p, h, cfg):
+    return common.apply_norm(p, h, cfg.norm_kind) if cfg.post_norm else h
+
+
+def _heads(flat: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, H*hd) -> (B, S, H, hd) (flat TP-friendly weight layout)."""
+    b, s, _ = flat.shape
+    return flat.reshape(b, s, cfg.num_heads, cfg.head_dim_)
+
+
+# ---------------------------------------------------------------------------
+# dense / moe decoder block (all attention archs)
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_block(key, cfg: ModelConfig, *, use_moe: bool, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    if cfg.mla is not None:
+        pa, sa = attn.init_mla(ks[0], cfg)
+    else:
+        pa, sa = attn.init_attention(ks[0], cfg)
+    p = {"attn": pa, "ln1": init_n(cfg)[0]}
+    s = {"attn": sa, "ln1": init_n(cfg)[1]}
+    if cross:
+        pc, sc = attn.init_attention(ks[3], cfg)
+        p["cross"], s["cross"] = pc, sc
+        p["lnc"], s["lnc"] = init_n(cfg)
+    if use_moe:
+        pm, sm = moe.init_moe(ks[1], cfg)
+    else:
+        pm, sm = mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    p["ffn"], s["ffn"] = pm, sm
+    p["ln2"], s["ln2"] = init_n(cfg)
+    if cfg.post_norm:
+        p["ln1p"], s["ln1p"] = init_n(cfg)
+        p["ln2p"], s["ln2p"] = init_n(cfg)
+    return p, s
+
+
+def init_n(cfg):
+    return common.init_norm(cfg.d_model, cfg.norm_kind)
+
+
+def apply_decoder_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    is_global,
+    use_moe: bool,
+    positions=None,
+    impl: str = "chunked",
+    mesh=None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+    if isinstance(is_global, bool):
+        spec = _attn_spec(cfg, is_global=is_global)
+        if cfg.mla is not None:
+            a = attn.apply_mla(p["attn"], h, cfg, spec, positions=positions, impl=impl, mesh=mesh)
+        else:
+            a = attn.apply_attention(p["attn"], h, cfg, spec, positions=positions, impl=impl, mesh=mesh)
+    else:
+        # traced per-layer flag (inside scan): window off/on via cond
+        def go(glob):
+            spec = _attn_spec(cfg, is_global=glob)
+            if cfg.mla is not None:
+                return attn.apply_mla(p["attn"], h, cfg, spec, positions=positions, impl=impl, mesh=mesh)
+            return attn.apply_attention(p["attn"], h, cfg, spec, positions=positions, impl=impl, mesh=mesh)
+
+        if cfg.window_size > 0:
+            a = lax.cond(is_global, lambda: go(True), lambda: go(False))
+        else:
+            a = go(True)
+    x = x + _maybe_post(p.get("ln1p"), a, cfg)
+
+    if cross_kv is not None:
+        hc = common.apply_norm(p["lnc"], x, cfg.norm_kind)
+        ck, cv = cross_kv
+        dtt = x.dtype
+        q = _heads(jnp.einsum("bsd,de->bse", hc, p["cross"]["wq"].astype(dtt)), cfg)
+        o = attn.attention(q, ck, cv, AttnSpec(causal=False), impl=impl)
+        x = x + attn.out_proj(p["cross"], o)
+
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if use_moe:
+        f, aux = moe.apply_moe(p["ffn"], h2, cfg, mesh=mesh)
+    else:
+        f, aux = mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind), jnp.zeros((), jnp.float32)
+    x = x + _maybe_post(p.get("ln2p"), f, cfg)
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16):
+    if cfg.mla is not None:
+        return attn.init_mla_cache(b, s_max, cfg.mla, dtype)
+    return attn.init_kv_cache(b, s_max, cfg.num_kv_heads, cfg.head_dim_, dtype)
+
+
+def decode_decoder_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache,
+    *,
+    is_global,
+    use_moe: bool,
+    mesh=None,
+    cross_kv=None,
+):
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+
+    def go(glob):
+        spec = _attn_spec(cfg, is_global=glob)
+        if cfg.mla is not None:
+            return attn.decode_mla(p["attn"], h, cache, cfg, spec)
+        return attn.decode_attention(p["attn"], h, cache, cfg, spec)
+
+    if isinstance(is_global, bool):
+        a, new_cache = go(is_global)
+    elif cfg.window_size > 0:
+        a, new_cache = lax.cond(is_global, lambda: go(True), lambda: go(False))
+    else:
+        a, new_cache = go(True)
+    x = x + _maybe_post(p.get("ln1p"), a, cfg)
+
+    if cross_kv is not None:
+        hc = common.apply_norm(p["lnc"], x, cfg.norm_kind)
+        ck, cv = cross_kv
+        q = _heads(jnp.einsum("bsd,de->bse", hc, p["cross"]["wq"].astype(x.dtype)), cfg)
+        o = attn.attention(q, ck, cv, AttnSpec(causal=False))
+        x = x + attn.out_proj(p["cross"], o)
+
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if use_moe:
+        f, _ = moe.apply_moe(p["ffn"], h2, cfg, mesh=mesh)
+    else:
+        f = mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+    x = x + _maybe_post(p.get("ln2p"), f, cfg)
+    return x, new_cache
+
+
+def prefill_decoder_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache,
+    *,
+    is_global,
+    use_moe: bool,
+    impl: str = "chunked",
+    mesh=None,
+    cross_kv=None,
+):
+    """Full-sequence forward that also fills the per-layer cache."""
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+
+    def go(glob):
+        spec = _attn_spec(cfg, is_global=glob)
+        if cfg.mla is not None:
+            return attn.prefill_mla(p["attn"], h, cache, cfg, spec, impl=impl)
+        return attn.prefill_attention(p["attn"], h, cache, cfg, spec, impl=impl, mesh=mesh)
+
+    if isinstance(is_global, bool):
+        a, new_cache = go(is_global)
+    elif cfg.window_size > 0:
+        a, new_cache = lax.cond(is_global, lambda: go(True), lambda: go(False))
+    else:
+        a, new_cache = go(True)
+    x = x + _maybe_post(p.get("ln1p"), a, cfg)
+
+    if cross_kv is not None:
+        hc = common.apply_norm(p["lnc"], x, cfg.norm_kind)
+        ck, cv = cross_kv
+        q = _heads(jnp.einsum("bsd,de->bse", hc, p["cross"]["wq"].astype(x.dtype)), cfg)
+        o = attn.attention(q, ck, cv, AttnSpec(causal=False), impl=impl)
+        x = x + attn.out_proj(p["cross"], o)
+
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if use_moe:
+        f, _ = moe.apply_moe(p["ffn"], h2, cfg, mesh=mesh)
+    else:
+        f = mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+    x = x + _maybe_post(p.get("ln2p"), f, cfg)
+    return x, new_cache
+
+
+def cross_kv_proj(p: Params, enc_out: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder states (once per seq)."""
+    c = p["cross"]
+    b, s, _ = enc_out.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    k = jnp.einsum("bsd,de->bse", enc_out, c["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,de->bse", enc_out, c["wv"].astype(enc_out.dtype))
+    return k.reshape(b, s, kvh, hd), v.reshape(b, s, kvh, hd)
+
+
+# ---------------------------------------------------------------------------
+# encoder block (whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    pa, sa = attn.init_attention(ks[0], cfg)
+    pm, sm = mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    p = {"attn": pa, "ffn": pm, "ln1": init_n(cfg)[0], "ln2": init_n(cfg)[0]}
+    s = {"attn": sa, "ffn": sm, "ln1": init_n(cfg)[1], "ln2": init_n(cfg)[1]}
+    return p, s
+
+
+def apply_encoder_block(p, x, cfg: ModelConfig, *, impl="chunked"):
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+    a = attn.apply_attention(p["attn"], h, cfg, AttnSpec(causal=False), impl=impl)
+    x = x + a
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    return x + mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+
+
+# ---------------------------------------------------------------------------
+# hymba block: parallel attention + mamba heads
+# ---------------------------------------------------------------------------
+
+
+class HymbaState(NamedTuple):
+    kv: KVCache
+    mamba: ssm.MambaState
+
+
+def init_hymba_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    pa, sa = attn.init_attention(ks[0], cfg)
+    pm, sm = ssm.init_mamba(ks[1], cfg)
+    pf, sf = mlp.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    p = {
+        "attn": pa,
+        "mamba": pm,
+        "ffn": pf,
+        "ln1": init_n(cfg)[0],
+        "ln2": init_n(cfg)[0],
+        "na": init_n(cfg)[0],
+        "nm": init_n(cfg)[0],
+        "beta_a": jnp.ones((cfg.d_model,), jnp.float32),
+        "beta_m": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    s = {
+        "attn": sa,
+        "mamba": sm,
+        "ffn": sf,
+        "ln1": init_n(cfg)[1],
+        "ln2": init_n(cfg)[1],
+        "na": init_n(cfg)[1],
+        "nm": init_n(cfg)[1],
+        "beta_a": (None,),
+        "beta_m": (None,),
+    }
+    return p, s
+
+
+def apply_hymba_block(
+    p, x, cfg: ModelConfig, *, is_global, positions=None, impl="chunked",
+    state: Optional[HymbaState] = None, mesh=None,
+):
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+
+    def att(glob):
+        spec = _attn_spec(cfg, is_global=glob)
+        return attn.apply_attention(p["attn"], h, cfg, spec, positions=positions, impl=impl, mesh=mesh)
+
+    if isinstance(is_global, bool):
+        a = att(is_global)
+    else:
+        a = lax.cond(is_global, lambda: att(True), lambda: att(False))
+    mo, mstate = ssm.apply_mamba(p["mamba"], h, cfg, state.mamba if state is not None else None, mesh=mesh)
+    mix = 0.5 * (
+        common.apply_norm(p["na"], a, cfg.norm_kind) * p["beta_a"].astype(x.dtype)
+        + common.apply_norm(p["nm"], mo, cfg.norm_kind) * p["beta_m"].astype(x.dtype)
+    )
+    x = x + mix
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    x = x + mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+    return x, mstate
+
+
+def prefill_hymba_block(p, x, cfg: ModelConfig, state: HymbaState, *, is_global, impl="chunked", mesh=None):
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+
+    def att(glob):
+        spec = _attn_spec(cfg, is_global=glob)
+        return attn.prefill_attention(p["attn"], h, state.kv, cfg, spec, impl=impl, mesh=mesh)
+
+    if isinstance(is_global, bool):
+        a, kv = att(is_global)
+    else:
+        a, kv = lax.cond(is_global, lambda: att(True), lambda: att(False))
+    mo, mstate = ssm.apply_mamba(p["mamba"], h, cfg, state.mamba, mesh=mesh)
+    mix = 0.5 * (
+        common.apply_norm(p["na"], a, cfg.norm_kind) * p["beta_a"].astype(x.dtype)
+        + common.apply_norm(p["nm"], mo, cfg.norm_kind) * p["beta_m"].astype(x.dtype)
+    )
+    x = x + mix
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    x = x + mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+    return x, HymbaState(kv, mstate)
+
+
+def decode_hymba_block(p, x, cfg: ModelConfig, state: HymbaState, *, is_global):
+    h = common.apply_norm(p["ln1"], x, cfg.norm_kind)
+
+    def att(glob):
+        spec = _attn_spec(cfg, is_global=glob)
+        return attn.decode_attention(p["attn"], h, state.kv, cfg, spec)
+
+    if isinstance(is_global, bool):
+        a, kv = att(is_global)
+    else:
+        a, kv = lax.cond(is_global, lambda: att(True), lambda: att(False))
+    mo, mstate = ssm.decode_mamba(p["mamba"], h, cfg, state.mamba)
+    mix = 0.5 * (
+        common.apply_norm(p["na"], a, cfg.norm_kind) * p["beta_a"].astype(x.dtype)
+        + common.apply_norm(p["nm"], mo, cfg.norm_kind) * p["beta_m"].astype(x.dtype)
+    )
+    x = x + mix
+    h2 = common.apply_norm(p["ln2"], x, cfg.norm_kind)
+    x = x + mlp.apply_mlp(p["ffn"], h2, cfg.mlp_kind)
+    return x, HymbaState(kv, mstate)
+
+
+# ---------------------------------------------------------------------------
+# xlstm pair block (mLSTM + optional sLSTM)
+# ---------------------------------------------------------------------------
+
+
+class XLSTMPairState(NamedTuple):
+    m: ssm.MLSTMBlockState
+    s: ssm.SLSTMState
+
+
+def init_xlstm_pair(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    pm, sm = ssm.init_mlstm_block(k1, cfg)
+    ps, ss_ = ssm.init_slstm_block(k2, cfg)
+    p = {"m": pm, "s": ps, "lnm": init_n(cfg)[0], "lns": init_n(cfg)[0]}
+    s = {"m": sm, "s": ss_, "lnm": init_n(cfg)[1], "lns": init_n(cfg)[1]}
+    return p, s
+
+
+def apply_xlstm_pair(p, x, cfg: ModelConfig, state: Optional[XLSTMPairState] = None, mesh=None):
+    if mesh is not None and mesh.size > 1:
+        # Time-recurrent blocks must see the FULL sequence locally: a
+        # seq-sharded input turns every scan step into a cross-mesh
+        # gather (t_coll 64 s at train_4k). The recurrences are tiny
+        # (d=2048), so batch-only sharding (replicated over TP) is far
+        # cheaper than per-step resharding.
+        from repro.core.sharding import constrain
+
+        x = constrain(x, mesh, "batch", None, None)
+    hm = common.apply_norm(p["lnm"], x, cfg.norm_kind)
+    om, ms = ssm.apply_mlstm_block(p["m"], hm, cfg, state.m if state is not None else None)
+    x = x + om
+    hs = common.apply_norm(p["lns"], x, cfg.norm_kind)
+    os_, ss_ = ssm.apply_slstm_block(p["s"], hs, cfg, state.s if state is not None else None, mesh=mesh)
+    x = x + os_
+    return x, (XLSTMPairState(ms, ss_) if state is not None else None)
+
+
+def decode_xlstm_pair(p, x, cfg: ModelConfig, state: XLSTMPairState):
+    hm = common.apply_norm(p["lnm"], x, cfg.norm_kind)
+    om, ms = ssm.decode_mlstm_block(p["m"], hm, cfg, state.m)
+    x = x + om
+    hs = common.apply_norm(p["lns"], x, cfg.norm_kind)
+    os_, ss_ = ssm.decode_slstm_block(p["s"], hs, cfg, state.s)
+    x = x + os_
+    return x, XLSTMPairState(ms, ss_)

@@ -1,0 +1,135 @@
+"""Shared layer primitives: norms, RoPE, embeddings, initializers.
+
+Functional style: ``init_*`` returns ``(params, specs)`` where ``specs``
+mirrors the param pytree with tuples of *logical* sharding axis names
+(resolved against the mesh by core/sharding.py). ``apply_*`` are pure.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Specs = dict
+
+
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal init with fan-in scaling (MaxText default)."""
+    std = scale / math.sqrt(shape[0] if len(shape) > 1 else 1)
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str) -> Tuple[Params, Specs]:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}, {"scale": (None,)}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.zeros((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": (None,), "bias": (None,)},
+        )
+    raise ValueError(kind)
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"]) + p["bias"]
+    return out.astype(x.dtype)
+
+
+def init_groupnorm(heads: int, d: int) -> Tuple[Params, Specs]:
+    """Per-head group norm (xLSTM blocks)."""
+    return {"scale": jnp.zeros((d,), jnp.float32)}, {"scale": (None,)}
+
+
+def apply_groupnorm(p: Params, x: jax.Array, heads: int, eps: float = 1e-6) -> jax.Array:
+    """x: (..., H, dh) normalized per head."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(out.shape[:-2] + (-1,)) * (1.0 + p["scale"])
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) int32.
+
+    ``fraction`` < 1 rotates only the leading dims (nemotron partial rope).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0 or theta <= 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions (..., S) -> angles (..., S, 1, half), broadcasting over heads
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if rot < d else out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (seq, d)."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, tie: bool) -> Tuple[Params, Specs]:
+    p = {"table": trunc_normal(key, (vocab, d), 1.0)}
+    s = {"table": ("vocab", "fsdp")}
+    if not tie:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = trunc_normal(k2, (d, vocab), 1.0)
+        s["unembed"] = ("fsdp", "vocab")
+    return p, s
+
+
+def embed_tokens(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, tie: bool) -> jax.Array:
+    w = p["table"].T if tie else p["unembed"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dense_init(key, shape, *, scale: float = 1.0) -> jax.Array:
+    return trunc_normal(key, shape, scale)

@@ -1,0 +1,79 @@
+"""Losses: sequence-chunked softmax cross-entropy (+ z-loss).
+
+The (B, S, V) logit tensor is the single biggest activation at 256k
+vocabs (gemma2/nemotron: 4k x 256 x 256k bf16 = 512 GiB global). We
+never materialize it: the unembed matmul + logsumexp + label gather run
+per sequence-chunk inside a scan, so peak logit memory drops by
+S/chunk. The vocab dim additionally shards over the TP axis via the
+'vocab' logical rule.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+
+
+def _chunk_ce(x, labels, mask, unemb_fn, softcap_v: float):
+    """x: (B, L, d); labels: (B, L). Returns (sum_nll, sum_z2, count)."""
+    logits = unemb_fn(x).astype(jnp.float32)
+    logits = common.softcap(logits, softcap_v)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    z2 = (lse * lse) * mask
+    return nll.sum(), z2.sum(), mask.sum()
+
+
+def chunked_xent(
+    x: jax.Array,  # (B, S, d) final hidden states
+    labels: jax.Array,  # (B, S) int32; -1 = ignore
+    unemb_fn,
+    *,
+    seq_chunk: int = 1024,
+    z_loss: float = 0.0,
+    final_softcap: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (mean_nll, mean_z_loss_term). Never materializes (B,S,V)."""
+    b, s, d = x.shape
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    seq_chunk = min(seq_chunk, s)
+    if s % seq_chunk:
+        pad = seq_chunk - s % seq_chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s = s + pad
+    nc = s // seq_chunk
+    xs = x.reshape(b, nc, seq_chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, nc, seq_chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nc, seq_chunk).swapaxes(0, 1)
+
+    def step(carry, inp):
+        nll, z2, cnt = carry
+        xc, lc, mc = inp
+        a, b2, c = _chunk_ce(xc, lc, mc, unemb_fn, final_softcap)
+        return (nll + a, z2 + b2, cnt + c), None
+
+    init = (jnp.zeros((), jnp.float32),) * 3
+    (nll, z2, cnt), _ = lax.scan(step, init, (xs, ls, ms))
+    cnt = jnp.maximum(cnt, 1.0)
+    return nll / cnt, z_loss * z2 / cnt
+
+
+def full_xent(x, labels, unemb_fn, *, z_loss: float = 0.0, final_softcap: float = 0.0):
+    """Unchunked oracle for tests."""
+    logits = common.softcap(unemb_fn(x).astype(jnp.float32), final_softcap)
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    zl = z_loss * ((lse * lse) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll, zl

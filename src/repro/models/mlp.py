@@ -1,0 +1,54 @@
+"""Feed-forward variants: SwiGLU / GeGLU / squared-ReLU / GELU."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params, Specs
+
+GATED = ("swiglu", "geglu")
+
+
+def init_mlp(key, d: int, d_ff: int, kind: str) -> Tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    if kind in GATED:
+        p = {
+            "wg": common.dense_init(ks[0], (d, d_ff)),
+            "wu": common.dense_init(ks[1], (d, d_ff)),
+            "wd": common.dense_init(ks[2], (d_ff, d)),
+        }
+        s = {"wg": ("fsdp", "mlp"), "wu": ("fsdp", "mlp"), "wd": ("mlp", "fsdp")}
+    else:
+        p = {
+            "wu": common.dense_init(ks[0], (d, d_ff)),
+            "wd": common.dense_init(ks[1], (d_ff, d)),
+        }
+        s = {"wu": ("fsdp", "mlp"), "wd": ("mlp", "fsdp")}
+    return p, s
+
+
+def _act(h: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(h)
+    if kind == "geglu":
+        return jax.nn.gelu(h)
+    if kind == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    dt = x.dtype
+    if kind in GATED:
+        h = _act(jnp.einsum("...d,df->...f", x, p["wg"].astype(dt)), kind)
+        h = h * jnp.einsum("...d,df->...f", x, p["wu"].astype(dt))
+    else:
+        h = _act(jnp.einsum("...d,df->...f", x, p["wu"].astype(dt)), kind)
+    return jnp.einsum("...f,fd->...d", h, p["wd"].astype(dt))

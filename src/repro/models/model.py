@@ -1,0 +1,521 @@
+"""Model assembly: embeddings -> scanned layer groups -> head.
+
+Layer-stacking strategy (DESIGN.md §5): params of structurally identical
+layers are stacked along a leading axis and executed with ``lax.scan``
+(+ configurable remat). This keeps the HLO size O(1) in depth -- the
+512-device dry-run compiles 61-layer/671B graphs in seconds-to-minutes
+on one CPU core. Mask-only layer differences ride a per-layer flag
+vector; structural differences (deepseek dense-prefix vs MoE, xlstm
+mLSTM/sLSTM pairs, whisper enc/dec) become separate groups.
+
+Public surface:
+    Model(cfg, mesh).init(key) -> (params, specs)
+    .loss(params, batch)                      train forward + CE (+MTP)
+    .hidden(params, batch)                    trunk only (B,S,d)
+    .logits(params, batch)                    full logits (small shapes)
+    .init_decode_state(b, s_max) / .prefill / .decode_step
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks, common, losses, ssm
+from repro.models.common import Params, Specs
+
+
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _stack_specs(specs, extra=(None,)):
+    return jax.tree.map(lambda t: tuple(extra) + tuple(t), specs, is_leaf=_is_spec_leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    name: str
+    kind: str  # dec | dec_moe | hymba | xlstm_pair | enc
+    count: int
+    flags: Optional[Tuple[bool, ...]]  # per-layer is_global; None -> static
+    static_global: bool = True
+    cross: bool = False  # whisper decoder
+
+
+def build_groups(cfg: ModelConfig) -> List[Group]:
+    L = cfg.num_layers
+    if cfg.family == "ssm":  # xlstm
+        every = cfg.ssm.slstm_every
+        if every and every != 2:
+            raise NotImplementedError("xlstm grouping implemented for slstm_every in (0, 2)")
+        if every == 2:
+            return [Group("pairs", "xlstm_pair", L // 2, None)]
+        return [Group("mlstm", "xlstm_m", L, None)]
+
+    def flags_for(pattern: str) -> Optional[Tuple[bool, ...]]:
+        if cfg.window_size <= 0:
+            return None  # full attention everywhere -> static global
+        if pattern == "alternate":
+            return tuple(i % 2 == 1 for i in range(L))
+        if pattern == "ends":
+            return tuple(i in (0, L // 2, L - 1) for i in range(L))
+        return tuple(False for _ in range(L))  # SWA everywhere
+
+    flags = flags_for(cfg.global_pattern)
+    static = cfg.window_size <= 0
+    groups: List[Group] = []
+    if cfg.is_encdec:
+        groups.append(Group("encoder", "enc", cfg.encoder_layers, None))
+        groups.append(Group("decoder", "dec", L, None, static_global=True, cross=True))
+        return groups
+    if cfg.family == "hybrid":
+        return [Group("hymba", "hymba", L, flags, static_global=static)]
+    if cfg.moe is not None:
+        fk = cfg.moe.first_k_dense
+        if fk:
+            d_ff = cfg.moe.dense_d_ff or cfg.d_ff
+            groups.append(Group("dense_prefix", "dec", fk, None, static_global=static))
+        gflags = None if flags is None else flags[fk:]
+        groups.append(Group("moe", "dec_moe", L - fk, gflags, static_global=static))
+        return groups
+    return [Group("layers", "dec", L, flags, static_global=static)]
+
+
+def _group_init_fn(g: Group, cfg: ModelConfig):
+    if g.kind in ("dec", "dec_moe"):
+        return functools.partial(
+            blocks.init_decoder_block, cfg=cfg, use_moe=g.kind == "dec_moe", cross=g.cross
+        )
+    if g.kind == "hymba":
+        return functools.partial(blocks.init_hymba_block, cfg=cfg)
+    if g.kind == "xlstm_pair":
+        return functools.partial(blocks.init_xlstm_pair, cfg=cfg)
+    if g.kind == "xlstm_m":
+        def init_m(key, cfg=cfg):
+            p, s = ssm.init_mlstm_block(key, cfg)
+            pn, sn = common.init_norm(cfg.d_model, cfg.norm_kind)
+            return {"m": p, "lnm": pn}, {"m": s, "lnm": sn}
+        return init_m
+    if g.kind == "enc":
+        return functools.partial(blocks.init_encoder_block, cfg=cfg)
+    raise ValueError(g.kind)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # full
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh=None, *, attn_impl: str = "chunked"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.attn_impl = attn_impl
+        self.groups = build_groups(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def _cast(self, params):
+        """Cast float params to compute dtype ONCE at step entry: the cast
+        runs on the local FSDP shard, so ZeRO-style weight all-gathers move
+        bf16, not f32 (2x collective bytes otherwise -- the convert would
+        land *after* the gather)."""
+        if self.dtype == jnp.float32:
+            return params
+        return jax.tree.map(
+            lambda a: a.astype(self.dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+            params,
+        )
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Tuple[Params, Specs]:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.groups) + 3)
+        pe, se = common.init_embed(keys[0], cfg.vocab_size, cfg.d_model, cfg.tie_embeddings)
+        params: Dict[str, Any] = {"embed": pe}
+        specs: Dict[str, Any] = {"embed": se}
+        pn, sn = common.init_norm(cfg.d_model, cfg.norm_kind)
+        params["final_norm"], specs["final_norm"] = pn, sn
+        if cfg.meta_tokens:
+            params["meta"] = common.trunc_normal(keys[1], (cfg.meta_tokens, cfg.d_model), 1.0)
+            specs["meta"] = (None, "fsdp")
+        for g, k in zip(self.groups, keys[2:]):
+            init_fn = _group_init_fn(g, self.cfg)
+            _, gspecs = init_fn(jax.random.PRNGKey(0))
+            gparams = jax.vmap(lambda kk: init_fn(kk)[0])(jax.random.split(k, g.count))
+            params[g.name] = gparams
+            specs[g.name] = _stack_specs(gspecs)
+        if cfg.mtp_depth > 0:
+            k = keys[-1]
+            km, kp = jax.random.split(k)
+            use_moe = cfg.moe is not None and cfg.moe.first_k_dense < cfg.num_layers
+            pb, sb = blocks.init_decoder_block(km, cfg, use_moe=use_moe)
+            params["mtp"] = {
+                "proj": common.dense_init(kp, (2 * cfg.d_model, cfg.d_model)),
+                "block": pb,
+                "norm_h": common.init_norm(cfg.d_model, cfg.norm_kind)[0],
+                "norm_e": common.init_norm(cfg.d_model, cfg.norm_kind)[0],
+            }
+            specs["mtp"] = {
+                "proj": ("fsdp", None),
+                "block": sb,
+                "norm_h": common.init_norm(cfg.d_model, cfg.norm_kind)[1],
+                "norm_e": common.init_norm(cfg.d_model, cfg.norm_kind)[1],
+            }
+        return params, specs
+
+    # ------------------------------------------------------------- embedding
+    def _embed_in(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+        else:
+            x = common.embed_tokens(params["embed"], batch["tokens"], self.dtype)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), self.dtype)
+        if cfg.is_encdec or cfg.rope_theta <= 0:
+            s = x.shape[1]
+            x = x + common.sinusoidal_positions(s, cfg.d_model, self.dtype)
+        if cfg.meta_tokens:
+            m = jnp.broadcast_to(
+                params["meta"].astype(self.dtype), (x.shape[0],) + params["meta"].shape
+            )
+            x = jnp.concatenate([m, x], axis=1)
+        return x
+
+    def _unemb_fn(self, params):
+        cfg = self.cfg
+
+        def f(x):
+            from repro.core.sharding import constrain
+
+            out = common.unembed(params["embed"], x, cfg.tie_embeddings)
+            if self.mesh is not None:
+                out = constrain(out, self.mesh, "batch", None, "vocab")
+            return out
+
+        return f
+
+    # ------------------------------------------------------------ group scan
+    def _run_group(self, g: Group, gparams, x, *, positions=None, enc_out=None):
+        cfg, mesh, impl = self.cfg, self.mesh, self.attn_impl
+
+        def body_fn(x, p, flag):
+            if g.kind == "enc":
+                return blocks.apply_encoder_block(p, x, cfg, impl=impl), jnp.zeros((), jnp.float32)
+            if g.kind in ("dec", "dec_moe"):
+                cross_kv = blocks.cross_kv_proj(p, enc_out, cfg) if g.cross else None
+                return blocks.apply_decoder_block(
+                    p, x, cfg, is_global=flag, use_moe=g.kind == "dec_moe",
+                    positions=positions, impl=impl, mesh=mesh, cross_kv=cross_kv,
+                )
+            if g.kind == "hymba":
+                y, _ = blocks.apply_hymba_block(
+                    p, x, cfg, is_global=flag, positions=positions, impl=impl, mesh=mesh
+                )
+                return y, jnp.zeros((), jnp.float32)
+            if g.kind == "xlstm_pair":
+                y, _ = blocks.apply_xlstm_pair(p, x, cfg, mesh=mesh)
+                return y, jnp.zeros((), jnp.float32)
+            if g.kind == "xlstm_m":
+                h = common.apply_norm(p["lnm"], x, cfg.norm_kind)
+                o, _ = ssm.apply_mlstm_block(p["m"], h, cfg)
+                return x + o, jnp.zeros((), jnp.float32)
+            raise ValueError(g.kind)
+
+        flags_arr = None if g.flags is None else jnp.asarray(g.flags)
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            if flags_arr is None:
+                p = xs
+                y, a = body_fn(x, p, g.static_global)
+            else:
+                p, flag = xs
+                y, a = body_fn(x, p, flag)
+            if mesh is not None:
+                from repro.core.sharding import constrain
+
+                # Megatron-style sequence parallelism: the scan carry is
+                # what remat saves per layer -- sharding its seq dim over
+                # the TP axis divides saved-activation HBM by TP width
+                # (the all-gather back to full seq happens inside the
+                # next layer's attention, where TP compute needs it).
+                seq_ax = "seq_act" if cfg.seq_parallel else None
+                y = constrain(y, mesh, "batch", seq_ax, None)
+            return (y, aux + a), None
+
+        scan_body = _remat(scan_body, cfg.remat)
+        xs = gparams if flags_arr is None else (gparams, flags_arr)
+        (x, aux), _ = lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+        return x, aux
+
+    # ---------------------------------------------------------------- trunk
+    def hidden(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Returns (final hidden (B, S[, +meta], d) normalized, aux loss)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.is_encdec:
+            enc = self._embed_in(params, {"embeds": batch["enc_embeds"]})
+            enc, a = self._run_group(self.groups[0], params[self.groups[0].name], enc)
+            aux += a
+            dec = common.embed_tokens(params["embed"], batch["tokens"], self.dtype)
+            dec = dec + common.sinusoidal_positions(dec.shape[1], cfg.d_model, self.dtype)
+            x, a = self._run_group(self.groups[1], params[self.groups[1].name], dec, enc_out=enc)
+            aux += a
+        else:
+            x = self._embed_in(params, batch)
+            positions = jnp.arange(x.shape[1])
+            for g in self.groups:
+                x, a = self._run_group(g, params[g.name], x, positions=positions)
+                aux += a
+        x = common.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        if cfg.meta_tokens:
+            x = x[:, cfg.meta_tokens :]
+        return x, aux
+
+    def logits(self, params, batch) -> jax.Array:
+        """Full logits -- small shapes only (tests / serving)."""
+        x, _ = self.hidden(params, batch)
+        out = self._unemb_fn(params)(x)
+        return common.softcap(out.astype(jnp.float32), self.cfg.final_logit_softcap)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x, aux = self.hidden(params, batch)
+        nll, zl = losses.chunked_xent(
+            x,
+            batch["labels"],
+            self._unemb_fn(params),
+            z_loss=1e-4,
+            final_softcap=cfg.final_logit_softcap,
+        )
+        total = nll + zl
+        metrics = {"nll": nll, "z_loss": zl}
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_weight * aux
+            metrics["moe_aux"] = aux
+        if cfg.mtp_depth > 0 and "tokens" in batch:
+            mtp_nll = jax.checkpoint(self._mtp_loss)(params, x, batch)
+            total = total + 0.3 * mtp_nll
+            metrics["mtp_nll"] = mtp_nll
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params, h, batch) -> jax.Array:
+        """DeepSeek MTP (depth 1): predict token t+2 from [h_t; emb(t+1)]."""
+        cfg = self.cfg
+        p = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        emb_next = common.embed_tokens(params["embed"], tokens[:, 1:], self.dtype)
+        hh = common.apply_norm(p["norm_h"], h[:, :-1], cfg.norm_kind)
+        ee = common.apply_norm(p["norm_e"], emb_next, cfg.norm_kind)
+        z = jnp.concatenate([hh, ee], axis=-1)
+        z = jnp.einsum("bsd,de->bse", z, p["proj"].astype(self.dtype))
+        use_moe = cfg.moe is not None and cfg.moe.first_k_dense < cfg.num_layers
+        z, _ = blocks.apply_decoder_block(
+            p["block"], z, cfg, is_global=True, use_moe=use_moe, impl=self.attn_impl,
+            mesh=self.mesh,
+        )
+        mtp_labels = labels[:, 1:]  # label at t+1 predicts token t+2
+        nll, _ = losses.chunked_xent(z, mtp_labels, self._unemb_fn(params))
+        return nll
+
+    # --------------------------------------------------------------- decode
+    def init_decode_state(self, b: int, s_max: int, cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        s_tot = s_max + cfg.meta_tokens
+        state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        for g in self.groups:
+            if g.kind == "enc":
+                continue
+            if g.kind in ("dec", "dec_moe"):
+                one = blocks.init_block_cache(cfg, b, s_tot, cache_dtype)
+                state[g.name] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (g.count,) + a.shape), one
+                )
+            elif g.kind == "hymba":
+                di = int(cfg.ssm.expand * cfg.d_model)
+                one = blocks.HymbaState(
+                    kv=attn_mod.init_kv_cache(b, s_tot, cfg.num_kv_heads, cfg.head_dim_, cache_dtype),
+                    mamba=ssm.init_mamba_state(b, di, cfg.ssm.state_dim, cfg.ssm.conv_dim),
+                )
+                state[g.name] = jax.tree.map(lambda a: jnp.broadcast_to(a, (g.count,) + a.shape), one)
+            elif g.kind in ("xlstm_pair", "xlstm_m"):
+                di = int(cfg.ssm.expand * cfg.d_model)
+                dh = di // cfg.num_heads
+                mb = ssm.MLSTMBlockState(
+                    cell=ssm.init_mlstm_state(b, cfg.num_heads, dh, dh),
+                    conv=jnp.zeros((b, 3, di), jnp.float32),
+                )
+                if g.kind == "xlstm_pair":
+                    one = blocks.XLSTMPairState(m=mb, s=ssm.init_slstm_state(b, cfg.d_model))
+                else:
+                    one = mb
+                state[g.name] = jax.tree.map(lambda a: jnp.broadcast_to(a, (g.count,) + a.shape), one)
+        return state
+
+    def prefill(self, params, batch, state) -> Tuple[Dict, jax.Array]:
+        """Run the prompt through the model, filling caches. Returns
+        (state, last-position logits (B, V))."""
+        cfg = self.cfg
+        params = self._cast(params)
+        if cfg.is_encdec:
+            return self._prefill_encdec(params, batch, state)
+        x = self._embed_in(params, batch)
+        positions = jnp.arange(x.shape[1])
+        for g in self.groups:
+            x, state[g.name] = self._prefill_group(g, params[g.name], x, state[g.name], positions)
+        x = common.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        state["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        logits = self._unemb_fn(params)(x[:, -1:])[:, 0]
+        return state, common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+    def _prefill_group(self, g: Group, gparams, x, gstate, positions):
+        cfg, impl, mesh = self.cfg, self.attn_impl, self.mesh
+        flags_arr = None if g.flags is None else jnp.asarray(g.flags)
+
+        def body(x, p, st, flag):
+            if g.kind in ("dec", "dec_moe"):
+                return blocks.prefill_decoder_block(
+                    p, x, cfg, st, is_global=flag, use_moe=g.kind == "dec_moe", impl=impl, mesh=mesh
+                )
+            if g.kind == "hymba":
+                return blocks.prefill_hymba_block(p, x, cfg, st, is_global=flag, impl=impl, mesh=mesh)
+            if g.kind == "xlstm_pair":
+                return blocks.apply_xlstm_pair(p, x, cfg, st)
+            if g.kind == "xlstm_m":
+                h = common.apply_norm(p["lnm"], x, cfg.norm_kind)
+                o, st2 = ssm.apply_mlstm_block(p["m"], h, cfg, st)
+                return x + o, st2
+            raise ValueError(g.kind)
+
+        def scan_body(x, xs):
+            if flags_arr is None:
+                p, st = xs
+                y, st2 = body(x, p, st, g.static_global)
+            else:
+                p, st, flag = xs
+                y, st2 = body(x, p, st, flag)
+            return y, st2
+
+        xs = (gparams, gstate) if flags_arr is None else (gparams, gstate, flags_arr)
+        x, new_state = lax.scan(scan_body, x, xs)
+        return x, new_state
+
+    def decode_step(self, params, tokens, state) -> Tuple[jax.Array, Dict]:
+        """tokens: (B, 1) -> (logits (B, V), new state)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        x = common.embed_tokens(params["embed"], tokens, self.dtype)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), self.dtype)
+        if cfg.is_encdec or cfg.rope_theta <= 0:
+            x = x + self._abs_pos(state["pos"])
+        for g in self.groups:
+            if g.kind == "enc":
+                continue
+            x, state[g.name] = self._decode_group(g, params[g.name], x, state[g.name], state)
+        x = common.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        state["pos"] = state["pos"] + 1
+        logits = self._unemb_fn(params)(x)[:, 0]
+        return common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap), state
+
+    def _abs_pos(self, pos):
+        cfg = self.cfg
+        half = cfg.d_model // 2
+        dim = jnp.arange(half, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / cfg.d_model)
+        return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :].astype(self.dtype)
+
+    def _decode_group(self, g: Group, gparams, x, gstate, full_state):
+        cfg, mesh = self.cfg, self.mesh
+        flags_arr = None if g.flags is None else jnp.asarray(g.flags)
+
+        def body(x, p, st, flag, cross_kv=None):
+            if g.kind in ("dec", "dec_moe"):
+                return blocks.decode_decoder_block(
+                    p, x, cfg, st, is_global=flag, use_moe=g.kind == "dec_moe", mesh=mesh,
+                    cross_kv=cross_kv,
+                )
+            if g.kind == "hymba":
+                return blocks.decode_hymba_block(p, x, cfg, st, is_global=flag)
+            if g.kind == "xlstm_pair":
+                return blocks.decode_xlstm_pair(p, x, cfg, st)
+            if g.kind == "xlstm_m":
+                h = common.apply_norm(p["lnm"], x, cfg.norm_kind)
+                o, st2 = ssm.decode_mlstm_block(p["m"], h, cfg, st)
+                return x + o, st2
+            raise ValueError(g.kind)
+
+        cross = full_state.get("cross") if g.cross else None
+
+        def scan_body(x, xs):
+            if cross is not None:
+                if flags_arr is None:
+                    p, st, ckv = xs
+                    y, st2 = body(x, p, st, g.static_global, cross_kv=ckv)
+                else:
+                    p, st, flag, ckv = xs
+                    y, st2 = body(x, p, st, flag, cross_kv=ckv)
+            elif flags_arr is None:
+                p, st = xs
+                y, st2 = body(x, p, st, g.static_global)
+            else:
+                p, st, flag = xs
+                y, st2 = body(x, p, st, flag)
+            return y, st2
+
+        if cross is not None:
+            xs = (gparams, gstate, cross) if flags_arr is None else (gparams, gstate, flags_arr, cross)
+        else:
+            xs = (gparams, gstate) if flags_arr is None else (gparams, gstate, flags_arr)
+        x, new_state = lax.scan(scan_body, x, xs)
+        return x, new_state
+
+    # -------------------------------------------------- whisper prefill path
+    def _prefill_encdec(self, params, batch, state):
+        cfg = self.cfg
+        enc = self._embed_in(params, {"embeds": batch["enc_embeds"]})
+        enc, _ = self._run_group(self.groups[0], params[self.groups[0].name], enc)
+        gdec = self.groups[1]
+
+        # per-layer cross K/V, precomputed once
+        def kv_one(p):
+            return blocks.cross_kv_proj(p, enc, self.cfg)
+
+        cross = jax.vmap(kv_one)(params[gdec.name])
+        state["cross"] = cross
+
+        dec = common.embed_tokens(params["embed"], batch["tokens"], self.dtype)
+        dec = dec + common.sinusoidal_positions(dec.shape[1], cfg.d_model, self.dtype)
+        gstate = state[gdec.name]
+        flags_arr = None
+
+        def scan_body(x, xs):
+            p, st, ckv = xs
+            y, st2 = blocks.prefill_decoder_block(
+                p, x, cfg, st, is_global=True, use_moe=False, impl=self.attn_impl,
+                mesh=self.mesh, cross_kv=ckv,
+            )
+            return y, st2
+
+        del flags_arr
+        x, state[gdec.name] = lax.scan(scan_body, dec, (params[gdec.name], gstate, cross))
+        x = common.apply_norm(params["final_norm"], x, cfg.norm_kind)
+        state["pos"] = jnp.asarray(dec.shape[1], jnp.int32)
+        logits = self._unemb_fn(params)(x[:, -1:])[:, 0]
+        return state, common.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)

@@ -1,0 +1,347 @@
+"""Mixture-of-Experts with strategy-switchable token dispatch.
+
+The expert all-to-all is the LM-side twin of the paper's FFT pencil
+exchange: every device ships (1 - 1/P) of its routed tokens. We provide
+the same strategy switch as core/transpose.py:
+
+``dispatch='einsum'`` (gspmd)
+    Sort-based capacity dispatch under jit + sharding constraints; XLA
+    emits its own (fused, synchronizing) collectives -- the paper's
+    all-to-all baseline.
+``dispatch='ring'``
+    Explicit shard_map island: the dispatch buffer is exchanged in P-1
+    direct ppermute hops and each arriving chunk runs its expert FFN
+    *immediately*, then returns on the reverse ring -- expert compute
+    hidden behind token communication (the paper's N-scatter, applied to
+    MoE). Falls back to gspmd when experts % shards != 0 (mixtral).
+``dispatch='dense'``
+    All experts on all tokens (tiny smoke configs only).
+
+Routing: softmax top-k with renormalization + load-balance aux loss.
+Capacity-based with drop (cf * tokens * k / E slots per expert), slot
+assignment via stable argsort (production-style; no (T,E,C) one-hots).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import common, mlp
+from repro.models.common import Params, Specs
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
+    mo: MoEConfig = cfg.moe
+    d = cfg.d_model
+    eff = mo.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, mo.num_experts)),
+        "wg": common.dense_init(ks[1], (mo.num_experts, d, eff)),
+        "wu": common.dense_init(ks[2], (mo.num_experts, d, eff)),
+        "wd": common.dense_init(ks[3], (mo.num_experts, eff, d)),
+    }
+    s = {
+        "router": ("fsdp", None),
+        "wg": ("experts", "fsdp", None),
+        "wu": ("experts", "fsdp", None),
+        "wd": ("experts", None, "fsdp"),
+    }
+    if mo.num_shared:
+        sp, ss = mlp.init_mlp(ks[4], d, eff * mo.num_shared, cfg.mlp_kind)
+        p["shared"] = sp
+        s["shared"] = ss
+    return p, s
+
+
+def router_topk(
+    x: jax.Array, wr: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (weights (T,k) f32, indices (T,k) i32, aux load-balance loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # GShard aux: E * sum_e (fraction routed to e) * (mean prob of e)
+    e = wr.shape[1]
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (T,k,E)
+    frac = onehot.sum(1).mean(0)  # (E,)
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return w, idx, aux
+
+
+def _expert_ffn(wg, wu, wd, x, kind: str) -> jax.Array:
+    """x: (..., C, d) for one expert's weight set."""
+    dt = x.dtype
+    if kind in mlp.GATED:
+        h = mlp._act(jnp.einsum("...cd,df->...cf", x, wg.astype(dt)), kind)
+        h = h * jnp.einsum("...cd,df->...cf", x, wu.astype(dt))
+    else:
+        h = mlp._act(jnp.einsum("...cd,df->...cf", x, wu.astype(dt)), kind)
+    return jnp.einsum("...cf,fd->...cd", h, wd.astype(dt))
+
+
+def _dispatch_indices(idx: jax.Array, e: int, cap: int):
+    """Stable-sort capacity assignment.
+
+    idx: (T, k) expert choices. Returns (order (A,), dest (A,), keep (A,))
+    where A = T*k; dest = expert*cap + slot for kept assignments.
+    """
+    t, k = idx.shape
+    a = t * k
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)  # token-priority within expert
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(a) - first[sorted_e]
+    keep = rank < cap
+    dest = sorted_e * cap + jnp.where(keep, rank, 0)
+    return order, dest, keep
+
+
+def _local_dispatch(x2d: jax.Array, idx: jax.Array, e: int, cap: int) -> Tuple[jax.Array, tuple]:
+    """Scatter tokens into the (E, cap, d) buffer; returns routing aux for
+    the combine step."""
+    t, k = idx.shape
+    order, dest, keep = _dispatch_indices(idx, e, cap)
+    tok = order // k
+    buf = jnp.zeros((e * cap, x2d.shape[-1]), x2d.dtype)
+    buf = buf.at[dest].add(x2d[tok] * keep[:, None].astype(x2d.dtype))
+    return buf.reshape(e, cap, -1), (order, dest, keep, tok)
+
+
+def _local_combine(
+    buf: jax.Array, w: jax.Array, routing: tuple, t: int
+) -> jax.Array:
+    order, dest, keep, tok = routing
+    k = w.shape[1]
+    flat_w = w.reshape(-1)[order]  # (A,) f32
+    y = buf.reshape(-1, buf.shape[-1])[dest]  # (A, d)
+    y = y * (flat_w * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((t, buf.shape[-1]), y.dtype)
+    return out.at[tok].add(y)
+
+
+def _capacity(tokens: int, k: int, e: int, cf: float) -> int:
+    return max(1, math.ceil(tokens * k * cf / e))
+
+
+# ---------------------------------------------------------------------------
+# gspmd (fused-collective) path
+# ---------------------------------------------------------------------------
+
+
+def _apply_moe_gspmd(p, x2d, cfg: ModelConfig, mesh=None) -> Tuple[jax.Array, jax.Array]:
+    """Capacity dispatch under jit + GSPMD, batched over DP groups.
+
+    Capacity must be computed from *per-group* token counts: dispatching
+    the global token set into one (E, C_global, d) buffer would make the
+    buffer (and the argsort) scale with the full batch (hundreds of TB at
+    deepseek train_4k). Each DP shard dispatches its own tokens; the
+    expert dim sharding then induces the all-to-all, exactly like the
+    explicit ring island -- but with XLA choosing the schedule (the
+    paper's fused-collective baseline)."""
+    mo = cfg.moe
+    t = x2d.shape[0]
+    g = 1
+    if mesh is not None:
+        for ax in ("pod", "data"):
+            if ax in mesh.shape:
+                g *= mesh.shape[ax]
+        if t % g:
+            g = 1
+    tl = t // g
+    cap = _capacity(tl, mo.top_k, mo.num_experts, mo.capacity_factor)
+    xg = x2d.reshape(g, tl, -1)
+
+    def one_group(xl):
+        w, idx, aux = router_topk(xl, p["router"], mo.top_k)
+        buf, routing = _local_dispatch(xl, idx, mo.num_experts, cap)
+        return w, buf, routing, aux
+
+    w, buf, routing, aux = jax.vmap(one_group)(xg)  # buf: (G, E, C, d)
+
+    def _buf_constrain(v):
+        # shape-aware: experts claim the TP axis when they divide it
+        # (deepseek 256); otherwise the capacity dim takes it (mixtral's
+        # 8 experts would leave the buffer TP-replicated: ~2 TB)
+        from jax.sharding import NamedSharding
+        from repro.core.sharding import resolve
+
+        spec = resolve(mesh, "batch", "experts", "expert_cap", None, shape=v.shape)
+        return jax.lax.with_sharding_constraint(v, NamedSharding(mesh, spec))
+
+    if mesh is not None and mesh.size > 1:
+        buf = _buf_constrain(buf)
+    dt = x2d.dtype
+    if cfg.mlp_kind in mlp.GATED:
+        h = mlp._act(jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(dt)), cfg.mlp_kind)
+        h = h * jnp.einsum("gecd,edf->gecf", buf, p["wu"].astype(dt))
+    else:
+        h = mlp._act(jnp.einsum("gecd,edf->gecf", buf, p["wu"].astype(dt)), cfg.mlp_kind)
+    y = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dt))
+    if mesh is not None and mesh.size > 1:
+        y = _buf_constrain(y)
+    out = jax.vmap(lambda yb, wb, rt: _local_combine(yb, wb, rt, tl))(y, w, routing)
+    return out.reshape(t, -1), aux.mean()
+
+
+# ---------------------------------------------------------------------------
+# dense (smoke) path
+# ---------------------------------------------------------------------------
+
+
+def _apply_moe_dense(p, x2d, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    mo = cfg.moe
+    w, idx, aux = router_topk(x2d, p["router"], mo.top_k)
+    all_y = jax.vmap(
+        lambda wg, wu, wd: _expert_ffn(wg, wu, wd, x2d, cfg.mlp_kind)
+    )(p["wg"], p["wu"], p["wd"])  # (E, T, d)
+    onehot = jax.nn.one_hot(idx, mo.num_experts, dtype=jnp.float32)  # (T,k,E)
+    gate = jnp.einsum("tk,tke->te", w, onehot)  # (T,E)
+    out = jnp.einsum("te,etd->td", gate.astype(x2d.dtype), all_y)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# explicit ring path (shard_map island) -- the paper's technique
+# ---------------------------------------------------------------------------
+
+
+def _ring_exchange_ffn(
+    wg, wu, wd, buf, kind: str, axis_name: str, *, interleave: bool = False
+) -> jax.Array:
+    """buf: (P, E_loc, C, d) local dispatch buffer grouped by destination
+    rank; wg/wu/wd are this rank's local expert weights (E_loc, ...).
+    Chunk s ships *directly* to rank me+s (P-1 independent sends -- the
+    paper's N-scatter decomposition; XLA overlaps them as async
+    collective-permutes), results return on the mirrored ring.
+
+    Default (interleave=False): one batched FFN over all received chunks.
+    The per-arrival FFN variant (interleave=True, the paper's literal
+    'compute each chunk as it lands') produces P independent weight
+    cotangents that XLA keeps live simultaneously in the backward --
+    ~40 GB/layer at deepseek scale -- so training uses the batched form
+    (identical bytes on the wire, bigger MXU matmuls, one cotangent).
+    """
+    pn = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+
+    def ffn(chunk):  # (..., E_loc, C, d) with my local experts
+        return jax.vmap(lambda g, u, dn, b: _expert_ffn(g, u, dn, b, kind))(wg, wu, wd, chunk)
+
+    if interleave:
+        out = jnp.zeros_like(buf)
+        own = jnp.take(buf, me, axis=0)
+        out = lax.dynamic_update_slice_in_dim(out, ffn(own)[None], me, axis=0)
+        for s in range(1, pn):
+            fwd = [(i, (i + s) % pn) for i in range(pn)]
+            rev = [(i, (i - s) % pn) for i in range(pn)]
+            send = jnp.take(buf, (me + s) % pn, axis=0)
+            recv = lax.ppermute(send, axis_name, fwd)
+            done = ffn(recv)  # compute on arrival
+            back = lax.ppermute(done, axis_name, rev)
+            out = lax.dynamic_update_slice_in_dim(out, back[None], (me + s) % pn, axis=0)
+        return out
+
+    # phase 1: direct-send exchange (independent sends overlap)
+    e_loc, cap, d = buf.shape[1:]
+    recv_stack = jnp.zeros_like(buf)  # slot s = tokens from rank me-s
+    own = jnp.take(buf, me, axis=0)
+    recv_stack = lax.dynamic_update_slice_in_dim(recv_stack, own[None], 0, axis=0)
+    for s in range(1, pn):
+        fwd = [(i, (i + s) % pn) for i in range(pn)]
+        send = jnp.take(buf, (me + s) % pn, axis=0)
+        recv = lax.ppermute(send, axis_name, fwd)
+        recv_stack = lax.dynamic_update_slice_in_dim(recv_stack, recv[None], s, axis=0)
+    # phase 2: one batched FFN: (P, E_loc, C, d) -> (E_loc, P*C, d)
+    grouped = recv_stack.swapaxes(0, 1).reshape(e_loc, pn * cap, d)
+    done = ffn(grouped).reshape(e_loc, pn, cap, d).swapaxes(0, 1)
+    # phase 3: direct-send results home
+    out = jnp.zeros_like(buf)
+    out = lax.dynamic_update_slice_in_dim(out, jnp.take(done, 0, axis=0)[None], me, axis=0)
+    for s in range(1, pn):
+        rev = [(i, (i - s) % pn) for i in range(pn)]
+        back = lax.ppermute(jnp.take(done, s, axis=0), axis_name, rev)
+        out = lax.dynamic_update_slice_in_dim(out, back[None], (me + s) % pn, axis=0)
+    return out
+
+
+def _apply_moe_ring(p, x, cfg: ModelConfig, mesh, axis_name: str = "model"):
+    """x: (B, S, d) with S sharded over ``axis_name`` inside the island
+    (sequence-parallel MoE, DeepSeek-style EP)."""
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    b, s, d = x.shape
+    pn = mesh.shape[axis_name]
+    e_loc = mo.num_experts // pn
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+
+    def island(xl, router, wg, wu, wd):
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        x2d = xl.reshape(t, d)
+        cap = _capacity(t, mo.top_k, mo.num_experts, mo.capacity_factor)
+        w, idx, aux = router_topk(x2d, router, mo.top_k)
+        buf, routing = _local_dispatch(x2d, idx, mo.num_experts, cap)
+        buf = buf.reshape(pn, e_loc, cap, d)
+        y = _ring_exchange_ffn(wg, wu, wd, buf, cfg.mlp_kind, axis_name)
+        out = _local_combine(y.reshape(mo.num_experts, cap, d), w, routing, t)
+        return out.reshape(bl, sl, d), lax.pmean(aux, axis_name)
+
+    x_spec = P(batch_axes, axis_name, None)
+    e_spec = P(axis_name, None, None)
+    return jax.shard_map(
+        island,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), e_spec, e_spec, e_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+
+def apply_moe(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,d), aux loss scalar)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    dispatch = mo.dispatch
+    if dispatch == "ring":
+        pn = mesh.shape.get("model", 1) if mesh is not None else 1
+        if mesh is None or pn == 1 or mo.num_experts % pn or s % pn:
+            dispatch = "einsum"  # divisibility fallback (DESIGN §Arch-applicability)
+        else:
+            # checkpoint the island: shard_map residuals are opaque to the
+            # outer scan remat, so without this every layer would SAVE its
+            # (E, C, d) dispatch buffers (~1.4 GB/layer at deepseek scale).
+            ring = jax.checkpoint(lambda pp, xx: _apply_moe_ring(pp, xx, cfg, mesh))
+            out, aux = ring(p, x)
+            if mo.num_shared:
+                out = out + mlp.apply_mlp(p["shared"], x, cfg.mlp_kind)
+            return out, aux
+    x2d = x.reshape(b * s, d)
+    if dispatch == "dense":
+        out, aux = _apply_moe_dense(p, x2d, cfg)
+    else:
+        out, aux = _apply_moe_gspmd(p, x2d, cfg, mesh)
+    out = out.reshape(b, s, d)
+    if mo.num_shared:
+        out = out + mlp.apply_mlp(p["shared"], x, cfg.mlp_kind)
+    return out, aux

@@ -1,0 +1,3 @@
+from repro.optim import adamw, compress, schedule
+
+__all__ = ["adamw", "compress", "schedule"]

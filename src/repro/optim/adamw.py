@@ -1,0 +1,84 @@
+"""AdamW with dtype-configurable state (HBM relief at 671B scale).
+
+State is sharded exactly like the params (same logical specs), so FSDP
+keeps optimizer memory per-device at (2 * state_bytes / chips). With
+``opt_state_dtype='bfloat16'`` the m/v moments halve again -- the knob
+that lets deepseek-v3-671b train on a 512-chip v5e slice (DESIGN.md §5,
+EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params, dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+
+
+def state_specs(param_specs) -> AdamWState:
+    """Optimizer-state sharding mirrors the params."""
+    return AdamWState(count=((),), mu=param_specs, nu=param_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: jax.Array,
+    cfg: TrainConfig,
+) -> Tuple[Any, AdamWState]:
+    c = state.count + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(count=c, mu=new_m, nu=new_v)

@@ -1,0 +1,75 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization with
+error feedback.
+
+At 512+ chips the data-parallel gradient reduce-scatter is the largest
+recurring collective. Within a pod the ICI is fast; *between* pods the
+per-link budget is the bottleneck, so we compress the cross-pod leg:
+
+    q = round(g / scale) in int8, scale = max|g| / 127 (per tensor)
+    residual e <- g - q * scale carried to the next step (error feedback,
+    keeps SGD convergence despite biased rounding)
+
+``compressed_psum`` is the shard_map building block; the decomposed-ring
+variant reuses core/overlap.py's reduce-scatter/all-gather rings over the
+int8 payload -- the paper's decomposed-collective idea applied to the
+optimizer's communication (4x fewer bytes x overlappable hops).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(
+    g: jax.Array, axis_name: str, err: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce (mean) over ``axis_name``.
+
+    Returns (reduced mean gradient f32, new error residual). Must run
+    inside shard_map. The int8 payload is psum'd as int32 (exact), the
+    per-device scales are gathered so dequantization is exact per source.
+    """
+    gf = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(gf)
+    new_err = gf - dequantize_int8(q, scale)
+    # Ship int8 on the wire: all-gather the quantized payload + per-device
+    # scales ((P-1)/P * 1 byte/elem vs 2(P-1)/P * 4 for a f32 ring
+    # all-reduce = 8x fewer ICI bytes), dequantize-and-sum locally.
+    n = lax.axis_size(axis_name)
+    q_all = lax.all_gather(q, axis_name)  # (P, ...) int8 on the wire
+    s_all = lax.all_gather(scale, axis_name)  # (P,) f32 (negligible)
+    total = jnp.tensordot(
+        s_all, q_all.astype(jnp.float32).reshape(n, -1), axes=1
+    ).reshape(g.shape)
+    return total / n, new_err
+
+
+def compressed_psum_tree(grads, axis_name: str, errs):
+    """Tree version; errs mirrors grads (f32 residuals)."""
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(errs)
+    out, new_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        r, e2 = compressed_psum(g, axis_name, e)
+        out.append(r.astype(g.dtype))
+        new_e.append(e2)
+    return td.unflatten(out), td.unflatten(new_e)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,7 @@
+from repro.runtime.elastic import FailureInjector, SimulatedFailure, elastic_mesh, run_with_recovery
+from repro.runtime.monitor import StepMonitor, StepStats
+
+__all__ = [
+    "FailureInjector", "SimulatedFailure", "StepMonitor", "StepStats",
+    "elastic_mesh", "run_with_recovery",
+]

@@ -1,0 +1,79 @@
+"""Failure recovery + elastic re-scale orchestration.
+
+``run_with_recovery`` wraps a training loop in the restart contract:
+on any failure (device loss, preemption, injected fault) it restores the
+latest checkpoint and resumes, up to ``max_restarts``. Because the data
+pipeline is a pure function of step (data/pipeline.py) and checkpoints
+are mesh-agnostic (checkpoint/manager.py), the resumed run is bitwise
+consistent with an uninterrupted one (asserted by tests), and a restart
+may come back on a *different* device count -- ``elastic_mesh`` picks
+the largest valid mesh for whatever is alive.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+log = logging.getLogger("repro.runtime")
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests / chaos hooks to simulate node loss."""
+
+
+class FailureInjector:
+    """Raises SimulatedFailure the first time ``step == at_step``."""
+
+    def __init__(self, at_step: Optional[int] = None):
+        self.at_step = at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if self.at_step is not None and step == self.at_step and not self.fired:
+            self.fired = True
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def elastic_mesh(axis_names=("data", "model"), *, model_parallel: int = 1):
+    """Build the largest mesh available right now (restart may see fewer
+    hosts). model_parallel is fixed by the checkpointed layout; the data
+    axis absorbs whatever devices remain."""
+    n = len(jax.devices())
+    if n % model_parallel:
+        raise ValueError(f"{n} devices not divisible by model_parallel={model_parallel}")
+    from jax.sharding import Mesh
+
+    devs = np.asarray(jax.devices()).reshape(n // model_parallel, model_parallel)
+    return Mesh(devs, axis_names)
+
+
+def run_with_recovery(
+    loop_fn: Callable[[Optional[int]], None],
+    *,
+    max_restarts: int = 3,
+    backoff_s: float = 0.0,
+    on_restart: Optional[Callable[[int, Exception], None]] = None,
+):
+    """loop_fn(resume_step) runs until completion or raises. Returns the
+    number of restarts consumed."""
+    restarts = 0
+    resume_step = None
+    while True:
+        try:
+            loop_fn(resume_step)
+            return restarts
+        except Exception as e:  # noqa: BLE001 -- recovery boundary
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log.warning("run failed (%s); restart %d/%d", e, restarts, max_restarts)
+            if on_restart is not None:
+                on_restart(restarts, e)
+            if backoff_s:
+                time.sleep(backoff_s)
+            resume_step = -1  # sentinel: loop_fn restores latest checkpoint

@@ -1,0 +1,68 @@
+"""Step-time monitoring + straggler detection.
+
+On an SPMD TPU fleet every chip executes the same program, so classic
+work-stealing does not apply; the operable levers are (a) detecting that
+steps are slower than the fleet baseline (failing HBM, thermal throttle,
+a slow host input pipeline), (b) flagging the offender for the scheduler
+to cordon, and (c) keeping the input pipeline ahead of the device so a
+slow host never blocks the collective. This module implements the
+detection half; launch/train.py wires it to logging + the recovery loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StepStats:
+    step: int
+    seconds: float
+    tokens: int
+    flagged: bool
+
+
+class StepMonitor:
+    def __init__(self, *, ema_alpha: float = 0.1, straggler_factor: float = 2.0, warmup: int = 3):
+        self.ema: Optional[float] = None
+        self.alpha = ema_alpha
+        self.factor = straggler_factor
+        self.warmup = warmup
+        self.history: List[StepStats] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, *, tokens: int = 0) -> StepStats:
+        dt = time.perf_counter() - self._t0
+        flagged = False
+        if len(self.history) >= self.warmup and self.ema is not None:
+            flagged = dt > self.factor * self.ema
+        if self.ema is None:
+            self.ema = dt
+        elif not flagged:  # don't let outliers poison the baseline
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        st = StepStats(self._step, dt, tokens, flagged)
+        self.history.append(st)
+        self._step += 1
+        return st
+
+    @property
+    def tokens_per_sec(self) -> float:
+        recent = self.history[-10:]
+        tok = sum(s.tokens for s in recent)
+        sec = sum(s.seconds for s in recent)
+        return tok / sec if sec else 0.0
+
+    def straggler_report(self) -> dict:
+        flags = [s for s in self.history if s.flagged]
+        return {
+            "steps": len(self.history),
+            "flagged": len(flags),
+            "ema_s": self.ema,
+            "worst": max((s.seconds for s in self.history), default=0.0),
+        }

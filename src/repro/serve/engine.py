@@ -1,0 +1,128 @@
+"""Batched serving engine: slot-based continuous batching (lite).
+
+A fixed pool of ``max_batch`` slots shares one stacked decode state.
+Requests prefill into a free slot (batch=1 prefill, cache rows inserted
+at the slot index); every ``step()`` decodes all active slots together;
+finished slots are freed for the next request. Greedy or temperature
+sampling. This is the standard orchestration shape of production
+engines (vLLM-style, minus paging) and is exactly what ``serve_step``
+lowers for the decode_* dry-run shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _tree_set_slot(state, slot_state, idx: int, batch_axis_of=None):
+    """Insert a batch=1 sub-state into batch row ``idx`` of the pool state.
+
+    Leaves are (L, B, ...) stacked per layer; slot leaves are (L, 1, ...).
+    Scalar leaves (pos counters) are shared across slots and skipped.
+    """
+
+    def upd(pool, one):
+        if pool.ndim < 2 or pool.shape[:1] != one.shape[:1]:
+            return pool
+        return jax.lax.dynamic_update_slice_in_dim(pool, one.astype(pool.dtype), idx, axis=1)
+
+    return jax.tree.map(upd, state, slot_state)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, scfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.cfg = model.cfg
+        b, s = scfg.max_batch, scfg.max_seq
+        self.state = model.init_decode_state(b, s)
+        # per-slot bookkeeping (host side)
+        self.slots: List[Optional[Request]] = [None] * b
+        self.slot_pos = np.zeros(b, np.int32)  # valid length per slot
+        self._uid = 0
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    # ------------------------------------------------------------- requests
+    def add_request(self, prompt: np.ndarray, max_new: int = 32) -> Optional[int]:
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return None
+        req = Request(self._uid, np.asarray(prompt, np.int32), max_new)
+        self._uid += 1
+        # batch-1 prefill into a scratch state, then insert at slot
+        scratch = self.model.init_decode_state(1, self.scfg.max_seq)
+        scratch, logits = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt[None, :])}, scratch
+        )
+        self.state = _tree_set_slot(self.state, scratch, slot)
+        self.slot_pos[slot] = req.prompt.shape[0] + self.cfg.meta_tokens
+        first = int(jnp.argmax(logits[0]))
+        req.out.append(first)
+        self.slots[slot] = req
+        return slot
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        tokens = np.zeros((self.scfg.max_batch, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].out[-1]
+        # shared pos counter: slots decode in lockstep from the pool's pos;
+        # per-slot validity handled by kv_valid_len = slot cache length.
+        self.state["pos"] = jnp.asarray(int(self.slot_pos[active].max()), jnp.int32)
+        logits, self.state = self._decode(self.params, jnp.asarray(tokens), self.state)
+        if self.scfg.temperature > 0:
+            key = jax.random.PRNGKey(int(self._uid) + int(self.slot_pos.sum()))
+            nxt = jax.random.categorical(key, logits / self.scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = np.asarray(nxt)
+        finished = []
+        for i in active:
+            r = self.slots[i]
+            r.out.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if len(r.out) >= r.max_new or self.slot_pos[i] >= self.scfg.max_seq - 1:
+                r.done = True
+                finished.append(r)
+                self.slots[i] = None
+        return finished
+
+    def run(self, prompts: List[np.ndarray], max_new: int = 32) -> Dict[int, List[int]]:
+        """Convenience driver: serve all prompts to completion."""
+        results: Dict[int, List[int]] = {}
+        pending = list(prompts)
+        submitted = {}
+        while pending or any(s is not None for s in self.slots):
+            while pending:
+                slot = self.add_request(pending[0], max_new)
+                if slot is None:
+                    break
+                submitted[self.slots[slot].uid] = True
+                pending.pop(0)
+            for r in self.step():
+                results[r.uid] = r.out
+        return results

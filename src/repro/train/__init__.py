@@ -1,0 +1,16 @@
+from repro.train.step import (
+    DDPState,
+    TrainState,
+    init_ddp_state,
+    init_train_state,
+    jit_train_step,
+    make_ddp_compressed_step,
+    make_train_step,
+    state_shardings,
+)
+
+__all__ = [
+    "DDPState", "TrainState", "init_ddp_state", "init_train_state",
+    "jit_train_step", "make_ddp_compressed_step", "make_train_step",
+    "state_shardings",
+]

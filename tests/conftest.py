@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here -- smoke tests and benches
+must see the 1 real device; multi-device tests spawn subprocesses that
+set --xla_force_host_platform_device_count themselves."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet with N host-platform devices; returns stdout.
+    The snippet should print 'PASS' lines / raise on failure."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,189 @@
+"""Attention unit tests: chunked/flash vs naive, masks, GQA, MLA, ragged
+decode, flash custom-vjp gradients."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models.attention import AttnSpec
+
+
+def _qkv(rng, b, s, h, kvh, d, dtype=np.float32):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, d)), dtype)
+    return q, k, v
+
+
+SPECS = [
+    AttnSpec(causal=True),
+    AttnSpec(causal=True, window=16),
+    AttnSpec(causal=True, softcap=30.0),
+    AttnSpec(causal=True, window=12, prefix=4),
+    AttnSpec(causal=False),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_chunked_matches_naive(rng, spec):
+    q, k, v = _qkv(rng, 2, 48, 4, 2, 16)
+    ref = A.attention_naive(q, k, v, spec)
+    got = A.attention_chunked(q, k, v, spec, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", SPECS[:4])
+def test_flash_matches_naive_fwd_and_grad(rng, spec):
+    q, k, v = _qkv(rng, 1, 64, 4, 4, 8)
+    ref = A.attention_naive(q, k, v, spec)
+    got = A.flash_attention_train(q, k, v, spec, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+    def loss_ref(q, k, v):
+        return (A.attention_naive(q, k, v, spec) ** 2).sum()
+
+    def loss_fl(q, k, v):
+        return (A.flash_attention_train(q, k, v, spec, kv_chunk=16) ** 2).sum()
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(loss_fl, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_gqa_group_broadcast(rng):
+    """GQA with kvh < h must equal MHA with repeated KV heads."""
+    b, s, h, kvh, d = 1, 24, 4, 2, 8
+    q, k, v = _qkv(rng, b, s, h, kvh, d)
+    spec = AttnSpec(causal=True)
+    got = A.attention_naive(q, k, v, spec)
+    k_rep = jnp.repeat(k, h // kvh, axis=2)
+    v_rep = jnp.repeat(v, h // kvh, axis=2)
+    # repeat pattern: groups are contiguous per kv head
+    qg = q.reshape(b, s, kvh, h // kvh, d).reshape(b, s, h, d)
+    exp = A.attention_naive(qg, k_rep, v_rep, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_matches_full(rng):
+    cfg = get_config("qwen2.5-32b", reduced=True)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p, _ = A.init_attention(key, cfg)
+    x = jnp.asarray(rng.standard_normal((2, 12, cfg.d_model)), jnp.float32)
+    spec = AttnSpec(causal=True)
+    full = A.apply_attention(p, x, cfg, spec, impl="chunked")
+    cache = A.init_kv_cache(2, 32, cfg.num_kv_heads, cfg.head_dim_, jnp.float32)
+    out_pre, cache = A.prefill_attention(p, x[:, :11], cache, cfg, spec)
+    np.testing.assert_allclose(np.asarray(out_pre), np.asarray(full[:, :11]), rtol=2e-3, atol=1e-4)
+    step_out, cache = A.decode_attention(p, x[:, 11:12], cache, cfg, spec)
+    np.testing.assert_allclose(np.asarray(step_out), np.asarray(full[:, 11:12]), rtol=2e-3, atol=2e-4)
+    assert int(cache.length[0]) == 12
+
+
+def test_ragged_decode_rows(rng):
+    """Rows at different cache positions decode like their aligned runs."""
+    cfg = get_config("qwen2.5-32b", reduced=True)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p, _ = A.init_attention(jax.random.PRNGKey(0), cfg)
+    spec = AttnSpec(causal=True)
+    x_a = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    x_b = jnp.asarray(rng.standard_normal((1, 5, cfg.d_model)), jnp.float32)
+    # per-row reference: each prompt processed alone
+    ca = A.init_kv_cache(1, 32, cfg.num_kv_heads, cfg.head_dim_, jnp.float32)
+    _, ca = A.prefill_attention(p, x_a, ca, cfg, spec)
+    cb = A.init_kv_cache(1, 32, cfg.num_kv_heads, cfg.head_dim_, jnp.float32)
+    _, cb = A.prefill_attention(p, x_b, cb, cfg, spec)
+    xa_new = jnp.asarray(rng.standard_normal((1, 1, cfg.d_model)), jnp.float32)
+    xb_new = jnp.asarray(rng.standard_normal((1, 1, cfg.d_model)), jnp.float32)
+    oa, _ = A.decode_attention(p, xa_new, ca, cfg, spec)
+    ob, _ = A.decode_attention(p, xb_new, cb, cfg, spec)
+    # batched ragged cache: row0 at len 8, row1 at len 5
+    batched = A.KVCache(
+        k=jnp.concatenate([ca.k, cb.k], axis=0),
+        v=jnp.concatenate([ca.v, cb.v], axis=0),
+        length=jnp.asarray([8, 5], jnp.int32),
+    )
+    x_new = jnp.concatenate([xa_new, xb_new], axis=0)
+    out, newc = A.decode_attention(p, x_new, batched, cfg, spec)
+    np.testing.assert_allclose(np.asarray(out[0:1]), np.asarray(oa), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1:2]), np.asarray(ob), rtol=1e-4, atol=1e-5)
+    assert newc.length.tolist() == [9, 6]
+
+
+def test_mla_prefill_decode_exact(rng):
+    import dataclasses
+
+    cfg = get_config("deepseek-v3-671b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p, _ = A.init_mla(jax.random.PRNGKey(0), cfg)
+    spec = AttnSpec(causal=True)
+    x = jnp.asarray(rng.standard_normal((2, 10, cfg.d_model)), jnp.float32)
+    full = A.apply_mla(p, x, cfg, spec, impl="chunked")
+    cache = A.init_mla_cache(2, 32, cfg.mla, jnp.float32)
+    out9, cache = A.prefill_mla(p, x[:, :9], cache, cfg, spec)
+    np.testing.assert_allclose(np.asarray(out9), np.asarray(full[:, :9]), rtol=2e-3, atol=1e-4)
+    dec, cache = A.decode_mla(p, x[:, 9:10], cache, cfg, spec)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 9:10]), rtol=2e-3, atol=2e-4)
+
+
+def test_softcap_bounds(rng):
+    from repro.models.common import softcap
+
+    x = jnp.asarray(rng.standard_normal((100,)) * 1000, jnp.float32)
+    capped = softcap(x, 50.0)
+    assert float(jnp.abs(capped).max()) <= 50.0
+    small = jnp.asarray([0.1, -0.1])
+    np.testing.assert_allclose(np.asarray(softcap(small, 50.0)), np.asarray(small), atol=1e-4)
+
+
+FLASH_DECODE_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType, PartitionSpec as P
+from repro.models import attention as A
+
+mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+B, S, H, D = 2, 64, 4, 16
+q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+ref = A.attention_naive(q, k, v, A.AttnSpec(causal=False))
+
+def shard_fn(q, k, v):
+    # per-shard partial online softmax over the local KV slice
+    import math
+    s = jnp.einsum("bqhd,bkhd->bhqk", q / math.sqrt(D), k)[:, :, 0]  # (B,H,Kloc)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v)[:, None].swapaxes(1, 1)  # (B,1?,H,D)
+    out = out[:, None, :, :] if out.ndim == 3 else out
+    return A.flash_decode_combine(out, m, l, "data")
+
+got = jax.jit(jax.shard_map(
+    shard_fn, mesh=mesh,
+    in_specs=(P(), P(None, "data"), P(None, "data")),
+    out_specs=P(), check_vma=False,
+))(q, k, v)
+err = float(jnp.abs(got - ref).max())
+assert err < 1e-4, err
+print("PASS flash_decode_combine", err)
+"""
+
+
+@pytest.mark.slow
+def test_flash_decode_combine_seqshard():
+    """Distributed decode over sequence-sharded KV: per-shard partial
+    softmax + the two-psum combine equals single-device attention."""
+    from conftest import run_subprocess
+
+    out = run_subprocess(FLASH_DECODE_CODE, devices=4)
+    assert "PASS" in out

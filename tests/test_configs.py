@@ -1,0 +1,106 @@
+"""Config registry: completeness, exact assigned numbers, param counts."""
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, apply_overrides, get_config
+from repro.models.model import build_groups
+
+EXPECTED = {
+    # arch -> (L, d_model, H, kv, d_ff, vocab)
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+    "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+}
+
+#: loose total-param sanity bands (analytic count vs the model's name)
+PARAM_BANDS = {
+    "phi-3-vision-4.2b": (3e9, 6e9),
+    "mixtral-8x22b": (110e9, 180e9),
+    "deepseek-v3-671b": (550e9, 800e9),
+    "qwen2.5-32b": (25e9, 40e9),
+    "gemma2-9b": (7e9, 13e9),
+    "nemotron-4-15b": (12e9, 20e9),
+    "phi3-medium-14b": (11e9, 18e9),
+    "xlstm-1.3b": (0.8e9, 2.2e9),
+    "hymba-1.5b": (0.9e9, 2.4e9),
+    "whisper-medium": (0.25e9, 1.2e9),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_numbers(arch):
+    cfg = ARCHS[arch]
+    L, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+@pytest.mark.parametrize("arch", sorted(PARAM_BANDS))
+def test_param_count_band(arch):
+    lo, hi = PARAM_BANDS[arch]
+    n = ARCHS[arch].param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+
+def test_deepseek_active_params():
+    cfg = ARCHS["deepseek-v3-671b"]
+    active = cfg.active_param_count()
+    assert 25e9 <= active <= 60e9  # ~37B active in the paper
+
+
+def test_reduced_configs_share_family():
+    for arch in ARCHS:
+        full, red = get_config(arch), get_config(arch, reduced=True)
+        assert full.family == red.family
+        assert (full.moe is None) == (red.moe is None)
+        assert (full.mla is None) == (red.mla is None)
+        assert red.d_model <= 128
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_overrides():
+    cfg = apply_overrides(ARCHS["qwen2.5-32b"], {"num_layers": "2", "dtype": "float32"})
+    assert cfg.num_layers == 2 and cfg.dtype == "float32"
+    with pytest.raises(KeyError):
+        apply_overrides(cfg, {"nonsense": "1"})
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_groups_cover_all_layers(arch):
+    cfg = ARCHS[arch]
+    groups = build_groups(cfg)
+    per_layer = {"xlstm_pair": 2}
+    total = sum(g.count * per_layer.get(g.kind, 1) for g in groups if g.kind != "enc")
+    assert total == cfg.num_layers
+    if cfg.is_encdec:
+        enc = sum(g.count for g in groups if g.kind == "enc")
+        assert enc == cfg.encoder_layers
+
+
+def test_long_context_flags():
+    assert ARCHS["xlstm-1.3b"].supports_long_context
+    assert ARCHS["hymba-1.5b"].supports_long_context
+    assert not ARCHS["qwen2.5-32b"].supports_long_context
+    assert not ARCHS["gemma2-9b"].supports_long_context  # global layers are full attn

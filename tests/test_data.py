@@ -1,0 +1,70 @@
+"""Data pipeline: determinism, resumability, host sharding, prefetch."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+
+
+def _ds(**kw):
+    cfg = DataConfig(vocab_size=256, seq_len=32, global_batch=8, **kw)
+    return SyntheticLM(cfg)
+
+
+def test_batch_is_pure_function_of_step():
+    ds = _ds()
+    a = ds.batch_at(7)
+    b = ds.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_next_tokens():
+    ds = _ds(noise=0.0)
+    b = ds.batch_at(0)
+    # with zero noise, sequence is affine: labels = roll of tokens
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=8)
+    d0 = SyntheticLM(cfg, process_index=0, process_count=2)
+    d1 = SyntheticLM(cfg, process_index=1, process_count=2)
+    b0, b1 = d0.batch_at(3), d1.batch_at(3)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_prefetcher_order_and_resume():
+    ds = _ds()
+    pf = Prefetcher(ds, start_step=5, depth=2)
+    try:
+        s1, b1 = pf.next()
+        s2, b2 = pf.next()
+        assert (s1, s2) == (5, 6)
+        np.testing.assert_array_equal(b1["tokens"], ds.batch_at(5)["tokens"])
+    finally:
+        pf.stop()
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 1000))
+def test_tokens_in_vocab(step, seed):
+    ds = SyntheticLM(DataConfig(vocab_size=100, seq_len=8, global_batch=2, seed=seed))
+    b = ds.batch_at(step)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+    assert b["tokens"].dtype == np.int32
+
+
+def test_learnable_structure():
+    """Low-noise stream must be predictable: next token correlates with
+    an affine continuation (sanity for the e2e loss-decrease test)."""
+    ds = _ds(noise=0.0)
+    b = ds.batch_at(0)
+    t = b["tokens"].astype(np.int64)
+    stride = (t[:, 1] - t[:, 0]) % 256
+    pred = (t[:, 1:] + stride[:, None]) % 256
+    acc = (pred[:, :-1] == t[:, 2:]).mean()
+    assert acc > 0.99

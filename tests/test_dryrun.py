@@ -1,0 +1,31 @@
+"""Dry-run machinery on reduced configs (subprocess: needs 512 host
+devices + the production meshes). Full-size cells run via
+``python -m repro.launch.dryrun --all`` (EXPERIMENTS.md §Dry-run)."""
+
+import pytest
+
+from conftest import run_subprocess
+
+CODE = r"""
+import sys
+sys.argv = ["dryrun"]
+from repro.launch import dryrun
+
+for arch, shape in [
+    ("qwen2.5-32b", "train_4k"),
+    ("deepseek-v3-671b", "decode_32k"),
+    ("xlstm-1.3b", "long_500k"),
+]:
+    for mesh in (["single", "multi"] if arch == "qwen2.5-32b" else ["multi"]):
+        res = dryrun.run_cell(arch, shape, mesh, reduced=True)
+        assert res["memory"]["peak_device_bytes"] > 0
+        r = res["roofline"]
+        assert r["flops"] > 0 and r["bottleneck"] in ("compute", "memory", "collective")
+        print(f"PASS {arch} {shape} {mesh}")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_cells():
+    out = run_subprocess(CODE, devices=512, timeout=1200)
+    assert out.count("PASS") == 4, out

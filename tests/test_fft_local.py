@@ -1,0 +1,80 @@
+"""Local FFT: MXU matmul formulation vs XLA's FFT, + hypothesis props."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fftmath
+
+
+def _rand_c64(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+
+
+@pytest.mark.parametrize("n", [1, 2, 8, 64, 100, 128, 384, 512, 1024, 4096, 12288])
+def test_fft_matmul_matches_fft(rng, n):
+    x = _rand_c64(rng, (3, n))
+    got = np.asarray(fftmath.fft_matmul(jnp.asarray(x)))
+    exp = np.fft.fft(x, axis=-1)
+    scale = np.abs(exp).max() + 1e-9
+    assert np.abs(got - exp).max() / scale < 2e-5
+
+
+@pytest.mark.parametrize("n", [64, 300, 1024])
+def test_ifft_roundtrip(rng, n):
+    x = _rand_c64(rng, (2, n))
+    y = fftmath.fft_matmul(jnp.asarray(x))
+    z = np.asarray(fftmath.fft_matmul(y, inverse=True))
+    assert np.abs(z - x).max() < 1e-4
+
+
+def test_prime_fallback_direct_dft(rng):
+    # 1021 is prime > MAX_DFT -> direct O(n^2) DFT fallback
+    x = _rand_c64(rng, (1021,))
+    got = np.asarray(fftmath.fft_matmul(jnp.asarray(x)))
+    exp = np.fft.fft(x)
+    assert np.abs(got - exp).max() / (np.abs(exp).max() + 1e-9) < 2e-5
+
+
+def test_split_factor():
+    assert fftmath.split_factor(512) == 512
+    assert fftmath.split_factor(1024) in (2, 4, 8, 16, 32, 64, 128, 256, 512)
+    assert 1024 % fftmath.split_factor(1024) == 0
+    assert fftmath.split_factor(1021) == 0  # prime beyond limit
+    n1 = fftmath.split_factor(16384)
+    assert n1 <= 512 and 16384 % n1 == 0
+
+
+def test_axis_argument(rng):
+    x = _rand_c64(rng, (4, 8, 16))
+    got = np.asarray(fftmath.local_fft(jnp.asarray(x), axis=1, impl="matmul"))
+    exp = np.fft.fft(x, axis=1)
+    assert np.abs(got - exp).max() / np.abs(exp).max() < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linearity(n, seed):
+    r = np.random.default_rng(seed)
+    x, y = _rand_c64(r, (n,)), _rand_c64(r, (n,))
+    a = complex(r.standard_normal(), r.standard_normal())
+    lhs = np.asarray(fftmath.fft_matmul(jnp.asarray(a * x + y)))
+    rhs = a * np.asarray(fftmath.fft_matmul(jnp.asarray(x))) + np.asarray(
+        fftmath.fft_matmul(jnp.asarray(y))
+    )
+    assert np.abs(lhs - rhs).max() / (np.abs(rhs).max() + 1e-9) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([16, 64, 256]), seed=st.integers(0, 2**31 - 1))
+def test_parseval(n, seed):
+    r = np.random.default_rng(seed)
+    x = _rand_c64(r, (n,))
+    f = np.asarray(fftmath.fft_matmul(jnp.asarray(x)))
+    lhs = np.sum(np.abs(x) ** 2)
+    rhs = np.sum(np.abs(f) ** 2) / n
+    assert abs(lhs - rhs) / (abs(lhs) + 1e-9) < 1e-4

@@ -1,0 +1,84 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweep in interpret mode."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _planar(rng, shape):
+    return (
+        rng.standard_normal(shape).astype(np.float32),
+        rng.standard_normal(shape).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize(
+    "b,m,k,n",
+    [(1, 128, 128, 128), (2, 256, 64, 128), (3, 128, 512, 256), (1, 384, 128, 384)],
+)
+def test_stage_left_matches_ref(rng, b, m, k, n):
+    w = _planar(rng, (m, k))
+    a = _planar(rng, (b, k, n))
+    t = _planar(rng, (m, n))
+    got = ops.stage_left(w, a, t)
+    exp = ref.stage_left_ref(w, a, t)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("b,m,k,n", [(1, 128, 128, 128), (2, 128, 256, 128)])
+def test_stage_right_matches_ref(rng, b, m, k, n):
+    a = _planar(rng, (b, m, k))
+    w = _planar(rng, (n, k))
+    got = ops.stage_right(a, w)
+    exp = ref.stage_right_ref(a, w)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=2e-4, atol=2e-3)
+
+
+def test_stage_left_block_sweep(rng):
+    """BlockSpec tiling must not change results."""
+    w = _planar(rng, (256, 128))
+    a = _planar(rng, (1, 128, 256))
+    t = _planar(rng, (256, 256))
+    base = ops.stage_left(w, a, t, bm=256, bn=256)
+    for bm in (64, 128):
+        for bn in (64, 128, 256):
+            got = ops.stage_left(w, a, t, bm=bm, bn=bn)
+            for g, e in zip(got, base):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 16384])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_fft_last_axis_vs_oracle(rng, n, inverse):
+    x = (rng.standard_normal((2, n)) + 1j * rng.standard_normal((2, n))).astype(np.complex64)
+    got = np.asarray(ops.fft_last_axis(jnp.asarray(x), inverse=inverse))
+    exp = np.asarray(ref.fft_last_axis_ref(jnp.asarray(x), inverse=inverse))
+    scale = np.abs(exp).max() + 1e-9
+    assert np.abs(got - exp).max() / scale < 2e-5
+
+
+def test_fft_last_axis_fallback_odd_size(rng):
+    # 1021 prime: wrapper falls back to the matmul path transparently
+    x = (rng.standard_normal((1021,)) + 1j * rng.standard_normal((1021,))).astype(np.complex64)
+    got = np.asarray(ops.fft_last_axis(jnp.asarray(x)))
+    exp = np.fft.fft(x)
+    assert np.abs(got - exp).max() / np.abs(exp).max() < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.sampled_from([1024, 2048, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fft_kernel_property_sweep(b, n, seed):
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal((b, n)) + 1j * r.standard_normal((b, n))).astype(np.complex64)
+    got = np.asarray(ops.fft_last_axis(jnp.asarray(x)))
+    exp = np.fft.fft(x, axis=-1)
+    assert np.abs(got - exp).max() / (np.abs(exp).max() + 1e-9) < 2e-5

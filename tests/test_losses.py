@@ -1,0 +1,77 @@
+"""Chunked cross-entropy vs unchunked oracle + masking properties."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models import losses
+
+
+def _unemb(v, d, rng):
+    w = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+    return lambda x: jnp.einsum("...d,dv->...v", x, w)
+
+
+@pytest.mark.parametrize("seq_chunk", [4, 7, 16, 64])
+def test_chunked_matches_full(rng, seq_chunk):
+    b, s, d, v = 2, 33, 8, 50
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    un = _unemb(v, d, rng)
+    nll_c, z_c = losses.chunked_xent(x, labels, un, seq_chunk=seq_chunk, z_loss=1e-3)
+    nll_f, z_f = losses.full_xent(x, labels, un, z_loss=1e-3)
+    np.testing.assert_allclose(float(nll_c), float(nll_f), rtol=1e-5)
+    np.testing.assert_allclose(float(z_c), float(z_f), rtol=1e-5)
+
+
+def test_ignore_labels(rng):
+    b, s, d, v = 1, 16, 8, 20
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    masked = labels.at[:, 8:].set(-1)
+    un = _unemb(v, d, rng)
+    nll_m, _ = losses.chunked_xent(x, masked, un, seq_chunk=4)
+    nll_half, _ = losses.chunked_xent(x[:, :8], labels[:, :8], un, seq_chunk=4)
+    np.testing.assert_allclose(float(nll_m), float(nll_half), rtol=1e-5)
+
+
+def test_softcap_applied(rng):
+    b, s, d, v = 1, 8, 4, 10
+    x = jnp.asarray(rng.standard_normal((b, s, d)) * 10, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    un = _unemb(v, d, rng)
+    a, _ = losses.chunked_xent(x, labels, un, final_softcap=5.0)
+    b_, _ = losses.chunked_xent(x, labels, un)
+    assert abs(float(a) - float(b_)) > 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(2, 40))
+def test_loss_positive_and_bounded(seed, s):
+    r = np.random.default_rng(seed)
+    v = 30
+    x = jnp.asarray(r.standard_normal((1, s, 6)), jnp.float32)
+    labels = jnp.asarray(r.integers(0, v, (1, s)), jnp.int32)
+    w = jnp.asarray(r.standard_normal((6, v)) * 0.01, jnp.float32)
+    nll, _ = losses.chunked_xent(x, labels, lambda h: h @ w, seq_chunk=8)
+    assert 0 < float(nll) < 3 * np.log(v)
+
+
+def test_gradient_matches_full(rng):
+    b, s, d, v = 2, 12, 6, 25
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+
+    def lc(x, w):
+        return losses.chunked_xent(x, labels, lambda h: h @ w, seq_chunk=4)[0]
+
+    def lf(x, w):
+        return losses.full_xent(x, labels, lambda h: h @ w)[0]
+
+    gc = jax.grad(lc, argnums=(0, 1))(x, w)
+    gf = jax.grad(lf, argnums=(0, 1))(x, w)
+    for a, b_ in zip(gc, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,111 @@
+"""MoE: router, dispatch-path equivalence (dense / gspmd / ring), aux."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+from conftest import run_subprocess
+
+
+def _cfg(cf=16.0, dispatch="einsum", experts=8):
+    cfg = get_config("deepseek-v3-671b", reduced=True)
+    return dataclasses.replace(
+        cfg,
+        dtype="float32",
+        moe=dataclasses.replace(
+            cfg.moe, num_experts=experts, capacity_factor=cf, dispatch=dispatch
+        ),
+    )
+
+
+def test_router_topk_properties(rng):
+    x = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    wr = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    w, idx, aux = moe_lib.router_topk(x, wr, 2)
+    assert w.shape == (32, 2) and idx.shape == (32, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(w) >= 0).all()
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 with equality at perfect balance
+
+
+def test_gspmd_matches_dense_high_capacity(rng):
+    cfg_e = _cfg(dispatch="einsum")
+    cfg_d = _cfg(dispatch="dense")
+    p, _ = moe_lib.init_moe(jax.random.PRNGKey(0), cfg_e)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg_e.d_model)), jnp.float32)
+    out_e, aux_e = moe_lib.apply_moe(p, x, cfg_e)
+    out_d, aux_d = moe_lib.apply_moe(p, x, cfg_d)
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_d), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_e), float(aux_d), rtol=1e-4)
+
+
+def test_capacity_drops_tokens(rng):
+    """At tiny capacity, outputs differ from dense (tokens dropped)."""
+    cfg_small = _cfg(cf=0.1, dispatch="einsum")
+    cfg_dense = _cfg(dispatch="dense")
+    p, _ = moe_lib.init_moe(jax.random.PRNGKey(0), cfg_small)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg_small.d_model)), jnp.float32)
+    out_s, _ = moe_lib.apply_moe(p, x, cfg_small)
+    out_d, _ = moe_lib.apply_moe(p, x, cfg_dense)
+    assert float(jnp.abs(out_s - out_d).max()) > 1e-3
+
+
+def test_dispatch_indices_capacity_order(rng):
+    idx = jnp.asarray([[0], [0], [0], [1]], jnp.int32)  # 3 tokens want expert 0
+    order, dest, keep = moe_lib._dispatch_indices(idx, e=2, cap=2)
+    # first two expert-0 tokens kept, third dropped
+    kept_expert0 = [bool(k) for k, d in zip(np.asarray(keep), np.asarray(dest)) if d < 2]
+    assert sum(kept_expert0) == 2
+    assert int(np.asarray(keep).sum()) == 3  # 2 for e0 + 1 for e1
+
+
+RING_CODE = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+
+mesh = jax.make_mesh((1, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = get_config("deepseek-v3-671b", reduced=True)
+cfg = dataclasses.replace(cfg, dtype="float32",
+    moe=dataclasses.replace(cfg.moe, num_experts=8, capacity_factor=8.0, dispatch="ring"))
+rng = np.random.default_rng(0)
+p, _ = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+out_ring, aux_r = jax.jit(lambda p, x: moe_lib.apply_moe(p, x, cfg, mesh=mesh))(p, x)
+cfg_e = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch="einsum"))
+out_ein, aux_e = jax.jit(lambda p, x: moe_lib.apply_moe(p, x, cfg_e, mesh=None))(p, x)
+assert np.abs(np.asarray(out_ring) - np.asarray(out_ein)).max() < 1e-3
+print("PASS ring matches gspmd")
+
+# interleaved (paper-faithful per-arrival FFN) == batched ring
+import repro.models.moe as M
+orig = M._ring_exchange_ffn
+M._ring_exchange_ffn = lambda *a, **k: orig(*a, **{**k, "interleave": True})
+out_int, _ = jax.jit(lambda p, x: moe_lib.apply_moe(p, x, cfg, mesh=mesh))(p, x)
+assert np.abs(np.asarray(out_ring) - np.asarray(out_int)).max() < 1e-4
+print("PASS interleaved matches batched")
+
+# gradient through the ring island
+M._ring_exchange_ffn = orig
+def loss(p, x):
+    out, aux = moe_lib.apply_moe(p, x, cfg, mesh=mesh)
+    return (out.astype(jnp.float32) ** 2).mean()
+g = jax.jit(jax.grad(loss))(p, x)
+flat = jax.tree.leaves(g)
+assert all(np.isfinite(np.asarray(t)).all() for t in flat)
+assert any(np.abs(np.asarray(t)).max() > 0 for t in flat)
+print("PASS ring gradient finite")
+"""
+
+
+@pytest.mark.slow
+def test_ring_dispatch_4dev():
+    out = run_subprocess(RING_CODE, devices=4)
+    assert out.count("PASS") == 3, out

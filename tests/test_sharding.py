@@ -1,0 +1,80 @@
+"""Logical sharding rules: resolution, shape-awareness, sanitization."""
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sharding as sh
+
+
+def _mesh2(d=1, m=1):
+    devs = np.asarray(jax.devices()[:1] * (d * m)).reshape(d, m)
+    return Mesh(devs, ("data", "model"))
+
+
+class FakeMesh:
+    """Shape-only stand-in (rules never touch devices)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.size = int(np.prod(list(axes.values()))) if axes else 1
+
+
+def test_resolve_basic():
+    m = FakeMesh(data=16, model=16)
+    assert sh.resolve(m, "batch", None) == P("data", None)
+    assert sh.resolve(m, "fsdp", "mlp") == P("data", "model")
+    assert sh.resolve(m, "experts", "fsdp", "mlp") == P("model", "data", None)
+
+
+def test_resolve_multipod():
+    m = FakeMesh(pod=2, data=16, model=16)
+    assert sh.resolve(m, "batch", None) == P(("pod", "data"), None)
+
+
+def test_resolve_missing_axes_replicate():
+    m = FakeMesh()
+    assert sh.resolve(m, "batch", "mlp") == P(None, None)
+
+
+def test_shape_aware_skips_nondivisible():
+    m = FakeMesh(data=16, model=16)
+    # 8 experts can't take the 16-way model axis; d_ff 16384 can
+    spec = sh.resolve(m, "experts", "fsdp", "mlp", shape=(8, 6144, 16384))
+    assert spec == P(None, "data", "model")
+    # 256 experts claim it; d_ff then replicates
+    spec2 = sh.resolve(m, "experts", "fsdp", "mlp", shape=(256, 7168, 2048))
+    assert spec2 == P("model", "data", None)
+
+
+def test_shape_aware_batch_prefix():
+    m = FakeMesh(pod=2, data=16, model=16)
+    # batch 2: only the pod axis (prefix) divides
+    assert sh.resolve(m, "batch", shape=(2,)) == P("pod")
+    assert sh.resolve(m, "batch", shape=(64,)) == P(("pod", "data"))
+    assert sh.resolve(m, "batch", shape=(1,)) == P(None)
+
+
+def test_sanitize_spec():
+    m = FakeMesh(data=16, model=16)
+    assert sh.sanitize_spec(m, P("model", None), (40, 8)) == P(None, None)
+    assert sh.sanitize_spec(m, P("model", None), (48, 8)) == P("model", None)
+    # missing mesh axes are skipped (but divisible present ones are kept)
+    assert sh.sanitize_spec(m, P(("pod", "data"), None), (32, 4)) == P("data", None)
+    m2 = FakeMesh(pod=2, data=16, model=16)
+    assert sh.sanitize_spec(m2, P(("pod", "data"), None), (2, 4)) == P("pod", None)
+
+
+def test_constrain_noop_single_device():
+    import jax.numpy as jnp
+
+    m = _mesh2(1, 1)
+    x = jnp.zeros((4, 4))
+    y = sh.constrain(x, m, "batch", None)
+    assert y.shape == x.shape
+
+
+def test_fft_axis():
+    assert sh.fft_axis(FakeMesh(data=16, model=16)) == "model"
+    assert sh.fft_axis(FakeMesh(rows=4)) == "rows"

@@ -1,0 +1,129 @@
+"""Recurrent mixers: chunkwise-parallel forms vs sequential decode steps."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import ssm
+
+
+def test_mlstm_chunkwise_matches_decode_steps(rng):
+    b, h, s, dk, dv = 2, 3, 24, 8, 8
+    q = jnp.asarray(rng.standard_normal((b, h, s, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, dv)), jnp.float32)
+    ip = jnp.asarray(rng.standard_normal((b, h, s)), jnp.float32)
+    fp = jnp.asarray(rng.standard_normal((b, h, s)) + 2.0, jnp.float32)
+
+    out_c, final_c = ssm.mlstm_chunkwise(q, k, v, ip, fp, chunk=8)
+
+    st = ssm.init_mlstm_state(b, h, dk, dv)
+    outs = []
+    for t in range(s):
+        o, st = ssm.mlstm_decode_step(q[:, :, t], k[:, :, t], v[:, :, t], ip[:, :, t], fp[:, :, t], st)
+        outs.append(o)
+    out_seq = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_c.c), np.asarray(st.c), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_c.m), np.asarray(st.m), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunk_invariance(rng):
+    b, h, s, d = 1, 2, 32, 4
+    args = [jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32) for _ in range(3)]
+    gates = [jnp.asarray(rng.standard_normal((b, h, s)), jnp.float32) for _ in range(2)]
+    o1, _ = ssm.mlstm_chunkwise(*args, *gates, chunk=4)
+    o2, _ = ssm.mlstm_chunkwise(*args, *gates, chunk=16)
+    o3, _ = ssm.mlstm_chunkwise(*args, *gates, chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o3), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_padding(rng):
+    """Non-multiple sequence lengths pad with identity gate steps."""
+    b, h, d = 1, 2, 4
+    for s in (7, 17, 23):
+        args = [jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32) for _ in range(3)]
+        gates = [jnp.asarray(rng.standard_normal((b, h, s)), jnp.float32) for _ in range(2)]
+        o_pad, st_pad = ssm.mlstm_chunkwise(*args, *gates, chunk=8)
+        o_ref, st_ref = ssm.mlstm_chunkwise(*args, *gates, chunk=s)  # single chunk
+        np.testing.assert_allclose(np.asarray(o_pad), np.asarray(o_ref), rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(st_pad.c), np.asarray(st_ref.c), rtol=3e-4, atol=3e-4)
+
+
+def test_mamba_full_matches_decode_steps(rng):
+    import dataclasses
+
+    cfg = get_config("hymba-1.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p, _ = ssm.init_mamba(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 12
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    di = int(cfg.ssm.expand * cfg.d_model)
+    st = ssm.init_mamba_state(b, di, cfg.ssm.state_dim, cfg.ssm.conv_dim)
+    full, final = ssm.apply_mamba(p, x, cfg, st)
+    st2 = ssm.init_mamba_state(b, di, cfg.ssm.state_dim, cfg.ssm.conv_dim)
+    outs = []
+    for t in range(s):
+        o, st2 = ssm.decode_mamba(p, x[:, t : t + 1], cfg, st2)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final.h), np.asarray(st2.h), rtol=2e-3, atol=2e-4)
+
+
+def test_slstm_full_matches_decode_steps(rng):
+    import dataclasses
+
+    cfg = get_config("xlstm-1.3b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p, _ = ssm.init_slstm_block(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 10
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    st = ssm.init_slstm_state(b, cfg.d_model)
+    full, final = ssm.apply_slstm_block(p, x, cfg, st)
+    st2 = ssm.init_slstm_state(b, cfg.d_model)
+    outs = []
+    for t in range(s):
+        o, st2 = ssm.decode_slstm_block(p, x[:, t : t + 1], cfg, st2)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final.c), np.asarray(st2.c), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_block_stateful_matches_stateless(rng):
+    import dataclasses
+
+    cfg = get_config("xlstm-1.3b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p, _ = ssm.init_mlstm_block(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 16
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    out_stateless, _ = ssm.apply_mlstm_block(p, x, cfg, None)
+    di = int(cfg.ssm.expand * cfg.d_model)
+    dh = di // cfg.num_heads
+    st = ssm.MLSTMBlockState(
+        cell=ssm.init_mlstm_state(b, cfg.num_heads, dh, dh),
+        conv=jnp.zeros((b, 3, di), jnp.float32),
+    )
+    out_stateful, _ = ssm.apply_mlstm_block(p, x, cfg, st)
+    np.testing.assert_allclose(
+        np.asarray(out_stateless), np.asarray(out_stateful), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_causal_conv_stateful(rng):
+    x = jnp.asarray(rng.standard_normal((1, 12, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 6)), jnp.float32)
+    full, _ = ssm._causal_conv(x, w)
+    # streaming: feed one step at a time
+    state = jnp.zeros((1, 3, 6))
+    outs = []
+    for t in range(12):
+        o, state = ssm._causal_conv(x[:, t : t + 1], w, state)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream), rtol=1e-5, atol=1e-6)
