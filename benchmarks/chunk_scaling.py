@@ -1,30 +1,33 @@
-"""Paper Fig. 3 analogue: chunk-size scaling of the collective strategies.
+"""Paper Fig. 3 analogue: chunk-size scaling of the collective backends.
 
 The paper sweeps message sizes between two nodes and shows per-message
-overhead separating the parcelports (TCP's latency vs LCI). Here the
-strategies (fused a2a / scatter ring / bisection) are swept over local
-pencil sizes on 2 host devices: measured wall time shows the dispatch/
-fusion overheads; the derived columns give the alpha-beta v5e model where
-the latency-vs-bandwidth crossover actually lives.
+overhead separating the parcelports (TCP's latency vs LCI). Here every
+registered shard_map backend is swept over local pencil sizes on 2 host
+devices: measured wall time shows the dispatch/fusion overheads; the
+derived columns give each backend's own alpha-beta v5e model (the
+``cost()`` the implementation itself carries), where the
+latency-vs-bandwidth crossover actually lives.
 """
 
 from __future__ import annotations
 
 from repro.configs.fft_bench import CHUNK_SWEEP_SIZES
-from repro.core import comm_model
+from repro.core import backends
 
 from benchmarks.common import run_devices_subprocess
 
 _CODE = r"""
 import time, numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.core import fft2, FFTConfig
+from repro.core import backends, fft2, FFTConfig
+from repro.core.compat import make_mesh
 
-mesh = jax.make_mesh((2,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((2,), ("model",))
+names = [n for n in backends.available()
+         if backends.get(n).kind == "shard_map" and backends.get(n).supports(2)]
 rng = np.random.default_rng(0)
 for n in __SIZES__:
     x = jnp.asarray((rng.standard_normal((n, n)) + 1j*rng.standard_normal((n, n))).astype(np.complex64))
-    for strat in ["alltoall", "scatter", "bisection"]:
+    for strat in names:
         fn = jax.jit(lambda v, s=strat: fft2(v, mesh, "model", FFTConfig(strategy=s)))
         jax.block_until_ready(fn(x))
         ts = []
@@ -44,14 +47,9 @@ def run() -> list[str]:
             continue
         _, n, strat, us = line.split(",")
         n = int(n)
-        chunk_bytes = n * n * 8 // 4  # per-chunk payload at P=2: (n/P)*(n/P)... per message
         p = 2
         m_local = n * n * 8 / p
-        model = {
-            "alltoall": comm_model.t_alltoall(m_local, p),
-            "scatter": comm_model.t_scatter_ring(m_local, p),
-            "bisection": comm_model.t_bisection(m_local, p),
-        }[strat]
+        model = backends.get(strat).cost(m_local, p)
         rows.append(
             f"fig3_chunk/{strat}/n{n},{us},v5e_model_us={model*1e6:.2f};local_MB={m_local/2**20:.2f}"
         )

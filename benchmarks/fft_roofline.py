@@ -1,7 +1,7 @@
 """The paper's own workload through the roofline machinery: lower the
 2^14 x 2^14 c64 FFT (Figs. 4-5's problem) on the production 16-way axis
-and derive the three terms per collective strategy -- the dry-run
-quantification of the paper's all-to-all vs N-scatter comparison.
+and derive the three terms per registered collective backend -- the
+dry-run quantification of the paper's all-to-all vs N-scatter comparison.
 
 Run in a subprocess (needs the 512-device host platform):
     PYTHONPATH=src python -m benchmarks.fft_roofline
@@ -13,26 +13,28 @@ from benchmarks.common import run_devices_subprocess
 
 _CODE = r"""
 import os, jax, jax.numpy as jnp
-from repro.core import FFTConfig, make_plan
-from repro.core import comm_model, hlo_analysis
+from repro.core import backends, comm_model, hlo_analysis, plan_fft
 from repro.launch.mesh import make_production_mesh
 
 mesh = make_production_mesh()  # 16x16: FFT shards over the 16-way 'model' axis
 n = 16384
-for strategy in ("alltoall", "scatter", "bisection", "xla_auto"):
-    cfgs = [(strategy, False)]
-    if strategy == "scatter":
-        cfgs.append((strategy, True))
-    for strat, fuse in cfgs:
-        plan = make_plan((n, n), mesh, strategy=strat, fuse_dft=fuse)
-        compiled = plan.lower().compile()
-        cost = hlo_analysis.analyze_compiled(compiled)
+p = mesh.shape["model"]
+for backend in backends.available():
+    if not backends.get(backend).supports(p):
+        continue
+    cfgs = [(backend, False)]
+    if backends.get(backend).supports_chunk_fn and backend == "scatter":
+        cfgs.append((backend, True))
+    for name, fuse in cfgs:
+        plan = plan_fft((n, n), mesh, backend=name, fuse_dft=fuse)
+        compiled = plan.lower().compile()  # one compile: analyze it directly
+        cost = hlo_analysis.analyze_compiled(compiled, default_group=p)
         roof = comm_model.Roofline(
             flops=cost.flops, hbm_bytes=cost.hbm_bytes,
             coll_bytes=cost.coll_bytes, chips=int(mesh.size),
         )
         ma = compiled.memory_analysis()
-        tag = strat + ("+fusedft" if fuse else "")
+        tag = name + ("+fusedft" if fuse else "")
         # useful flops: 5 N^2 log2(N^2) complex-radix2 reference / chips
         useful = 5 * n * n * (2 * 14) / mesh.size / comm_model.PEAK_FLOPS_BF16
         tb = max(roof.t_compute, roof.t_memory, roof.t_collective)

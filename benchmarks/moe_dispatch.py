@@ -9,12 +9,12 @@ from benchmarks.common import run_devices_subprocess
 _CODE = r"""
 import dataclasses, time
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import get_config
 from repro.models import moe as moe_lib
 import repro.models.moe as M
 
-mesh = jax.make_mesh((1, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((1, 4), ("data", "model"))
 base = get_config("deepseek-v3-671b", reduced=True)
 base = dataclasses.replace(base, d_model=256,
     moe=dataclasses.replace(base.moe, num_experts=16, expert_d_ff=512, top_k=2))

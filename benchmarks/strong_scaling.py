@@ -1,30 +1,32 @@
-"""Paper Figs. 4-5 analogue: FFT strong scaling, all-to-all vs scatter,
-vs the compiler-auto reference (the FFTW3 stand-in).
+"""Paper Figs. 4-5 analogue: FFT strong scaling over every registered
+backend, vs the compiler-auto reference (the FFTW3 stand-in).
 
 The paper: 2-D FFT of 2^14 x 2^14 over 1..16 nodes, one figure per
 collective formulation, FFTW3 MPI+pthreads as the reference line. Here:
 2^10 x 2^10 (CPU-tractable; same shape family) over 1/2/4/8 host
-devices x {alltoall, scatter, bisection, xla_auto}; derived columns give
-the alpha-beta v5e projection for the paper's full 2^14 problem.
+devices x ``backends.available()``; derived columns give each backend's
+alpha-beta v5e projection for the paper's full 2^14 problem.
 """
 
 from __future__ import annotations
 
-from repro.core import comm_model
+from repro.core import backends
 
 from benchmarks.common import run_devices_subprocess
 
 _CODE = r"""
 import time, numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.core import fft2, FFTConfig
+from repro.core import backends, fft2, FFTConfig
+from repro.core.compat import make_mesh
 
 n = __N__
 devs = __DEVS__
-mesh = jax.make_mesh((devs,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((devs,), ("model",))
 rng = np.random.default_rng(0)
 x = jnp.asarray((rng.standard_normal((n, n)) + 1j*rng.standard_normal((n, n))).astype(np.complex64))
-for strat in ["alltoall", "scatter", "bisection", "xla_auto"]:
+for strat in backends.available():
+    if not backends.get(strat).supports(devs):
+        continue
     cfgs = [("jnp", strat)]
     if strat == "scatter":
         cfgs.append(("jnp+fuse", strat))
@@ -51,12 +53,7 @@ def run(n: int = 1024) -> list[str]:
             d = int(d)
             # v5e projection for the PAPER's 2^14 problem at this device count
             m_local = (16384 * 16384 * 8) / max(d, 1)
-            proj = {
-                "alltoall": comm_model.t_alltoall(m_local, d),
-                "scatter": comm_model.t_scatter_ring(m_local, d),
-                "bisection": comm_model.t_bisection(m_local, d),
-                "xla_auto": comm_model.t_alltoall(m_local, d),
-            }[strat]
+            proj = backends.get(strat).cost(m_local, d)
             tag = strat if impl != "jnp+fuse" else strat + "+fusedft"
             rows.append(
                 f"fig45_strong/{tag}/p{d},{us},v5e_comm_2e14_us={proj*1e6:.0f}"

@@ -1,6 +1,6 @@
 """Scientific-compute example: distributed spectral low-pass filtering of
-a 3-D field using the collective-strategy FFT (paper's application class:
-multi-dimensional FFT on a partitioned domain).
+a 3-D field using the planned collective-backend FFT (paper's application
+class: multi-dimensional FFT on a partitioned domain).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/spectral_filter.py
@@ -18,13 +18,13 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
-from repro.core import FFTConfig, fft3
+from repro.core import plan_fft
+from repro.core.compat import make_mesh_1d
 
 
 def main():
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh_1d(len(jax.devices()))
     d = 64
     rng = np.random.default_rng(0)
     # smooth field + high-frequency noise
@@ -32,14 +32,15 @@ def main():
     smooth = np.sin(grid[0]) * np.cos(2 * grid[1]) + 0.5 * np.sin(3 * grid[2])
     field = (smooth + 0.5 * rng.standard_normal((d, d, d))).astype(np.complex64)
 
-    cfg = FFTConfig(strategy="scatter")
-    spec = fft3(jnp.asarray(field), mesh, "model", cfg)
+    # one plan, validated once; both directions reuse its cached executables
+    plan = plan_fft((d, d, d), mesh, ndim=3, backend="scatter")
+    spec = plan.execute(jnp.asarray(field))
     # low-pass mask (keep |k| < d/8 per axis)
     freqs = np.fft.fftfreq(d) * d
     keep = (np.abs(freqs) < d / 8)
     mask = keep[:, None, None] & keep[None, :, None] & keep[None, None, :]
     filt = spec * jnp.asarray(mask)
-    back = fft3(filt, mesh, "model", cfg, inverse=True)
+    back = plan.inverse(filt)
 
     residual = np.asarray(jnp.real(back)) - smooth
     noise_in = field.real - smooth

@@ -1,7 +1,13 @@
 """repro.core -- the paper's contribution: distributed FFT over
 strategy-switchable collectives, plus the generalized decomposed-collective
-overlap layer reused across the LM stack."""
+overlap layer reused across the LM stack.
 
+The collective strategies are pluggable backends (repro.core.backends --
+the HPX parcelport analogue); the user-facing entry point is the
+FFTW-style plan/executor (``plan_fft`` -> ``Plan``)."""
+
+from repro.core import backends
+from repro.core.backends import CollectiveBackend
 from repro.core.distributed_fft import FFTConfig, fft2, ifft2, fft3, fft1d_large, reference_fft2
 from repro.core.fftmath import local_fft, local_fft2, fft_matmul, dft_matrix, MAX_DFT
 from repro.core.overlap import (
@@ -10,12 +16,13 @@ from repro.core.overlap import (
     ring_reduce_scatter,
     ring_scatter_reduce,
 )
-from repro.core.plan import FFTPlan, make_plan
+from repro.core.plan import FFTPlan, Plan, make_plan, plan_fft
 from repro.core.transpose import distributed_transpose
 
 __all__ = [
-    "FFTConfig", "FFTPlan", "MAX_DFT", "collective_matmul_ag", "dft_matrix",
-    "distributed_transpose", "fft1d_large", "fft2", "fft3", "fft_matmul",
-    "ifft2", "local_fft", "local_fft2", "make_plan", "reference_fft2",
-    "ring_all_gather", "ring_reduce_scatter", "ring_scatter_reduce",
+    "CollectiveBackend", "FFTConfig", "FFTPlan", "MAX_DFT", "Plan", "backends",
+    "collective_matmul_ag", "dft_matrix", "distributed_transpose", "fft1d_large",
+    "fft2", "fft3", "fft_matmul", "ifft2", "local_fft", "local_fft2", "make_plan",
+    "plan_fft", "reference_fft2", "ring_all_gather", "ring_reduce_scatter",
+    "ring_scatter_reduce",
 ]

@@ -1,0 +1,227 @@
+"""Pluggable collective-backend registry -- the paper's parcelport axis.
+
+HPX swaps its network layer (TCP / MPI / LCI parcelports) underneath one
+collective interface, which is the paper's whole experimental axis. This
+module is the TPU-side analogue: every pencil-exchange strategy is a
+registered :class:`CollectiveBackend` and the rest of the stack (the
+distributed FFTs, the plan front-end, the benchmarks) dispatches through
+the registry instead of enumerating strategy strings.
+
+A backend bundles the two things that previously lived in different
+files and could drift apart:
+
+- ``transpose(x, axis_name, chunk_fn)`` -- the shard_map-local pencil
+  exchange (implementations in :mod:`repro.core.transpose`);
+- ``cost(m_bytes, p, prm, chunk_compute_s)`` -- the alpha-beta napkin
+  model of that same schedule (:mod:`repro.core.comm_model`), which is
+  what lets ``Plan.predict()`` rank backends *before* running anything
+  (the paper's Fig. 3 hypothesis step) and powers ``backend="auto"``.
+
+Registering a new backend is all that is needed for it to show up in
+``available()``, in ``backend="auto"`` selection, and in the
+oracle-equivalence test sweep::
+
+    @register
+    class MyExchange(CollectiveBackend):
+        name = "my_exchange"
+        def transpose(self, x, axis_name, chunk_fn=None): ...
+        def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0): ...
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Optional, Tuple, Type
+
+import jax
+
+from repro.core import comm_model as cm
+from repro.core import transpose as tr
+from repro.core.comm_model import CommParams
+
+ChunkFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+class CollectiveBackend:
+    """One pencil-exchange strategy: implementation + cost model.
+
+    Class attributes:
+
+    ``name``
+        Registry key (the user-facing ``backend=``/``strategy=`` string).
+    ``kind``
+        ``"shard_map"`` -- the backend implements the per-shard exchange
+        and composes with the explicit local-FFT pipeline; ``"global"``
+        -- the backend takes over the *whole* transform at the jit level
+        (the ``xla_auto`` reference) and has no ``transpose``.
+    ``supports_chunk_fn``
+        Whether ``transpose`` streams chunks through a per-arrival
+        callback (the paper's overlap hook).
+    """
+
+    name: str = ""
+    kind: str = "shard_map"
+    supports_chunk_fn: bool = False
+
+    def supports(self, p: int) -> bool:
+        """Whether the schedule is defined for ``p`` shards."""
+        return True
+
+    def transpose(
+        self, x: jax.Array, axis_name: str, chunk_fn: Optional[ChunkFn] = None
+    ) -> jax.Array:
+        """shard_map-local (..., r, C) -> (..., c, R) pencil exchange."""
+        raise NotImplementedError(f"backend {self.name!r} has no shard_map transpose")
+
+    def cost(
+        self,
+        m_bytes: float,
+        p: int,
+        prm: CommParams = CommParams(),
+        chunk_compute_s: float = 0.0,
+    ) -> float:
+        """Predicted seconds for one exchange of a local block of
+        ``m_bytes`` over ``p`` shards (alpha-beta model).
+
+        ``chunk_compute_s`` is *per-chunk* compute (there are ``p``
+        chunks) in every backend's model: streaming backends overlap it
+        with later rounds; monolithic collectives serialize all ``p``
+        chunk computes after the exchange. Same units everywhere, so
+        ``cheapest()`` comparisons are apples-to-apples."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<CollectiveBackend {self.name!r} kind={self.kind}>"
+
+
+_REGISTRY: Dict[str, CollectiveBackend] = {}
+
+
+def register(cls: Type[CollectiveBackend]) -> Type[CollectiveBackend]:
+    """Class decorator: instantiate and add to the registry by ``name``."""
+    if not cls.name:
+        raise ValueError(f"backend class {cls.__name__} must set a name")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"backend {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get(name: str) -> CollectiveBackend:
+    """Look up a backend; unknown names list what *is* registered."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective backend {name!r}; registered backends: {list(available())}"
+        ) from None
+
+
+def available() -> Tuple[str, ...]:
+    """Sorted names of every registered backend."""
+    return tuple(sorted(_REGISTRY))
+
+
+def cheapest(
+    m_bytes: float,
+    p: int,
+    prm: CommParams = CommParams(),
+    *,
+    names: Optional[Iterable[str]] = None,
+    chunk_compute_s: float = 0.0,
+) -> str:
+    """Cost-model argmin over (by default) every registered backend that
+    supports ``p`` -- the ``backend="auto"`` selection rule, and by
+    construction the argmin of ``Plan.predict()``'s ranking. Ties break
+    toward the lexicographically first name, so selection is
+    deterministic."""
+    if names is None:
+        names = available()
+    costs = {n: get(n).cost(m_bytes, p, prm, chunk_compute_s) for n in sorted(names) if get(n).supports(p)}
+    if not costs:
+        raise ValueError(f"no registered backend supports P={p}")
+    return min(costs, key=costs.__getitem__)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends (the paper's strategies + beyond-paper additions)
+# ---------------------------------------------------------------------------
+
+
+@register
+class AllToAllBackend(CollectiveBackend):
+    """One fused ``lax.all_to_all`` -- the paper's synchronized baseline."""
+
+    name = "alltoall"
+
+    def transpose(self, x, axis_name, chunk_fn=None):
+        return tr._alltoall(x, axis_name)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+        # monolithic: all p chunk computes serialize after the collective
+        return cm.t_alltoall(m_bytes, p, prm) + max(p, 1) * chunk_compute_s
+
+
+@register
+class ScatterBackend(CollectiveBackend):
+    """P-1 direct sends (ring walk); arriving chunks stream through
+    ``chunk_fn`` while later sends are in flight -- the paper's N-scatter
+    decomposition."""
+
+    name = "scatter"
+    supports_chunk_fn = True
+
+    def transpose(self, x, axis_name, chunk_fn=None):
+        return tr._scatter(x, axis_name, chunk_fn)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+        return cm.t_scatter_ring(m_bytes, p, prm, chunk_compute_s)
+
+
+@register
+class BisectionBackend(CollectiveBackend):
+    """Bruck / hypercube exchange: ceil(log2 P) rounds of half-buffer
+    messages -- wins when per-message latency dominates (the paper's
+    TCP-overhead regime)."""
+
+    name = "bisection"
+
+    def transpose(self, x, axis_name, chunk_fn=None):
+        return tr._bisection(x, axis_name)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+        # monolithic: all p chunk computes serialize after the collective
+        return cm.t_bisection(m_bytes, p, prm) + max(p, 1) * chunk_compute_s
+
+
+@register
+class PairwiseXorBackend(CollectiveBackend):
+    """Pairwise XOR exchange (beyond-paper): P-1 symmetric swap rounds,
+    round s pairing rank i with i XOR s. Power-of-two P only. Streams
+    chunks like the ring, so the full overlap accounting applies."""
+
+    name = "pairwise_xor"
+    supports_chunk_fn = True
+
+    def supports(self, p: int) -> bool:
+        return p >= 1 and (p & (p - 1)) == 0
+
+    def transpose(self, x, axis_name, chunk_fn=None):
+        return tr._pairwise_xor(x, axis_name, chunk_fn)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+        return cm.t_pairwise(m_bytes, p, prm, chunk_compute_s)
+
+
+@register
+class XlaAutoBackend(CollectiveBackend):
+    """The 'FFTW3 reference' analogue: hand the sharded array to XLA's
+    own FFT under jit and let GSPMD schedule the communication. Whole-
+    transform backend -- no shard_map transpose; modeled as one fused
+    all-to-all (what GSPMD lowers the resharding to)."""
+
+    name = "xla_auto"
+    kind = "global"
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+        # monolithic: all p chunk computes serialize after the collective
+        return cm.t_alltoall(m_bytes, p, prm) + max(p, 1) * chunk_compute_s

@@ -63,12 +63,14 @@ def t_alltoall(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
 def t_scatter_ring(m_bytes: float, p: int, prm: CommParams = CommParams(),
                    chunk_compute_s: float = 0.0) -> float:
     """P-1 direct sends of M/P each; per-chunk compute overlaps the next
-    send (fully, if chunk_compute <= chunk_comm)."""
+    send (fully, if chunk_compute <= chunk_comm). When per-chunk compute
+    exceeds per-chunk comm, the difference is exposed on every step, and
+    the last chunk's compute is always exposed (nothing left to overlap)."""
     if p <= 1:
         return max(chunk_compute_s, 0.0)
     per_chunk = prm.alpha_s + (m_bytes / p) / prm.beta_bytes_s
     exposed = max(0.0, chunk_compute_s - per_chunk) * (p - 1)
-    return (p - 1) * per_chunk + chunk_compute_s + exposed * 0  # last chunk's compute exposed
+    return (p - 1) * per_chunk + chunk_compute_s + exposed
 
 
 def t_bisection(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
@@ -80,6 +82,17 @@ def t_bisection(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float
         return 0.0
     rounds = math.ceil(math.log2(p))
     return rounds * (prm.alpha_s + (m_bytes / 2) / prm.beta_bytes_s)
+
+
+def t_pairwise(m_bytes: float, p: int, prm: CommParams = CommParams(),
+               chunk_compute_s: float = 0.0) -> float:
+    """Pairwise XOR exchange: P-1 rounds, round s swapping the M/P chunk
+    with partner (rank XOR s) -- the classic MPI_Alltoall fallback, for
+    power-of-two P. Same bytes and chunk streaming as the scatter ring
+    (chunks arrive incrementally, so per-chunk compute overlaps the next
+    round identically); it differs in schedule, not overlap: symmetric
+    bidirectional swaps instead of a one-directional ring walk."""
+    return t_scatter_ring(m_bytes, p, prm, chunk_compute_s)
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +181,8 @@ def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveSta
             counts[kind] += 1
             bytes_moved[kind] += size
             continue
+        # collective-permute was handled (and ``continue``d) above, so only
+        # the group-sized collectives reach the factor table.
         p = _group_size(s, default_group)
         if p <= 1:
             factor = 0.0
@@ -175,8 +190,6 @@ def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveSta
             factor = 2 * (p - 1) / p
         elif kind == "reduce-scatter":
             factor = (p - 1)  # result is 1/P of operand; ships (P-1)/P*operand
-        elif kind == "collective-permute":
-            factor = 1.0
         else:  # all-gather, all-to-all
             factor = (p - 1) / p
         counts[kind] += 1

@@ -1,0 +1,55 @@
+"""Version compatibility shims for the jax APIs the core layer leans on.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.sharding.AxisType``
+surface; older jaxlibs (e.g. the 0.4.3x line) ship the same machinery
+under ``jax.experimental.shard_map`` and have no axis types at all.
+Everything below resolves to the native API when it exists, so on a
+current jax these wrappers are zero-cost aliases.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax import lax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with a fallback to the experimental module.
+
+    ``check_vma`` maps to the native kwarg when given; the experimental
+    fallback always runs with its (equivalent) ``check_rep`` disabled --
+    the replication checker predates several collective patterns used
+    here."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a shard_map axis (``lax.axis_size`` when available)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """1-to-1 ``jax.make_mesh`` with auto axis types when the version has
+    typed axes (shard_map + jit sharding propagation both work)."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names), axis_types=(AxisType.Auto,) * len(axis_names)
+        )
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def make_mesh_1d(p: int, axis_name: str = "model"):
+    """The FFT benchmarks' standard 1-D mesh over the first ``p`` devices."""
+    return make_mesh((p,), (axis_name,))

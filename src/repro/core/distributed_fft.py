@@ -38,6 +38,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import repro.core.fftmath as lf
 import repro.core.transpose as tr
+from repro.core import backends
+from repro.core.compat import axis_size, shard_map
 from repro.core.overlap import ring_scatter_reduce
 
 
@@ -71,7 +73,7 @@ def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> 
     is a cheap rank-1 outer product -- fully overlapped with the sends.
     """
     y = lf.local_fft(x, axis=-1, impl=impl)
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     r = y.shape[-2]
     c = y.shape[-1] // p
     n = p * r
@@ -102,17 +104,22 @@ def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> 
 
 @dataclasses.dataclass(frozen=True)
 class FFTConfig:
-    strategy: str = "alltoall"  # alltoall | scatter | bisection | xla_auto
+    """Legacy transform config. New code should use ``plan_fft`` (see
+    :mod:`repro.core.plan`); kept as a thin carrier for one release so
+    existing call sites keep working. ``strategy`` names any backend
+    registered in :mod:`repro.core.backends`."""
+
+    strategy: str = "alltoall"
     local_impl: lf.LocalImpl = "jnp"
     fuse_dft: bool = False  # scatter-only: fold 2nd-dim DFT into the ring
     transpose_back: bool = False  # return natural (row-sharded) layout
 
 
-def _check(cfg: FFTConfig) -> None:
+def _check(cfg: FFTConfig) -> backends.CollectiveBackend:
+    backend = backends.get(cfg.strategy)  # raises listing the registry
     if cfg.fuse_dft and cfg.strategy != "scatter":
         raise ValueError("fuse_dft requires strategy='scatter'")
-    if cfg.strategy not in ("alltoall", "scatter", "bisection", "xla_auto"):
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    return backend
 
 
 def fft2(
@@ -130,8 +137,8 @@ def fft2(
     ``inverse``, computes the unitary-unnormalized ifft2 (1/(R*C) factor),
     same layout conventions.
     """
-    _check(cfg)
-    if cfg.strategy == "xla_auto":
+    backend = _check(cfg)
+    if backend.kind == "global":
         return _fft2_xla_auto(x, mesh, axis_name, inverse=inverse, transpose_back=cfg.transpose_back)
 
     def fn(xl: jax.Array) -> jax.Array:
@@ -142,17 +149,14 @@ def fft2(
             out = _fft_local_then_transpose(v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl)
             out = lf.local_fft(out, axis=-1, impl=cfg.local_impl)
         if cfg.transpose_back:
-            out = tr.distributed_transpose(
-                out, axis_name, strategy=cfg.strategy if cfg.strategy != "xla_auto" else "alltoall"
-            )
+            out = tr.distributed_transpose(out, axis_name, strategy=cfg.strategy)
         if inverse:
             out = jnp.conj(out) / (x.shape[-1] * x.shape[-2])
         return out
 
     ndim = x.ndim
-    spec_in = P(*([None] * (ndim - 2) + [axis_name, None]))
-    spec_out = spec_in if cfg.transpose_back else P(*([None] * (ndim - 2) + [axis_name, None]))
-    return jax.shard_map(fn, mesh=mesh, in_specs=spec_in, out_specs=spec_out)(x)
+    spec = P(*([None] * (ndim - 2) + [axis_name, None]))
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
 
 
 def ifft2(x: jax.Array, mesh: Mesh, axis_name: str, cfg: FFTConfig = FFTConfig()) -> jax.Array:
@@ -190,8 +194,8 @@ def fft3(
     Local batched 2-D FFT over (D1, D2), then one strategy-switched
     exchange to localize D0, FFT, and the exchange back (natural layout is
     always restored: 3-D users expect it)."""
-    _check(cfg)
-    if cfg.strategy == "xla_auto":
+    backend = _check(cfg)
+    if backend.kind == "global":
         ndim = x.ndim
         spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
         sh = NamedSharding(mesh, spec)
@@ -214,7 +218,7 @@ def fft3(
 
     ndim = x.ndim
     spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
-    return jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
 
 
 def fft1d_large(
@@ -232,8 +236,8 @@ def fft1d_large(
     (fused into the second exchange's chunks under ``scatter``), transpose,
     FFT_C, transpose. Returns the standard-ordered spectrum, R-sharded.
     """
-    _check(cfg)
-    if cfg.strategy == "xla_auto":
+    backend = _check(cfg)
+    if backend.kind == "global":
         ndim = x.ndim
         sh = NamedSharding(mesh, P(*([None] * (ndim - 1) + [axis_name])))
         return jax.jit(jnp.fft.fft, in_shardings=sh, out_shardings=sh)(x)
@@ -253,11 +257,11 @@ def fft1d_large(
         t1 = tr.distributed_transpose(a, axis_name, strategy=cfg.strategy)
         g = lf.local_fft(t1, axis=-1, impl=cfg.local_impl)  # (..., C/p, R)
 
-        # Twiddle w_n^(j2*k1). Under ``scatter`` it is fused into exchange
-        # 2's per-chunk compute (applied to each chunk as it arrives --
-        # the paper's 'hide computation behind communication'); otherwise
-        # applied up-front to the whole block.
-        if cfg.strategy == "scatter":
+        # Twiddle w_n^(j2*k1). Under a chunk-streaming backend it is fused
+        # into exchange 2's per-chunk compute (applied to each chunk as it
+        # arrives -- the paper's 'hide computation behind communication');
+        # otherwise applied up-front to the whole block.
+        if backend.supports_chunk_fn:
 
             def tw_chunk(chunk: jax.Array, src: jax.Array) -> jax.Array:
                 # chunk (..., R/p, C/p): my k1 block x src's j2 block.
@@ -266,7 +270,7 @@ def fft1d_large(
                 tw = jnp.exp(-2j * jnp.pi * (k1[:, None] * j2[None, :]) / n)
                 return chunk * tw.astype(chunk.dtype)
 
-            t2 = tr.distributed_transpose(g, axis_name, strategy="scatter", chunk_fn=tw_chunk)
+            t2 = tr.distributed_transpose(g, axis_name, strategy=cfg.strategy, chunk_fn=tw_chunk)
         else:
             j2 = me * (c // p) + jnp.arange(c // p)
             k1 = jnp.arange(r)
@@ -280,7 +284,7 @@ def fft1d_large(
 
     ndim = x.ndim
     spec = P(*([None] * (ndim - 1) + [axis_name]))
-    return jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
 
 
 def reference_fft2(x: jax.Array, *, inverse: bool = False) -> jax.Array:

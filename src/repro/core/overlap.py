@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import axis_size
+
 
 def ring_scatter_reduce(
     x: jax.Array,
@@ -45,7 +47,7 @@ def ring_scatter_reduce(
     ppermute hop delivers the next partial's input while the previous
     partial is being computed.
     """
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     split_axis = split_axis % x.ndim
     if x.shape[split_axis] % p:
@@ -80,7 +82,7 @@ def ring_all_gather(
     rank order along ``axis``). With ``chunk_fn(chunk, src)`` returns the
     *sum* of per-chunk results instead, never materializing the gather.
     """
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     axis = axis % x.ndim
     if p == 1:
@@ -126,7 +128,7 @@ def collective_matmul_ag(
     computed as their operands arrive.
     """
     del contract_chunks_of
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     kc = x.shape[-1]
 
     def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
@@ -141,7 +143,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, *, axis: int = -1) -> jax.
     """psum_scatter decomposed into a P-1 step ring with the running partial
     added at each hop (result shard s = sum over ranks of their chunk s).
     """
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     axis = axis % x.ndim
     if x.shape[axis] % p:

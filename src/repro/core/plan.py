@@ -1,88 +1,324 @@
-"""FFTW-style plan objects for the distributed FFT.
+"""FFTW-style plan/executor front-end over the collective-backend registry.
 
-The paper's FFTW3 reference works through plans; we mirror that UX: a
-plan captures (global shape, mesh, shard axis, strategy, local impl),
-pre-jits the transform, and exposes ``execute`` / ``inverse``. Plans are
-also where the benchmark harness hangs its per-strategy measurements.
+The paper's FFTW3 reference works through plans; this is the same UX for
+the distributed transforms, rebuilt on :mod:`repro.core.backends`:
+
+    plan = plan_fft((n, n), mesh, ndim=2, backend="auto")
+    y = plan.execute(x)          # cached jitted executable
+    x2 = plan.inverse(y)
+
+A :class:`Plan`:
+
+- validates the (global shape, mesh, shard axis, backend) combination
+  **once**, at construction;
+- resolves ``backend="auto"`` to the alpha-beta cost-model argmin over
+  every registered backend supporting the shard count
+  (``Plan.predict()`` exposes the full ranking -- the paper's Fig. 3
+  hypothesis step as an API);
+- caches one jitted executable per (direction, dtype), so repeated
+  ``execute`` calls never re-trace or re-compile;
+- exposes ``lower``/``roofline`` for dry-run analysis of the compiled
+  communication schedule.
+
+``FFTPlan``/``make_plan`` remain as deprecation shims for one release.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import warnings
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import backends
+from repro.core import comm_model as cm
 from repro.core import distributed_fft as dfft
 from repro.core.distributed_fft import FFTConfig
+
+_EXCHANGES = {1: 3, 2: 1, 3: 2}  # pencil exchanges per forward transform
+
+
+class Plan:
+    """A validated, backend-resolved, executable-caching FFT plan.
+
+    Construct through :func:`plan_fft`. ``direction`` fixes what
+    ``execute`` computes ("forward" or "inverse"); ``inverse`` always
+    computes the opposite of ``execute``.
+
+    Partial surface: the 1-D large transform has no inverse -- planning
+    ``ndim=1, direction="inverse"`` is rejected at construction, and
+    calling ``inverse()`` on a forward 1-D plan raises
+    ``NotImplementedError`` before anything executes (conjugate
+    externally instead).
+    """
+
+    def __init__(
+        self,
+        global_shape: Tuple[int, ...],
+        mesh: Mesh,
+        *,
+        ndim: int = 2,
+        direction: str = "forward",
+        backend: str = "auto",
+        axis_name: Optional[str] = None,
+        local_impl: str = "jnp",
+        fuse_dft: bool = False,
+        transpose_back: bool = False,
+        dtype=jnp.complex64,
+        params: Optional[cm.CommParams] = None,
+    ):
+        from repro.core.sharding import fft_axis
+
+        if ndim not in (1, 2, 3):
+            raise ValueError("ndim must be 1, 2 or 3")
+        if direction not in ("forward", "inverse"):
+            raise ValueError(f"direction must be 'forward' or 'inverse', got {direction!r}")
+        if ndim == 1 and direction == "inverse":
+            # fail at plan time, not first execute (validate-once contract)
+            raise NotImplementedError(
+                "1-D large inverse is not implemented: plan forward and conjugate externally"
+            )
+        self.global_shape = tuple(global_shape)
+        self.mesh = mesh
+        self.axis_name = axis_name or fft_axis(mesh)
+        self.ndim = ndim
+        self.direction = direction
+        self.dtype = jnp.dtype(dtype)
+        self.local_impl = local_impl
+        self.fuse_dft = fuse_dft
+        self.transpose_back = transpose_back
+        self.params = params or cm.CommParams()
+
+        p = self.shards
+        if ndim == 2:
+            r, c = self.global_shape[-2:]
+            if r % p or c % p:
+                raise ValueError(f"2-D shape {(r, c)} not divisible by shards {p}")
+        elif ndim == 3:
+            d0, d1, d2 = self.global_shape[-3:]
+            if d0 % p or (d1 * d2) % p:
+                raise ValueError(f"3-D shape {(d0, d1, d2)} not shardable by {p}")
+        else:
+            n = self.global_shape[-1]
+            if n % (p * p):
+                raise ValueError(f"1-D size {n} must be divisible by P^2={p * p}")
+
+        if backend == "auto":
+            backend = "scatter" if fuse_dft else backends.cheapest(
+                self.local_bytes(), p, self.params
+            )
+        self.backend_obj = backends.get(backend)  # raises listing the registry
+        self.backend = backend
+        if not self.backend_obj.supports(p):
+            raise ValueError(f"backend {backend!r} does not support P={p}")
+        if fuse_dft and backend != "scatter":
+            raise ValueError("fuse_dft requires backend='scatter'")
+
+        self._cfg = FFTConfig(
+            strategy=backend,
+            local_impl=local_impl,  # type: ignore[arg-type]
+            fuse_dft=fuse_dft,
+            transpose_back=transpose_back,
+        )
+        self._cache: Dict[Tuple[str, str], jax.stages.Wrapped] = {}
+        self.compiles = 0  # jit wrappers created (not per-shape recompiles)
+
+    # -- geometry --------------------------------------------------------------
+    @property
+    def shards(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    def local_bytes(self, dtype=None) -> float:
+        """Bytes of one device's local block of the input."""
+        itemsize = jnp.dtype(dtype or self.dtype).itemsize
+        return float(np.prod(self.global_shape)) * itemsize / self.shards
+
+    def comm_bytes(self, dtype=None) -> float:
+        """Bytes each device ships per pencil exchange ((1-1/P) of local)."""
+        p = self.shards
+        return self.local_bytes(dtype) * (1 - 1 / p)
+
+    # -- cost model ------------------------------------------------------------
+    def predict(self, dtype=None) -> Dict[str, float]:
+        """Alpha-beta predicted seconds per backend for this problem --
+        ``n_exchanges * backend.cost(local_bytes, P)`` for every
+        registered backend that supports this shard count."""
+        p = self.shards
+        m = self.local_bytes(dtype)
+        n_ex = _EXCHANGES[self.ndim] + (1 if self.ndim == 2 and self.transpose_back else 0)
+        return {
+            name: n_ex * backends.get(name).cost(m, p, self.params)
+            for name in backends.available()
+            if backends.get(name).supports(p)
+        }
+
+    # -- sharding specs --------------------------------------------------------
+    def input_sharding(self) -> NamedSharding:
+        nd = len(self.global_shape)
+        spec = [None] * nd
+        spec[nd - self.ndim] = self.axis_name  # shard the leading transform dim
+        return NamedSharding(self.mesh, P(*spec))
+
+    def input_spec(self, dtype=None) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(
+            self.global_shape, dtype or self.dtype, sharding=self.input_sharding()
+        )
+
+    # -- execution -------------------------------------------------------------
+    def _fn(self, inverse: bool):
+        if self.ndim == 2:
+            return lambda x: dfft.fft2(x, self.mesh, self.axis_name, self._cfg, inverse=inverse)
+        if self.ndim == 3:
+            return lambda x: dfft.fft3(x, self.mesh, self.axis_name, self._cfg, inverse=inverse)
+        if inverse:
+            raise NotImplementedError("1-D large inverse: conjugate externally")
+        return lambda x: dfft.fft1d_large(x, self.mesh, self.axis_name, self._cfg)
+
+    def _executable(self, inverse: bool, dtype) -> jax.stages.Wrapped:
+        key = ("inverse" if inverse else "forward", jnp.dtype(dtype).name)
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = jax.jit(self._fn(inverse))
+            self._cache[key] = fn
+            self.compiles += 1
+        return fn
+
+    def execute(self, x: jax.Array) -> jax.Array:
+        """Run the planned direction through the cached executable."""
+        x = jnp.asarray(x)
+        return self._executable(self.direction == "inverse", x.dtype)(x)
+
+    def inverse(self, x: jax.Array) -> jax.Array:
+        """Run the opposite of the planned direction. Not available for
+        ``ndim=1`` (raises before executing anything -- see class doc)."""
+        x = jnp.asarray(x)
+        return self._executable(self.direction != "inverse", x.dtype)(x)
+
+    def executable_stats(self) -> Dict[Tuple[str, str], int]:
+        """(direction, dtype) -> number of compiled specializations held
+        by that cached executable (1 == no recompilation happened)."""
+        stats = {}
+        for key, fn in self._cache.items():
+            try:
+                stats[key] = fn._cache_size()
+            except AttributeError:  # pragma: no cover - future jax
+                stats[key] = 1
+        return stats
+
+    # -- analysis --------------------------------------------------------------
+    def lower(self, inverse: Optional[bool] = None, dtype=None):
+        """Abstract lowering for dry-run / roofline (no allocation)."""
+        inv = (self.direction == "inverse") if inverse is None else inverse
+        return jax.jit(self._fn(inv)).lower(self.input_spec(dtype))
+
+    def roofline(self, inverse: Optional[bool] = None) -> cm.Roofline:
+        """Compile abstractly and derive the three roofline terms from
+        the scheduled HLO (loop-aware collective accounting)."""
+        from repro.core import hlo_analysis
+
+        compiled = self.lower(inverse).compile()
+        cost = hlo_analysis.analyze_compiled(compiled, default_group=self.shards)
+        return cm.Roofline(
+            flops=cost.flops,
+            hbm_bytes=cost.hbm_bytes,
+            coll_bytes=cost.coll_bytes,
+            chips=int(self.mesh.size),
+        )
+
+    def __repr__(self) -> str:
+        return (
+            f"Plan(shape={self.global_shape}, ndim={self.ndim}, P={self.shards}, "
+            f"backend={self.backend!r}, direction={self.direction!r}, "
+            f"dtype={self.dtype.name})"
+        )
+
+
+def plan_fft(
+    global_shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    ndim: int = 2,
+    direction: str = "forward",
+    backend: str = "auto",
+    axis_name: Optional[str] = None,
+    local_impl: str = "jnp",
+    fuse_dft: bool = False,
+    transpose_back: bool = False,
+    dtype=jnp.complex64,
+    params: Optional[cm.CommParams] = None,
+) -> Plan:
+    """Plan a distributed FFT (the FFTW ``plan`` analogue).
+
+    ``backend="auto"`` picks the cost-model argmin over every registered
+    backend that supports this shard count -- the same set (and costs)
+    ``Plan.predict()`` ranks; pass any name from
+    ``repro.core.backends.available()`` to pin one.
+    """
+    return Plan(
+        global_shape,
+        mesh,
+        ndim=ndim,
+        direction=direction,
+        backend=backend,
+        axis_name=axis_name,
+        local_impl=local_impl,
+        fuse_dft=fuse_dft,
+        transpose_back=transpose_back,
+        dtype=dtype,
+        params=params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims (one release): FFTPlan dataclass + make_plan
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class FFTPlan:
-    global_shape: Tuple[int, ...]  # (..., R, C) for 2-D, (..., D0, D1, D2) for 3-D
+    """Deprecated: thin shim over :class:`Plan` preserving the old field
+    layout. Use :func:`plan_fft` instead."""
+
+    global_shape: Tuple[int, ...]
     mesh: Mesh
     axis_name: str
     cfg: FFTConfig = FFTConfig()
-    ndim_transform: int = 2  # 1, 2 or 3
+    ndim_transform: int = 2
 
     def __post_init__(self):
-        p = self.mesh.shape[self.axis_name]
-        if self.ndim_transform == 2:
-            r, c = self.global_shape[-2:]
-            if r % p or c % p:
-                raise ValueError(f"2-D shape {(r, c)} not divisible by shards {p}")
-        elif self.ndim_transform == 3:
-            d0, d1, d2 = self.global_shape[-3:]
-            if d0 % p or (d1 * d2) % p:
-                raise ValueError(f"3-D shape {(d0, d1, d2)} not shardable by {p}")
-        elif self.ndim_transform == 1:
-            n = self.global_shape[-1]
-            if n % (p * p):
-                raise ValueError(f"1-D size {n} must be divisible by P^2={p*p}")
-        else:
-            raise ValueError("ndim_transform must be 1, 2 or 3")
+        plan = Plan(
+            self.global_shape,
+            self.mesh,
+            ndim=self.ndim_transform,
+            backend=self.cfg.strategy,
+            axis_name=self.axis_name,
+            local_impl=self.cfg.local_impl,
+            fuse_dft=self.cfg.fuse_dft,
+            transpose_back=self.cfg.transpose_back,
+        )
+        object.__setattr__(self, "_plan", plan)
 
-    # -- sharding specs ------------------------------------------------------
     def input_sharding(self) -> NamedSharding:
-        nd = len(self.global_shape)
-        k = {1: 1, 2: 2, 3: 3}[self.ndim_transform]
-        spec = [None] * nd
-        spec[nd - k] = self.axis_name  # shard the leading transform dim
-        return NamedSharding(self.mesh, P(*spec))
+        return self._plan.input_sharding()
 
     def input_spec(self, dtype=jnp.complex64) -> jax.ShapeDtypeStruct:
-        return jax.ShapeDtypeStruct(self.global_shape, dtype, sharding=self.input_sharding())
-
-    # -- execution -----------------------------------------------------------
-    def _fn(self, inverse: bool):
-        if self.ndim_transform == 2:
-            return lambda x: dfft.fft2(x, self.mesh, self.axis_name, self.cfg, inverse=inverse)
-        if self.ndim_transform == 3:
-            return lambda x: dfft.fft3(x, self.mesh, self.axis_name, self.cfg, inverse=inverse)
-        if inverse:
-            raise NotImplementedError("1-D large inverse: conjugate externally")
-        return lambda x: dfft.fft1d_large(x, self.mesh, self.axis_name, self.cfg)
+        return self._plan.input_spec(dtype)
 
     def execute(self, x: jax.Array) -> jax.Array:
-        return self._fn(False)(x)
+        return self._plan.execute(x)
 
     def inverse(self, x: jax.Array) -> jax.Array:
-        return self._fn(True)(x)
+        return self._plan.inverse(x)
 
     def lower(self, inverse: bool = False):
-        """Abstract lowering for dry-run / roofline (no allocation)."""
-        return jax.jit(self._fn(inverse)).lower(self.input_spec())
+        return self._plan.lower(inverse)
 
-    # -- napkin model ---------------------------------------------------------
-    def comm_bytes(self) -> float:
-        """Bytes each device ships per pencil exchange ((1-1/P) of local)."""
-        import numpy as np
-
-        p = self.mesh.shape[self.axis_name]
-        local = np.prod(self.global_shape) * 8 / p  # c64
-        return float(local * (1 - 1 / p))
+    def comm_bytes(self, dtype=jnp.complex64) -> float:
+        return self._plan.comm_bytes(dtype)
 
 
 def make_plan(
@@ -96,8 +332,16 @@ def make_plan(
     transpose_back: bool = False,
     ndim_transform: int = 2,
 ) -> FFTPlan:
+    """Deprecated: use :func:`plan_fft` (``strategy`` -> ``backend``,
+    ``ndim_transform`` -> ``ndim``)."""
     from repro.core.sharding import fft_axis
 
+    warnings.warn(
+        "make_plan is deprecated; use repro.core.plan_fft(shape, mesh, "
+        "ndim=..., backend=...) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return FFTPlan(
         global_shape=tuple(global_shape),
         mesh=mesh,

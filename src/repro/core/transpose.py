@@ -32,22 +32,23 @@ rows ``R = P*r`` are sharded over ``axis_name``; the transposed result is
 
 from __future__ import annotations
 
-from typing import Callable, Literal, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-Strategy = Literal["alltoall", "scatter", "bisection"]
+from repro.core.compat import axis_size as _axis_size
+
+#: A registered backend name (see ``repro.core.backends.available()``).
+#: Plain ``str`` on purpose: the registry, not a hand-kept enumeration,
+#: defines the valid set.
+Strategy = str
 
 #: chunk_fn(chunk, src_index) -> processed chunk. ``chunk`` is the
 #: (..., r, c) block received from shard ``src_index``, already transposed
 #: to (..., c, r) when ``pre_transposed`` -- see _scatter below.
 ChunkFn = Callable[[jax.Array, jax.Array], jax.Array]
-
-
-def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
 
 
 def _split_chunks(x: jax.Array, p: int) -> jax.Array:
@@ -86,19 +87,24 @@ def _alltoall(x: jax.Array, axis_name: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _scatter(
+def _chunked_exchange(
     x: jax.Array,
     axis_name: str,
-    chunk_fn: Optional[ChunkFn] = None,
+    chunk_fn: Optional[ChunkFn],
+    schedule,
 ) -> jax.Array:
-    """P-1 direct sends; each received chunk is transposed (and optionally
-    further processed by ``chunk_fn``) immediately -- 'the arriving data
-    chunks can be transposed as soon as they are received' (paper, §3).
+    """Shared P-1-round chunk-streaming exchange.
+
+    ``schedule(me, s, p)`` defines round s: the static ppermute ``perm``,
+    the chunk slot this rank ships, and the source rank of the chunk it
+    receives. Each received chunk is transposed (and optionally further
+    processed by ``chunk_fn``) immediately -- 'the arriving data chunks
+    can be transposed as soon as they are received' (paper, §3).
 
     Dataflow note: every send uses a *pre-existing* chunk of the input, so
     no ppermute depends on any chunk_fn result. XLA is free to issue the
-    next ring step while the previous chunk's transpose/compute runs;
-    on TPU the sends lower to async collective-permute-start/done pairs.
+    next round while the previous chunk's transpose/compute runs; on TPU
+    the sends lower to async collective-permute-start/done pairs.
     """
     p = _axis_size(axis_name)
     me = lax.axis_index(axis_name)
@@ -111,14 +117,13 @@ def _scatter(
             out = chunk_fn(out, src)
         return out
 
-    # Own chunk (distance 0) -- compute immediately, no communication.
+    # Own chunk (round 0) -- compute immediately, no communication.
     own = jnp.take(chunks, me, axis=0)
     parts = [(me, process(own, me))]
     for s in range(1, p):
-        perm = [(i, (i + s) % p) for i in range(p)]
-        send = jnp.take(chunks, (me + s) % p, axis=0)  # destined to me+s
-        recv = lax.ppermute(send, axis_name, perm)  # from me-s
-        src = (me - s) % p
+        perm, send_slot, src = schedule(me, s, p)
+        send = jnp.take(chunks, send_slot, axis=0)
+        recv = lax.ppermute(send, axis_name, perm)
         parts.append((src, process(recv, src)))
 
     # Assemble (..., c, R): chunk from src j supplies columns [j*r, (j+1)*r).
@@ -127,6 +132,21 @@ def _scatter(
     for src, part in parts:
         out = lax.dynamic_update_slice_in_dim(out, part, src * r, axis=out.ndim - 1)
     return out
+
+
+def _scatter(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: Optional[ChunkFn] = None,
+) -> jax.Array:
+    """P-1 direct sends, a one-directional ring walk over distances
+    1..P-1 -- the paper's N-scatter decomposition."""
+
+    def ring(me, s, p):
+        # round s: ship the chunk destined to me+s; receive from me-s
+        return [(i, (i + s) % p) for i in range(p)], (me + s) % p, (me - s) % p
+
+    return _chunked_exchange(x, axis_name, chunk_fn, ring)
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +192,33 @@ def _bisection(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Strategy: pairwise XOR exchange (beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_xor(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: Optional[ChunkFn] = None,
+) -> jax.Array:
+    """Pairwise exchange: round s swaps one chunk with partner (me XOR s).
+
+    XOR with a fixed s is an involution, so every round is a symmetric
+    bidirectional swap (both halves of each link busy), unlike the ring's
+    one-directional walk. Requires power-of-two P (XOR must stay a
+    permutation of the ranks). Chunks arrive incrementally, so per-chunk
+    ``chunk_fn`` processing overlaps the next round exactly as in
+    ``scatter``.
+    """
+
+    def swap(me, s, p):
+        # round s: both ship to and receive from the same partner me^s
+        return [(i, i ^ s) for i in range(p)], me ^ s, me ^ s
+
+    return _chunked_exchange(x, axis_name, chunk_fn, swap)
+
+
+# ---------------------------------------------------------------------------
 # Public entry point
 # ---------------------------------------------------------------------------
 
@@ -180,33 +227,40 @@ def distributed_transpose(
     x: jax.Array,
     axis_name: str,
     *,
-    strategy: Strategy = "alltoall",
+    strategy: str = "alltoall",
     chunk_fn: Optional[ChunkFn] = None,
 ) -> jax.Array:
     """Transpose a (..., R, C) array whose R axis is sharded over
     ``axis_name`` into a (..., C, R) array with C sharded. Must be called
     inside ``shard_map``; local in (..., r, C), local out (..., c, R).
 
-    ``chunk_fn`` is only honoured by the ``scatter`` strategy (the others
-    are monolithic collectives with nothing to interleave -- exactly the
-    paper's point).
+    ``strategy`` names a registered :mod:`repro.core.backends` backend;
+    ``chunk_fn`` is only honoured by chunk-streaming backends
+    (``backend.supports_chunk_fn`` -- the monolithic collectives have
+    nothing to interleave, exactly the paper's point).
     """
+    from repro.core import backends  # late import: backends registers over us
+
+    backend = backends.get(strategy)
+    if backend.kind != "shard_map":
+        raise ValueError(
+            f"backend {strategy!r} is a whole-transform backend with no "
+            f"shard_map transpose; use it through fft2/fft3/plan_fft"
+        )
     p = _axis_size(axis_name)
     if x.shape[-1] % p:
         raise ValueError(f"column count {x.shape[-1]} not divisible by shards {p}")
+    if chunk_fn is not None and not backend.supports_chunk_fn:
+        raise ValueError(
+            f"chunk_fn requires a chunk-streaming backend "
+            f"(got {strategy!r}; streaming: "
+            f"{[b for b in backends.available() if backends.get(b).supports_chunk_fn]})"
+        )
     if p == 1:
         y = _transpose_local(x)
         if chunk_fn is not None:
             y = chunk_fn(y, jnp.asarray(0))
         return y
-    if strategy == "alltoall":
-        if chunk_fn is not None:
-            raise ValueError("chunk_fn requires the 'scatter' strategy")
-        return _alltoall(x, axis_name)
-    if strategy == "scatter":
-        return _scatter(x, axis_name, chunk_fn)
-    if strategy == "bisection":
-        if chunk_fn is not None:
-            raise ValueError("chunk_fn requires the 'scatter' strategy")
-        return _bisection(x, axis_name)
-    raise ValueError(f"unknown transpose strategy: {strategy!r}")
+    if not backend.supports(p):
+        raise ValueError(f"backend {strategy!r} does not support P={p}")
+    return backend.transpose(x, axis_name, chunk_fn)

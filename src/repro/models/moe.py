@@ -30,6 +30,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.compat import axis_size, shard_map
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models import common, mlp
@@ -230,7 +231,7 @@ def _ring_exchange_ffn(
     ~40 GB/layer at deepseek scale -- so training uses the batched form
     (identical bytes on the wire, bigger MXU matmuls, one cotangent).
     """
-    pn = lax.axis_size(axis_name)
+    pn = axis_size(axis_name)
     me = lax.axis_index(axis_name)
 
     def ffn(chunk):  # (..., E_loc, C, d) with my local experts
@@ -298,7 +299,7 @@ def _apply_moe_ring(p, x, cfg: ModelConfig, mesh, axis_name: str = "model"):
 
     x_spec = P(batch_axes, axis_name, None)
     e_spec = P(axis_name, None, None)
-    return jax.shard_map(
+    return shard_map(
         island,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), e_spec, e_spec, e_spec),

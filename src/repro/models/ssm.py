@@ -24,6 +24,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.compat import shard_map
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models import common
@@ -362,7 +363,7 @@ def apply_slstm_block(
         ba = tuple(a for a in ("pod", "data") if a in mesh.shape) or None
         bspec = P(ba)
         st_spec = SLSTMState(h=bspec, c=bspec, n=bspec, m=bspec)
-        final, hs = jax.shard_map(
+        final, hs = shard_map(
             scan_fn,
             mesh=mesh,
             in_specs=(P(ba, None, None), st_spec, P(None, None, None)),

@@ -22,6 +22,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.compat import axis_size
 
 
 def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -50,7 +51,7 @@ def compressed_psum(
     # Ship int8 on the wire: all-gather the quantized payload + per-device
     # scales ((P-1)/P * 1 byte/elem vs 2(P-1)/P * 4 for a f32 ring
     # all-reduce = 8x fewer ICI bytes), dequantize-and-sum locally.
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     q_all = lax.all_gather(q, axis_name)  # (P, ...) int8 on the wire
     s_all = lax.all_gather(scale, axis_name)  # (P,) f32 (negligible)
     total = jnp.tensordot(

@@ -21,6 +21,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.compat import shard_map
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import sharding as shlib
@@ -169,7 +170,7 @@ def make_ddp_compressed_step(model: Model, tcfg: TrainConfig, mesh, axis_name: s
         specs_state = jax.tree.map(lambda _: rep, state)
         specs_batch = jax.tree.map(lambda _: bspec, batch)
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 inner,
                 mesh=mesh,
                 in_specs=(specs_state, specs_batch),

@@ -146,10 +146,11 @@ def test_softcap_bounds(rng):
 
 FLASH_DECODE_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from repro.core.compat import make_mesh, shard_map
+from jax.sharding import PartitionSpec as P
 from repro.models import attention as A
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 B, S, H, D = 2, 64, 4, 16
 q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
@@ -168,7 +169,7 @@ def shard_fn(q, k, v):
     out = out[:, None, :, :] if out.ndim == 3 else out
     return A.flash_decode_combine(out, m, l, "data")
 
-got = jax.jit(jax.shard_map(
+got = jax.jit(shard_map(
     shard_fn, mesh=mesh,
     in_specs=(P(), P(None, "data"), P(None, "data")),
     out_specs=P(), check_vma=False,

@@ -1,0 +1,181 @@
+"""Collective backend registry: contents, cost-model unification,
+auto-selection rule, error behaviour. Single-device/host-process tests
+(the multi-device oracle sweeps live in test_fft_distributed.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import backends, comm_model
+
+
+PAPER_STRATEGIES = {"alltoall", "scatter", "bisection", "xla_auto"}
+
+
+def test_registry_contains_all_strategies():
+    names = set(backends.available())
+    assert PAPER_STRATEGIES <= names
+    assert "pairwise_xor" in names  # beyond-paper addition
+    assert tuple(sorted(names)) == backends.available()  # sorted, stable
+
+
+def test_unknown_backend_lists_registry():
+    with pytest.raises(ValueError) as ei:
+        backends.get("lci")
+    msg = str(ei.value)
+    for name in backends.available():
+        assert name in msg
+
+
+def test_duplicate_registration_rejected():
+    class Dup(backends.CollectiveBackend):
+        name = "alltoall"
+
+    with pytest.raises(ValueError, match="already registered"):
+        backends.register(Dup)
+
+
+def test_cost_delegates_to_comm_model():
+    """The backend cost methods ARE the napkin model -- no drift."""
+    m, p = 8 * 2**20, 16
+    assert backends.get("alltoall").cost(m, p) == comm_model.t_alltoall(m, p)
+    assert backends.get("scatter").cost(m, p) == comm_model.t_scatter_ring(m, p)
+    assert backends.get("bisection").cost(m, p) == comm_model.t_bisection(m, p)
+    assert backends.get("pairwise_xor").cost(m, p) == comm_model.t_pairwise(m, p)
+    assert backends.get("xla_auto").cost(m, p) == comm_model.t_alltoall(m, p)
+
+
+def test_cheapest_is_cost_argmin():
+    """auto selection == argmin over the SAME set predict() ranks (every
+    registered backend supporting p)."""
+    m, p = 4 * 2**20, 8
+    pick = backends.cheapest(m, p)
+    costs = {
+        n: backends.get(n).cost(m, p)
+        for n in backends.available()
+        if backends.get(n).supports(p)
+    }
+    assert costs[pick] == min(costs.values())
+
+
+def test_pairwise_cost_charges_chunk_compute():
+    """Streaming backends must thread chunk compute through their model
+    (regression: pairwise ignored exposed per-chunk compute)."""
+    m, p = 1 * 2**20, 8
+    prm = comm_model.CommParams()
+    per_chunk = prm.alpha_s + (m / p) / prm.beta_bytes_s
+    heavy = 10 * per_chunk
+    assert backends.get("pairwise_xor").cost(m, p, prm, heavy) == backends.get(
+        "scatter"
+    ).cost(m, p, prm, heavy)
+    assert backends.get("pairwise_xor").cost(m, p, prm, heavy) > backends.get(
+        "pairwise_xor"
+    ).cost(m, p, prm) + heavy
+    # same per-chunk units everywhere: monolithic backends serialize all
+    # p chunk computes, so the streaming overlap must win under heavy
+    # chunk compute -- exactly the paper's motivation for N-scatter
+    assert backends.get("scatter").cost(m, p, prm, heavy) < backends.get(
+        "alltoall"
+    ).cost(m, p, prm, heavy)
+    assert backends.cheapest(m, p, prm, chunk_compute_s=heavy) in ("scatter", "pairwise_xor")
+
+
+def test_pairwise_xor_power_of_two_only():
+    b = backends.get("pairwise_xor")
+    assert b.supports(1) and b.supports(2) and b.supports(8)
+    assert not b.supports(3) and not b.supports(6)
+    # non-power-of-two P: excluded from auto selection, not an error
+    assert backends.cheapest(1024, 6) in backends.available()
+
+
+def test_global_backend_has_no_transpose():
+    with pytest.raises(NotImplementedError):
+        backends.get("xla_auto").transpose(None, "model")
+
+
+def test_scatter_exposed_compute_charged():
+    """Chunk compute beyond per-chunk comm must surface in the model
+    (regression: the exposed term was multiplied by zero)."""
+    m, p = 1 * 2**20, 8
+    prm = comm_model.CommParams()
+    per_chunk = prm.alpha_s + (m / p) / prm.beta_bytes_s
+    heavy = 10 * per_chunk
+    t = comm_model.t_scatter_ring(m, p, prm, chunk_compute_s=heavy)
+    base = comm_model.t_scatter_ring(m, p, prm)
+    # every step exposes (heavy - per_chunk); the last chunk adds heavy
+    expect = base + heavy + (heavy - per_chunk) * (p - 1)
+    assert abs(t - expect) < 1e-15
+    # fully-hidden regime: only the trailing chunk compute is charged
+    light = 0.5 * per_chunk
+    assert abs(comm_model.t_scatter_ring(m, p, prm, light) - (base + light)) < 1e-15
+
+
+def test_pairwise_model_matches_ring_bytes():
+    """Pairwise ships the same bytes as the ring (P-1 rounds of M/P)."""
+    m, p = 2 * 2**20, 8
+    assert comm_model.t_pairwise(m, p) == comm_model.t_scatter_ring(m, p)
+    assert comm_model.t_pairwise(m, 1) == 0.0
+
+
+def test_parse_collectives_permute_counted_point_to_point():
+    """collective-permute is point-to-point: full result size, no ring
+    factor (regression for the removed unreachable factor branch)."""
+    fake = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (p: f32[16,4]) -> f32[16,4] {
+  %p = f32[16,4]{1,0} parameter(0)
+  ROOT %cp = f32[16,4]{1,0} collective-permute(%p), source_target_pairs={{0,1},{1,0}}
+}
+"""
+    stats = comm_model.parse_collectives(fake)
+    assert stats.counts["collective-permute"] == 1
+    assert stats.bytes_moved["collective-permute"] == 16 * 4 * 4
+
+
+def test_plan_comm_bytes_dtype_aware():
+    import jax.numpy as jnp
+
+    from repro.core import plan_fft
+    from repro.core.compat import make_mesh_1d
+
+    mesh = make_mesh_1d(1)
+    plan64 = plan_fft((32, 32), mesh, backend="alltoall")
+    plan128 = plan_fft((32, 32), mesh, backend="alltoall", dtype=jnp.complex128)
+    assert plan128.local_bytes() == 2 * plan64.local_bytes()
+    # P=1: nothing crosses the fabric
+    assert plan64.comm_bytes() == 0.0
+    # the override argument wins over the planned dtype
+    assert plan64.local_bytes(jnp.complex128) == plan128.local_bytes()
+
+
+def test_plan_validates_once_and_rejects():
+    from repro.core import plan_fft
+    from repro.core.compat import make_mesh_1d
+
+    mesh = make_mesh_1d(1)
+    with pytest.raises(ValueError, match="registered backends"):
+        plan_fft((32, 32), mesh, backend="tcp")
+    with pytest.raises(ValueError, match="ndim"):
+        plan_fft((32, 32), mesh, ndim=4)
+    with pytest.raises(ValueError, match="direction"):
+        plan_fft((32, 32), mesh, direction="sideways")
+    with pytest.raises(ValueError, match="fuse_dft"):
+        plan_fft((32, 32), mesh, backend="bisection", fuse_dft=True)
+    # unexecutable combination must fail at plan time, not first execute
+    with pytest.raises(NotImplementedError, match="1-D large inverse"):
+        plan_fft((4096,), mesh, ndim=1, direction="inverse")
+
+
+def test_make_plan_deprecated_but_working():
+    import jax.numpy as jnp
+
+    from repro.core import make_plan
+    from repro.core.compat import make_mesh_1d
+
+    mesh = make_mesh_1d(1)
+    with pytest.warns(DeprecationWarning):
+        plan = make_plan((16, 16), mesh, strategy="alltoall")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((16, 16)), jnp.complex64)
+    y = np.asarray(plan.execute(x))
+    assert np.abs(y - np.fft.fft2(np.asarray(x)).T).max() < 1e-3
+    assert plan.comm_bytes() == 0.0  # P=1

@@ -7,7 +7,8 @@ from conftest import run_subprocess
 
 CROSS_MESH_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.core.compat import make_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 import tempfile, os
 
@@ -15,14 +16,14 @@ tmp = tempfile.mkdtemp()
 mgr = CheckpointManager(tmp, keep=2)
 
 # save on a (2,4) mesh with FSDP x TP sharding
-mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh_a = make_mesh((2, 4), ("data", "model"))
 w = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
 tree = {"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model"))),
         "step": jnp.asarray(7)}
 mgr.save(10, tree, blocking=True)
 
 # restore on a DIFFERENT mesh shape (4,2) -- elastic re-scale
-mesh_b = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh_b = make_mesh((4, 2), ("data", "model"))
 shardings = {"w": NamedSharding(mesh_b, P("data", "model")),
              "step": NamedSharding(mesh_b, P())}
 restored = mgr.restore(10, tree, shardings=shardings)
@@ -31,8 +32,7 @@ assert restored["w"].sharding.mesh.shape["data"] == 4
 print("PASS cross-mesh restore")
 
 # restore on fewer devices entirely (half the fleet died)
-mesh_c = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2,
-                       devices=jax.devices()[:4])
+mesh_c = make_mesh((2, 2), ("data", "model"))  # first 4 devices
 sh_c = {"w": NamedSharding(mesh_c, P("data", "model")), "step": NamedSharding(mesh_c, P())}
 restored_c = mgr.restore(10, tree, shardings=sh_c)
 assert np.array_equal(np.asarray(restored_c["w"]), np.asarray(w))
@@ -42,13 +42,13 @@ print("PASS shrunk-fleet restore")
 DDP_COMPRESSED_CODE = r"""
 import dataclasses
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import TrainConfig, get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.models import Model
 from repro.train import init_ddp_state, make_ddp_compressed_step
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 cfg = dataclasses.replace(get_config("phi3-medium-14b", reduced=True), dtype="float32")
 model = Model(cfg)
 ds = SyntheticLM(DataConfig(cfg.vocab_size, 16, 8, seed=0))

@@ -1,7 +1,10 @@
-"""Distributed FFT: all strategies vs numpy oracle on 8 host devices.
+"""Distributed FFT: every registered backend vs numpy oracle on 8 host
+devices, plus the plan_fft front-end (auto selection, executable cache).
 
-One consolidated subprocess (jax re-init with forced device count is
-per-process), asserting every (transform x strategy x impl) cell.
+One consolidated subprocess per device-count regime (jax re-init with a
+forced device count is per-process). The strategy sweeps iterate
+``repro.core.backends.available()``, so registering a new backend
+automatically validates it against the oracle here.
 """
 
 import pytest
@@ -10,18 +13,22 @@ from conftest import run_subprocess
 
 CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.core import fft2, ifft2, fft3, fft1d_large, FFTConfig, make_plan
+from repro.core import backends, fft2, ifft2, fft3, fft1d_large, FFTConfig, plan_fft
+from repro.core.compat import make_mesh
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
+P = 8
 rng = np.random.default_rng(0)
 def c64(*s):
     return (rng.standard_normal(s) + 1j * rng.standard_normal(s)).astype(np.complex64)
 
+def shard_names():
+    return [n for n in backends.available() if backends.get(n).supports(P)]
+
 x = c64(64, 64)
 ref = np.fft.fft2(x)
 tol = 1e-4 * np.abs(ref).max()
-for strat in ["alltoall", "scatter", "bisection", "xla_auto"]:
+for strat in shard_names():
     impls = ["jnp", "matmul", "pallas"] if strat == "scatter" else ["jnp"]
     for impl in impls:
         y = np.asarray(fft2(jnp.asarray(x), mesh, "model", FFTConfig(strategy=strat, local_impl=impl)))
@@ -49,25 +56,63 @@ print("PASS batched")
 
 x3 = c64(16, 8, 8)
 r3 = np.fft.fftn(x3, axes=(-3, -2, -1))
-for strat in ["alltoall", "scatter", "bisection", "xla_auto"]:
+for strat in shard_names():
     y = np.asarray(fft3(jnp.asarray(x3), mesh, "model", FFTConfig(strategy=strat)))
     assert np.abs(y - r3).max() < 1e-4 * np.abs(r3).max(), strat
 print("PASS fft3")
 
 x1 = c64(4096)
 r1 = np.fft.fft(x1)
-for strat in ["alltoall", "scatter", "bisection"]:
+for strat in shard_names():
+    if backends.get(strat).kind != "shard_map":
+        continue
     y = np.asarray(fft1d_large(jnp.asarray(x1), mesh, "model", FFTConfig(strategy=strat), rows=64))
     assert np.abs(y - r1).max() < 1e-4 * np.abs(r1).max(), strat
 print("PASS fft1d_large")
 
-# plan API + abstract lowering
-plan = make_plan((128, 64), mesh, strategy="scatter")
-y = np.asarray(plan.execute(jnp.asarray(c64(128, 64))))
-assert y.shape == (64, 128)
+# plan API: auto backend = cost-model argmin, cached executable, lowering
+plan = plan_fft((128, 64), mesh, backend="auto")
+pred = plan.predict()
+assert abs(pred[plan.backend] - min(pred.values())) < 1e-12, (plan.backend, pred)
+xp = jnp.asarray(c64(128, 64))
+y1 = plan.execute(xp)
+y2 = plan.execute(xp)
+assert y1.shape == (64, 128)
+assert np.allclose(np.asarray(y1), np.asarray(y2))
+assert plan.compiles == 1
+assert plan.executable_stats()[("forward", "complex64")] == 1, plan.executable_stats()
 lowered = plan.lower()
-assert "main" in lowered.as_text() or lowered is not None
+assert lowered is not None
 print("PASS plan")
+"""
+
+PLAN_SWEEP_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import backends, plan_fft, reference_fft2
+from repro.core.compat import make_mesh
+
+rng = np.random.default_rng(1)
+x = (rng.standard_normal((32, 32)) + 1j * rng.standard_normal((32, 32))).astype(np.complex64)
+ref = np.asarray(reference_fft2(jnp.asarray(x)))
+tol = 1e-4 * np.abs(ref).max()
+
+for p in (1, 2, 4):
+    mesh = make_mesh((p,), ("model",))
+    for name in backends.available():
+        if not backends.get(name).supports(p):
+            continue
+        plan = plan_fft((32, 32), mesh, backend=name)
+        y = np.asarray(plan.execute(jnp.asarray(x)))
+        assert np.abs(y - ref.T).max() < tol, (p, name, np.abs(y - ref.T).max())
+        z = np.asarray(plan.inverse(jnp.asarray(y)))
+        assert np.abs(z.T - x.T).max() < 1e-4, (p, name)
+        # repeated execute reuses the one cached jitted executable
+        plan.execute(jnp.asarray(x))
+        assert plan.executable_stats()[("forward", "complex64")] == 1
+    auto = plan_fft((32, 32), mesh, backend="auto")
+    pred = auto.predict()
+    assert abs(pred[auto.backend] - min(pred.values())) < 1e-12, (p, auto.backend, pred)
+    print(f"PASS plan sweep P={p}")
 """
 
 
@@ -75,3 +120,9 @@ print("PASS plan")
 def test_distributed_fft_8dev():
     out = run_subprocess(CODE, devices=8)
     assert out.count("PASS") == 8, out
+
+
+@pytest.mark.slow
+def test_plan_all_backends_p124():
+    out = run_subprocess(PLAN_SWEEP_CODE, devices=4)
+    assert out.count("PASS") == 3, out

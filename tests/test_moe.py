@@ -67,11 +67,11 @@ def test_dispatch_indices_capacity_order(rng):
 RING_CODE = r"""
 import dataclasses
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 from repro.configs import get_config
 from repro.models import moe as moe_lib
 
-mesh = jax.make_mesh((1, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((1, 4), ("data", "model"))
 cfg = get_config("deepseek-v3-671b", reduced=True)
 cfg = dataclasses.replace(cfg, dtype="float32",
     moe=dataclasses.replace(cfg.moe, num_experts=8, capacity_factor=8.0, dispatch="ring"))

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import TrainConfig
+from repro.core.compat import shard_map
 from repro.optim import adamw, compress, schedule
 
 
@@ -90,6 +91,6 @@ def test_compressed_psum_single_device():
         return compress.compressed_psum(g, "data", err)
 
     out, new_err = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False)
+        shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False)
     )(g, err)
     np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=1e-2)

@@ -7,14 +7,15 @@ from conftest import run_subprocess
 
 CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.core.compat import make_mesh, shard_map
 from repro.core import (collective_matmul_ag, ring_all_gather,
                         ring_reduce_scatter, ring_scatter_reduce)
 
-mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("model",))
 rng = np.random.default_rng(0)
 def run(fn, x, si, so):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=si, out_specs=so, check_vma=False))(x)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=si, out_specs=so, check_vma=False))(x)
 
 v = rng.standard_normal((8, 16)).astype(np.float32)
 g = run(lambda a: ring_all_gather(a, "model", axis=0), jnp.asarray(v), P("model", None), P(None, None))
@@ -47,7 +48,7 @@ print("PASS ring_scatter_reduce")
 def loss(a):
     def f(al):
         return (ring_all_gather(al, "model", axis=0) ** 2).sum()
-    return jax.shard_map(f, mesh=mesh, in_specs=P("model", None), out_specs=P(), check_vma=False)(a)
+    return shard_map(f, mesh=mesh, in_specs=P("model", None), out_specs=P(), check_vma=False)(a)
 gr = jax.grad(loss)(jnp.asarray(v))
 assert np.allclose(np.asarray(gr), 2 * v, atol=1e-4)
 print("PASS ring gradient")

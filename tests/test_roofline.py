@@ -100,10 +100,11 @@ ENTRY %main (p: f32[64,64]) -> f32[64,64] {
 
 COLLECTIVE_CODE = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import hlo_analysis
+from repro.core.compat import make_mesh
 
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("model",))
 L, B, D = 5, 8, 64
 
 def f(ws, x):
