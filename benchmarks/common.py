@@ -13,26 +13,15 @@ from __future__ import annotations
 import os
 import subprocess
 import sys
-import time
-from typing import Callable, List
-
-import jax
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:  # allow running without PYTHONPATH=src
+    sys.path.insert(0, SRC)
 
-
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall-time (s) of a jitted call (blocks on result)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+# One timing implementation for benchmarks AND the measured planner
+# (repro.core.planner owns it; the planner cannot import benchmarks/).
+from repro.core.planner import time_fn  # noqa: E402,F401
 
 
 def run_devices_subprocess(code: str, devices: int, timeout: int = 900) -> str:

@@ -1,0 +1,66 @@
+"""Measured-vs-model FFT backend rows -- the perf-trajectory seed.
+
+One subprocess per device count runs ``plan_fft(..., planner="measure")``
+on P host devices: the measured planner times every registered backend
+through the plan front-end (warmup + median), and ``Plan.predict()``
+supplies each backend's own alpha-beta prediction next to it -- the
+paper's measured-parcelport vs napkin-model comparison, as data.
+
+``run_json()`` returns machine-readable dict rows (written to
+``BENCH_fft.json`` by ``benchmarks/run.py --json``); ``to_csv()`` renders
+the same rows in the harness's ``name,us_per_call,derived`` format.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import json
+from repro.core import plan_fft, planner
+from repro.core.compat import make_mesh
+
+n, p = __N__, __P__
+mesh = make_mesh((p,), ("model",))
+plan = plan_fft((n, n), mesh, planner="measure")
+pred = plan.predict()
+dev = planner.device_kind(mesh)
+for name in sorted(plan.measured):
+    row = {"bench": "fft2", "n": n, "p": p, "backend": name,
+           "measured_us": round(plan.measured[name] * 1e6, 1),
+           "model_us": round(pred[name] * 1e6, 2),
+           "picked": plan.backend, "device_kind": dev}
+    print("ROW " + json.dumps(row))
+"""
+
+
+def run_json(n: int = 256, device_counts: Iterable[int] = (1, 2, 4)) -> List[dict]:
+    """Measured + model-predicted rows per backend per device count."""
+    rows: List[dict] = []
+    for p in device_counts:
+        out = run_devices_subprocess(
+            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        )
+        for line in out.splitlines():
+            if line.startswith("ROW "):
+                rows.append(json.loads(line[4:]))
+    return rows
+
+
+def to_csv(rows: List[dict]) -> List[str]:
+    return [
+        f"fft_measure/{r['backend']}/p{r['p']},{r['measured_us']},"
+        f"model_us={r['model_us']};picked={r['picked']}"
+        for r in rows
+    ]
+
+
+def run(n: int = 256) -> List[str]:
+    return to_csv(run_json(n))
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -3,19 +3,32 @@
 Prints ``name,us_per_call,derived`` CSV rows:
   fig3_chunk/*     chunk-size scaling of collective strategies (Fig. 3)
   fig45_strong/*   FFT strong scaling per strategy + reference (Figs. 4-5)
+  fft_measure/*    measured planner vs alpha-beta model per backend
   moe_dispatch/*   paper technique on the LM stack (MoE a2a strategies)
   local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel]
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel,fft]
+     [--json BENCH_fft.json]
+
+``--json PATH`` additionally writes the fft_measure rows (measured +
+model-predicted per backend) as machine-readable JSON -- the perf
+trajectory artifact CI uploads.
 """
 
 import argparse
+import json
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig3,fig45,moe,kernel")
+    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft")
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write fft_measure rows as JSON (implies the fft section)",
+    )
     args = ap.parse_args()
     wanted = set(args.only.split(","))
     print("name,us_per_call,derived")
@@ -35,6 +48,16 @@ def main() -> None:
 
         rows += strong_scaling.run()
         _flush(rows)
+    if "fft" in wanted or args.json:
+        from benchmarks import fft_measure
+
+        jrows = fft_measure.run_json()
+        rows += fft_measure.to_csv(jrows)
+        _flush(rows)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"schema": 1, "rows": jrows}, f, indent=2)
+            print(f"# wrote {len(jrows)} rows to {args.json}", file=sys.stderr)
     if "moe" in wanted:
         from benchmarks import moe_dispatch
 

@@ -50,6 +50,26 @@ def main():
     print(f"  auto -> {plan.backend!r}  (model ranking: "
           + ", ".join(f"{k}={v*1e6:.1f}us" for k, v in ranking) + ")")
 
+    # planner="measure": FFTW_MEASURE -- time every backend on THIS mesh,
+    # pick the measured argmin, remember it as wisdom
+    measured = plan_fft((n, n), mesh, planner="measure")
+    timed = sorted(measured.measured.items(), key=lambda kv: kv[1])
+    print(f"  measure -> {measured.backend!r}  (measured: "
+          + ", ".join(f"{k}={v*1e6:.0f}us" for k, v in timed) + ")")
+    again = plan_fft((n, n), mesh, planner="measure")
+    print(f"  second identical plan: wisdom_hit={again.wisdom_hit} (no re-measurement)")
+    wisdom_path = "/tmp/fft_wisdom.json"
+    from repro.core import export_wisdom
+    export_wisdom(wisdom_path)
+    print(f"  wisdom exported to {wisdom_path} (import_wisdom() restores it)")
+
+    # calibrate alpha/beta on the real fabric and estimate with those
+    from repro.core import CommParams
+    prm = CommParams.calibrate(mesh, sizes=(4096, 65536, 1048576), iters=3)
+    cal = plan_fft((n, n), mesh, params=prm)
+    print(f"  calibrated alpha={prm.alpha_s*1e6:.1f}us beta={prm.beta_bytes_s/1e9:.1f}GB/s"
+          f" -> estimate picks {cal.backend!r}")
+
     # one plan, cached executable, forward + inverse roundtrip
     z = plan.inverse(plan.execute(x))
     print(f"  ifft2(fft2(x)) roundtrip err: {float(jnp.abs(z - x).max()):.2e}")

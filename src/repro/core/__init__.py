@@ -16,13 +16,16 @@ from repro.core.overlap import (
     ring_reduce_scatter,
     ring_scatter_reduce,
 )
+from repro.core.comm_model import CommParams
 from repro.core.plan import FFTPlan, Plan, make_plan, plan_fft
+from repro.core.planner import export_wisdom, forget_wisdom, import_wisdom, wisdom_size
 from repro.core.transpose import distributed_transpose
 
 __all__ = [
-    "CollectiveBackend", "FFTConfig", "FFTPlan", "MAX_DFT", "Plan", "backends",
-    "collective_matmul_ag", "dft_matrix", "distributed_transpose", "fft1d_large",
-    "fft2", "fft3", "fft_matmul", "ifft2", "local_fft", "local_fft2", "make_plan",
-    "plan_fft", "reference_fft2", "ring_all_gather", "ring_reduce_scatter",
-    "ring_scatter_reduce",
+    "CollectiveBackend", "CommParams", "FFTConfig", "FFTPlan", "MAX_DFT", "Plan",
+    "backends", "collective_matmul_ag", "dft_matrix", "distributed_transpose",
+    "export_wisdom", "fft1d_large", "fft2", "fft3", "fft_matmul", "forget_wisdom",
+    "ifft2", "import_wisdom", "local_fft", "local_fft2", "make_plan", "plan_fft",
+    "reference_fft2", "ring_all_gather", "ring_reduce_scatter",
+    "ring_scatter_reduce", "wisdom_size",
 ]

@@ -136,7 +136,11 @@ def cheapest(
     deterministic."""
     if names is None:
         names = available()
-    costs = {n: get(n).cost(m_bytes, p, prm, chunk_compute_s) for n in sorted(names) if get(n).supports(p)}
+    costs = {}
+    for n in sorted(names):
+        b = get(n)
+        if b.supports(p):
+            costs[n] = b.cost(m_bytes, p, prm, chunk_compute_s)
     if not costs:
         raise ValueError(f"no registered backend supports P={p}")
     return min(costs, key=costs.__getitem__)

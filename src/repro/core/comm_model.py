@@ -12,14 +12,17 @@ Two roles:
    (with the standard (P-1)/P ring factors), since ``cost_analysis()``
    does not report communication.
 
-v5e constants are module-level so benchmarks and the dry-run agree.
+v5e constants are module-level so benchmarks and the dry-run agree --
+they are *defaults*, not truths: ``CommParams.calibrate(mesh)`` fits
+alpha/beta to the actual fabric (ppermute ping-pong sweep + least
+squares), and every cost function takes the params explicitly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
@@ -45,11 +48,120 @@ COLLECTIVE_KINDS = (
 # ---------------------------------------------------------------------------
 
 
+#: Message sizes (bytes) swept by :meth:`CommParams.calibrate` -- wide
+#: enough to pin both the latency intercept and the bandwidth slope.
+CALIBRATE_SIZES = (4096, 16384, 65536, 262144, 1048576, 4194304)
+
+#: Largest physically-plausible fitted bandwidth (1 PB/s; the fastest
+#: real fabrics are ~1 TB/s). Above this the fit's slope is float noise.
+_BETA_FIT_MAX = 1e15
+
+
 @dataclasses.dataclass(frozen=True)
 class CommParams:
     alpha_s: float = ICI_LATENCY_S  # per message
     beta_bytes_s: float = ICI_BW_PER_LINK * ICI_LINKS  # per device
     compute_overlap: float = 0.0  # fraction of per-chunk compute hidden
+
+    @classmethod
+    def calibrate(
+        cls,
+        mesh=None,
+        axis_name: Optional[str] = None,
+        *,
+        sizes: Iterable[int] = CALIBRATE_SIZES,
+        warmup: int = 1,
+        iters: int = 5,
+        timer: Optional["Callable[[int], float]"] = None,
+    ) -> "CommParams":
+        """Fit alpha/beta to *this* fabric by measurement (the paper's
+        Fig. 3 per-parcelport fit, as an API).
+
+        Runs a ppermute ping-pong (one round trip = 2 hops) for each
+        message size in ``sizes`` on the real mesh and least-squares fits
+        ``t_roundtrip = 2*alpha + 2*m/beta``, so ``backend="auto"`` /
+        ``Plan.predict()`` rank with measured constants instead of the
+        module-level v5e numbers (which are wrong on any other fabric).
+
+        ``timer(m_bytes) -> roundtrip seconds`` overrides the real
+        measurement (tests inject synthetic timings; no mesh needed).
+        """
+        import numpy as np
+
+        sizes = [int(m) for m in sizes]
+        if len(sizes) < 2:
+            raise ValueError("calibrate needs >= 2 message sizes to fit alpha and beta")
+        if timer is None:
+            if mesh is None:
+                raise ValueError("calibrate needs a mesh (or an injected timer)")
+            timer = _pingpong_timer(mesh, axis_name, warmup=warmup, iters=iters)
+        ts = np.asarray([float(timer(m)) for m in sizes])
+        # least squares t = a + b*m; round trip = 2 hops
+        slope, intercept = np.polyfit(np.asarray(sizes, dtype=float), ts, 1)
+        alpha = max(float(intercept) / 2.0, 0.0)
+        beta = 2.0 / float(slope) if slope > 0 else float("inf")
+        # a non-positive or numerically-zero slope means the sweep never
+        # left the latency-dominated regime (or was pure noise): an
+        # "infinite bandwidth" fit would silently zero the beta term, so
+        # fall back to the default constant and say so
+        if not (0 < beta <= _BETA_FIT_MAX):
+            import warnings
+
+            warnings.warn(
+                f"calibrate: bandwidth not identifiable from this sweep "
+                f"(fitted slope {float(slope):.3e} s/byte); keeping the "
+                f"default beta -- extend `sizes` upward to fix",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            beta = ICI_BW_PER_LINK * ICI_LINKS
+        return cls(alpha_s=alpha, beta_bytes_s=beta)
+
+
+def _pingpong_timer(mesh, axis_name: Optional[str], *, warmup: int, iters: int):
+    """Real-mesh round-trip timer: each device ships an m-byte f32 block
+    one hop forward and one hop back under jit (lowers to the same
+    collective-permute pairs the scatter backends use)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core.compat import shard_map
+
+    if axis_name is None:
+        from repro.core.sharding import fft_axis
+
+        axis_name = fft_axis(mesh)  # the axis the pencil exchanges ship over
+    p = mesh.shape[axis_name]
+    fwd = [(i, (i + 1) % p) for i in range(p)]
+    bwd = [(i, (i - 1) % p) for i in range(p)]
+
+    def timer(m_bytes: int) -> float:
+        from repro.core.planner import time_fn
+
+        n = max(int(m_bytes) // 4, 1)
+
+        def pingpong(x):
+            y = lax.ppermute(x, axis_name, fwd)
+            return lax.ppermute(y, axis_name, bwd)
+
+        f = jax.jit(
+            shard_map(
+                pingpong,
+                mesh=mesh,
+                in_specs=PartitionSpec(axis_name),
+                out_specs=PartitionSpec(axis_name),
+            )
+        )
+        x = jax.device_put(
+            jnp.zeros((p * n,), jnp.float32),
+            NamedSharding(mesh, PartitionSpec(axis_name)),
+        )
+        return time_fn(f, x, warmup=warmup, iters=iters)
+
+    timer.axis_name = axis_name  # resolved axis, inspectable by callers/tests
+    return timer
 
 
 def t_alltoall(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
@@ -102,27 +214,114 @@ def t_pairwise(m_bytes: float, p: int, prm: CommParams = CommParams(),
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
 _GROUPS_ITOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OP_NAME_RE = re.compile(r" *([\w\-]+)\(")
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+def split_op_line(rhs: str):
+    """Split ``"<result-type> <op-name>(..."`` -- the text after ``=`` of
+    a scheduled-HLO op line -- into ``(result_type, op_name)``.
+
+    The op name is the token after the *end of the result type* (first
+    space at bracket depth 0), NOT the first ``word(`` in the line:
+    post-layout TPU types carry parenthesized layout annotations
+    (``{0:T(1024)}`` tiles, ``S(1)`` memory spaces) whose ``T(``/``S(``
+    would win an eager search and make every op line unrecognizable.
+    Returns None when the text is not an op application.
+    """
+    depth = 0
+    for i, ch in enumerate(rhs):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            m = _OP_NAME_RE.match(rhs, i)
+            if m is None:
+                return None
+            return rhs[:i], m.group(1)
+    return None
 
 
-def _result_bytes(line: str) -> int:
-    """Bytes of the op's result (first shape after '=', incl. tuples)."""
-    rhs = line.split("=", 1)[1]
-    # take shapes up to the op name's '(' -- i.e. the result type only
-    head = rhs.split("(", 1)[0]
+def shape_bytes(type_text: str) -> int:
+    """Total bytes of every array shape in an HLO type string (tuples
+    sum their elements; layout annotations and unknown tokens ignored)."""
     total = 0
-    for m in _SHAPE_RE.finditer(head):
+    for m in _SHAPE_RE.finditer(type_text):
         dtype, dims = m.group(1), m.group(2)
-        if dtype in _DTYPE_BYTES:
-            total += _shape_bytes(dtype, dims)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
     return total
+
+
+def _tuple_elements(type_text: str) -> list:
+    """Top-level elements of a tuple type string ``(a, b, ...)`` --
+    commas inside dims ``[8,4]``, layouts ``{1,0}`` and nested tuples do
+    not split."""
+    inner = type_text.strip()
+    inner = inner[1 : inner.rfind(")")]
+    elems, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            elems.append(inner[start:i])
+            start = i + 1
+    elems.append(inner[start:])
+    return [e.strip() for e in elems if e.strip()]
+
+
+#: '-start' kinds whose tuple result is (operand-alias, receive-buffer,
+#: context-scalars...). all-reduce-start is NOT here: its (possibly
+#: variadic) tuple is the reduced result(s) themselves, all payload.
+_START_ALIAS_KINDS = ("all-gather", "collective-permute")
+
+
+def collective_payload_bytes(
+    result_type: str, *, is_start: bool = False, kind: Optional[str] = None
+) -> int:
+    """Shipped payload bytes of a collective op's result type.
+
+    Sync forms: the result array(s) -- tuples (variadic collectives) sum
+    every element. Async ``-start`` forms of the alias-style kinds
+    (:data:`_START_ALIAS_KINDS`) return
+    ``(operand-alias, receive-buffer, context-scalars...)``: counting the
+    whole tuple double-counts the aliased input and adds the u32[]
+    context words, so only the receive-buffer element (the second)
+    counts. ``all-reduce-start`` tuples are results only -- every element
+    is payload. Shared by :func:`parse_collectives` and
+    :mod:`repro.core.hlo_analysis` so the two parsers cannot drift.
+    """
+    t = result_type.strip()
+    if not t.startswith("("):
+        return shape_bytes(t)
+    if is_start and (kind is None or kind in _START_ALIAS_KINDS):
+        elems = _tuple_elements(t)
+        if len(elems) > 1:
+            return shape_bytes(elems[1])
+    return shape_bytes(t)
+
+
+def collective_scaled_bytes(kind: str, payload_bytes: float, p: int) -> float:
+    """Per-device ICI bytes shipped = payload * the kind's ring factor at
+    group size ``p`` (the table in :func:`parse_collectives`'s docstring).
+    The single copy both HLO parsers use -- editing a factor here cannot
+    make them disagree."""
+    if kind == "collective-permute":
+        return float(payload_bytes)  # point-to-point, no group factor
+    if p <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return payload_bytes * 2 * (p - 1) / p
+    if kind == "reduce-scatter":
+        return payload_bytes * (p - 1)  # result is 1/P of the operand
+    return payload_bytes * (p - 1) / p  # all-gather, all-to-all
 
 
 def _group_size(line: str, default: int) -> int:
@@ -158,7 +357,9 @@ def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveSta
       all-reduce:          ring RS+AG = 2 (P-1)/P * S
       all-to-all:          (P-1)/P * S
       collective-permute:  S (point-to-point)
-    '-start' async forms counted once; '-done' skipped.
+    '-start' async forms counted once (receive-buffer element of the
+    tuple result only -- see :func:`collective_payload_bytes`); '-done'
+    skipped.
     """
     counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
     bytes_moved: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
@@ -166,34 +367,26 @@ def parse_collectives(hlo_text: str, *, default_group: int = 1) -> CollectiveSta
         s = line.strip()
         if "=" not in s:
             continue
-        lowered = s.split("=", 1)[1].lstrip()
-        kind = None
-        for k in COLLECTIVE_KINDS:
-            # op name appears right after the result type, e.g.
-            # "%ag = f32[8,4]{1,0} all-gather-start(...)"
-            if re.search(rf"\b{k}(-start)?\(", lowered):
-                kind = k
-                break
-        if kind is None or f"{kind}-done" in lowered:
+        rhs = s.split("=", 1)[1].lstrip()
+        # op name appears right after the result type, e.g.
+        # "%ag = f32[8,4]{1,0} all-gather-start(...)" or, async tuple,
+        # "%cp = (f32[1024], f32[1024], u32[], u32[]) collective-permute-start(...)"
+        split = split_op_line(rhs)
+        if split is None:
             continue
-        size = _result_bytes(s)
-        if kind == "collective-permute":
-            counts[kind] += 1
-            bytes_moved[kind] += size
+        result_type, opname = split
+        kind = opname
+        for suffix in ("-start", "-done"):
+            if kind.endswith(suffix):
+                kind = kind[: -len(suffix)]
+        if kind not in COLLECTIVE_KINDS or opname.endswith("-done"):
             continue
-        # collective-permute was handled (and ``continue``d) above, so only
-        # the group-sized collectives reach the factor table.
-        p = _group_size(s, default_group)
-        if p <= 1:
-            factor = 0.0
-        elif kind == "all-reduce":
-            factor = 2 * (p - 1) / p
-        elif kind == "reduce-scatter":
-            factor = (p - 1)  # result is 1/P of operand; ships (P-1)/P*operand
-        else:  # all-gather, all-to-all
-            factor = (p - 1) / p
+        size = collective_payload_bytes(
+            result_type, is_start=opname.endswith("-start"), kind=kind
+        )
+        p = 1 if kind == "collective-permute" else _group_size(s, default_group)
         counts[kind] += 1
-        bytes_moved[kind] += size * factor
+        bytes_moved[kind] += collective_scaled_bytes(kind, size, p)
     return CollectiveStats(counts=counts, bytes_moved=bytes_moved)
 
 

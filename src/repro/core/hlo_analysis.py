@@ -31,7 +31,14 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.comm_model import COLLECTIVE_KINDS, _DTYPE_BYTES
+from repro.core.comm_model import (
+    COLLECTIVE_KINDS,
+    _DTYPE_BYTES,
+    collective_payload_bytes,
+    collective_scaled_bytes,
+    shape_bytes as _shape_bytes,
+    split_op_line,
+)
 
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{")
 _SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -49,21 +56,6 @@ _SKIP_OPS = frozenset(
     "tuple get-tuple-element parameter constant bitcast copy-start copy-done "
     "after-all add-dependency partition-id replica-id".split()
 )
-
-
-def _shape_bytes(text: str) -> int:
-    """Total bytes of all array shapes in a type string (handles tuples)."""
-    total = 0
-    for m in _SHAPE.finditer(text):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
 
 
 def _shape_dims(text: str) -> List[int]:
@@ -89,24 +81,20 @@ class Computation:
     ops: List[OpLine]
 
 
-def _parse_operand_names(raw: str) -> List[str]:
-    """Operand %names from the op's argument list."""
-    m = re.search(r"\w[\w\-]*\(", raw.split("=", 1)[1] if "=" in raw else raw)
-    if not m:
-        return []
-    start = raw.index(m.group(0)) + len(m.group(0)) - 1
+def _parse_operand_names(text: str, start: int) -> List[str]:
+    """Operand %names from the balanced-paren argument list whose opening
+    parenthesis is at ``text[start]``."""
     depth = 0
     end = start
-    for i in range(start, len(raw)):
-        if raw[i] == "(":
+    for i in range(start, len(text)):
+        if text[i] == "(":
             depth += 1
-        elif raw[i] == ")":
+        elif text[i] == ")":
             depth -= 1
             if depth == 0:
                 end = i
                 break
-    args = raw[start + 1 : end]
-    return re.findall(r"%([\w\.\-]+)", args)
+    return re.findall(r"%([\w\.\-]+)", text[start + 1 : end])
 
 
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
@@ -134,18 +122,18 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         if not om or "=" not in s:
             continue
         rhs = s.split("=", 1)[1].lstrip()
-        # result type = text before the op name token
-        km = re.search(r"([\w\-]+)\(", rhs)
-        if km is None:
+        # result type / op name split (layout-annotation safe)
+        split = split_op_line(rhs)
+        if split is None:
             continue
-        result_type = rhs[: km.start()].strip()
-        kind = km.group(1)
+        result_type, kind = split
+        args_start = rhs.find("(", rhs.find(kind, len(result_type)))
         cur.ops.append(
             OpLine(
                 name=om.group(1),
                 kind=kind,
-                result_type=result_type,
-                operands=_parse_operand_names(s),
+                result_type=result_type.strip(),
+                operands=_parse_operand_names(rhs, args_start),
                 raw=s,
             )
         )
@@ -211,36 +199,30 @@ class HloAnalyzer:
         return 2.0 * out * k
 
     def _collective_bytes(self, op: OpLine) -> Tuple[str, float]:
-        kind = op.kind.replace("-start", "")
-        base = None
-        for c in COLLECTIVE_KINDS:
-            if kind == c:
-                base = c
-                break
-        if base is None:
+        base = op.kind
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in COLLECTIVE_KINDS:
             return "", 0.0
-        size = _shape_bytes(op.result_type)
+        if op.kind.endswith("-done"):
+            return base, 0.0  # payload already counted at the -start
+        # payload extraction and ring factors are both shared with
+        # comm_model.parse_collectives -- the two parsers cannot drift
+        size = collective_payload_bytes(
+            op.result_type, is_start=op.kind.endswith("-start"), kind=base
+        )
         if base == "collective-permute":
-            # point-to-point: bytes = result size (source_target_pairs,
-            # no replica_groups attribute)
-            return base, float(size)
-        gm = _GROUPS_IOTA.search(op.raw)
-        if gm:
-            p = int(gm.group(2))
+            # point-to-point (source_target_pairs, no replica_groups)
+            p = 1
         else:
-            gm2 = _GROUPS_LIST.search(op.raw)
-            p = len(gm2.group(1).split(",")) if gm2 else self.default_group
-        if p <= 1:
-            return base, 0.0
-        if base == "all-reduce":
-            f = 2 * (p - 1) / p
-        elif base == "reduce-scatter":
-            f = p - 1  # result is 1/P of the operand
-        elif base == "collective-permute":
-            f = 1.0
-        else:
-            f = (p - 1) / p
-        return base, size * f
+            gm = _GROUPS_IOTA.search(op.raw)
+            if gm:
+                p = int(gm.group(2))
+            else:
+                gm2 = _GROUPS_LIST.search(op.raw)
+                p = len(gm2.group(1).split(",")) if gm2 else self.default_group
+        return base, collective_scaled_bytes(base, size, p)
 
     # -- roll-up ----------------------------------------------------------------
     def cost_of(

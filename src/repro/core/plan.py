@@ -70,6 +70,7 @@ class Plan:
         transpose_back: bool = False,
         dtype=jnp.complex64,
         params: Optional[cm.CommParams] = None,
+        chunk_compute_s: float = 0.0,
     ):
         from repro.core.sharding import fft_axis
 
@@ -92,6 +93,11 @@ class Plan:
         self.fuse_dft = fuse_dft
         self.transpose_back = transpose_back
         self.params = params or cm.CommParams()
+        self.chunk_compute_s = chunk_compute_s
+        # set by the measured planner (repro.core.planner.plan_measured)
+        self.planner = "estimate"
+        self.measured: Optional[Dict[str, float]] = None
+        self.wisdom_hit = False
 
         p = self.shards
         if ndim == 2:
@@ -109,7 +115,7 @@ class Plan:
 
         if backend == "auto":
             backend = "scatter" if fuse_dft else backends.cheapest(
-                self.local_bytes(), p, self.params
+                self.local_bytes(), p, self.params, chunk_compute_s=chunk_compute_s
             )
         self.backend_obj = backends.get(backend)  # raises listing the registry
         self.backend = backend
@@ -143,18 +149,26 @@ class Plan:
         return self.local_bytes(dtype) * (1 - 1 / p)
 
     # -- cost model ------------------------------------------------------------
-    def predict(self, dtype=None) -> Dict[str, float]:
+    def predict(self, dtype=None, chunk_compute_s: Optional[float] = None) -> Dict[str, float]:
         """Alpha-beta predicted seconds per backend for this problem --
-        ``n_exchanges * backend.cost(local_bytes, P)`` for every
-        registered backend that supports this shard count."""
+        ``n_exchanges * backend.cost(local_bytes, P, params, chunk_compute_s)``
+        for every registered backend that supports this shard count.
+        ``chunk_compute_s`` (default: the plan's own) is per-chunk compute:
+        streaming backends overlap it with later rounds, monolithic ones
+        serialize it, so the overlap advantage shows up in the ranking.
+        Uses the plan's ``params`` -- pass a calibrated
+        :meth:`~repro.core.comm_model.CommParams.calibrate` result at plan
+        time for measured (rather than v5e napkin) constants."""
         p = self.shards
         m = self.local_bytes(dtype)
+        cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
         n_ex = _EXCHANGES[self.ndim] + (1 if self.ndim == 2 and self.transpose_back else 0)
-        return {
-            name: n_ex * backends.get(name).cost(m, p, self.params)
-            for name in backends.available()
-            if backends.get(name).supports(p)
-        }
+        out = {}
+        for name in backends.available():
+            b = backends.get(name)
+            if b.supports(p):
+                out[name] = n_ex * b.cost(m, p, self.params, cc)
+        return out
 
     # -- sharding specs --------------------------------------------------------
     def input_sharding(self) -> NamedSharding:
@@ -211,9 +225,13 @@ class Plan:
 
     # -- analysis --------------------------------------------------------------
     def lower(self, inverse: Optional[bool] = None, dtype=None):
-        """Abstract lowering for dry-run / roofline (no allocation)."""
+        """Abstract lowering for dry-run / roofline (no allocation).
+
+        Goes through the same cached jit wrapper ``execute`` uses, so a
+        later ``execute`` at this (direction, dtype) reuses the wrapper
+        (and ``compiles`` counts it exactly once)."""
         inv = (self.direction == "inverse") if inverse is None else inverse
-        return jax.jit(self._fn(inv)).lower(self.input_spec(dtype))
+        return self._executable(inv, dtype or self.dtype).lower(self.input_spec(dtype))
 
     def roofline(self, inverse: Optional[bool] = None) -> cm.Roofline:
         """Compile abstractly and derive the three roofline terms from
@@ -250,14 +268,57 @@ def plan_fft(
     transpose_back: bool = False,
     dtype=jnp.complex64,
     params: Optional[cm.CommParams] = None,
+    chunk_compute_s: float = 0.0,
+    planner: str = "estimate",
+    timer=None,
+    use_wisdom: bool = True,
 ) -> Plan:
     """Plan a distributed FFT (the FFTW ``plan`` analogue).
 
-    ``backend="auto"`` picks the cost-model argmin over every registered
-    backend that supports this shard count -- the same set (and costs)
-    ``Plan.predict()`` ranks; pass any name from
-    ``repro.core.backends.available()`` to pin one.
+    ``planner`` picks the selection discipline (FFTW's ESTIMATE/MEASURE):
+
+    ``"estimate"`` (default)
+        ``backend="auto"`` = alpha-beta cost-model argmin over every
+        registered backend supporting this shard count -- the same set
+        (and costs) ``Plan.predict()`` ranks. Pass a
+        :meth:`CommParams.calibrate <repro.core.comm_model.CommParams.calibrate>`
+        result as ``params`` to estimate with measured constants.
+    ``"measure"``
+        Times every candidate backend on the real mesh (warmup + median)
+        and pins the measured argmin; per-backend timings land on
+        ``Plan.measured``. Consults the wisdom store first
+        (:mod:`repro.core.planner`), so a second identical plan never
+        re-measures; ``use_wisdom=False`` forces re-measurement and
+        ``timer(plan) -> seconds`` replaces the real clock (tests).
+
+    Pass any name from ``repro.core.backends.available()`` as
+    ``backend=`` to pin the backend under either planner.
     """
+    if planner not in ("estimate", "measure"):
+        raise ValueError(f"planner must be 'estimate' or 'measure', got {planner!r}")
+    if planner == "estimate" and (timer is not None or use_wisdom is not True):
+        # a forgotten planner="measure" would otherwise silently fall back
+        # to model-based selection with the injected timer never called
+        raise ValueError("timer= and use_wisdom= require planner='measure'")
+    if planner == "measure":
+        from repro.core import planner as _planner
+
+        return _planner.plan_measured(
+            global_shape,
+            mesh,
+            ndim=ndim,
+            direction=direction,
+            backend=backend,
+            axis_name=axis_name,
+            local_impl=local_impl,
+            fuse_dft=fuse_dft,
+            transpose_back=transpose_back,
+            dtype=dtype,
+            params=params,
+            chunk_compute_s=chunk_compute_s,
+            timer=timer,
+            use_wisdom=use_wisdom,
+        )
     return Plan(
         global_shape,
         mesh,
@@ -270,6 +331,7 @@ def plan_fft(
         transpose_back=transpose_back,
         dtype=dtype,
         params=params,
+        chunk_compute_s=chunk_compute_s,
     )
 
 

@@ -1,0 +1,268 @@
+"""Measurement-driven FFT planning -- the FFTW_MEASURE analogue.
+
+The paper's FFTW3 reference does not *model* which schedule is fastest,
+it **measures**: ``FFTW_MEASURE`` times candidate plans on the actual
+machine and caches the winner as *wisdom*. This module is the same
+discipline for the distributed transforms:
+
+- :func:`plan_fft(..., planner="measure") <repro.core.plan.plan_fft>`
+  times every registered backend that supports the shard count **on the
+  real mesh** (warmup + median wall-clock, the same ``time_fn`` the
+  benchmarks use) and pins the plan to the measured argmin, recording
+  the full per-backend timing table on ``Plan.measured``;
+- an FFTW-style **wisdom store** -- JSON, keyed by
+  (shape, ndim, dtype, P, candidate backend set, device kind) -- is
+  consulted before measuring, so a repeated identical plan is free.
+  :func:`export_wisdom` / :func:`import_wisdom` round-trip it to disk
+  exactly like ``fftw_export_wisdom_to_filename``;
+- the alpha-beta constants feeding ``planner="estimate"`` can themselves
+  be measured: :meth:`repro.core.comm_model.CommParams.calibrate` fits
+  alpha/beta to a ppermute ping-pong sweep (the paper's Fig. 3
+  per-parcelport fit) and plugs into ``plan_fft(..., params=...)``.
+
+``timer`` is injectable everywhere (``timer(plan) -> seconds``), so the
+selection logic is testable without a fabric.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+WISDOM_VERSION = 1
+
+#: In-process wisdom: key -> {"backend": name, "timings": {name: s}, ...}
+_WISDOM: Dict[str, dict] = {}
+
+
+# ---------------------------------------------------------------------------
+# Timing (shared with benchmarks/common.py, which re-exports this)
+# ---------------------------------------------------------------------------
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (s) of a jitted call (blocks on result)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def default_timer(warmup: int = 1, iters: int = 5) -> Callable:
+    """``timer(plan) -> seconds``: run the plan's cached executable on a
+    zeros input laid out with the plan's own input sharding."""
+
+    def timer(plan) -> float:
+        import jax
+        import jax.numpy as jnp
+
+        x = jax.device_put(
+            jnp.zeros(plan.global_shape, plan.dtype), plan.input_sharding()
+        )
+        return time_fn(plan.execute, x, warmup=warmup, iters=iters)
+
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# Wisdom store
+# ---------------------------------------------------------------------------
+
+
+def device_kind(mesh) -> str:
+    """Hardware identity of the mesh's devices (wisdom must not cross
+    device kinds -- a v5e winner says nothing about CPU or v4)."""
+    try:
+        return str(next(iter(mesh.devices.flat)).device_kind)
+    except (AttributeError, StopIteration):  # pragma: no cover - exotic mesh
+        return "unknown"
+
+
+def wisdom_key(
+    global_shape: Tuple[int, ...],
+    ndim: int,
+    dtype: str,
+    p: int,
+    backend_names: Tuple[str, ...],
+    dev_kind: str,
+    opts: str = "",
+) -> str:
+    """Stable string key for one measured problem."""
+    shape = "x".join(str(d) for d in global_shape)
+    names = "+".join(sorted(backend_names))
+    key = f"v{WISDOM_VERSION}|shape={shape}|ndim={ndim}|dtype={dtype}|P={p}|backends={names}|dev={dev_kind}"
+    if opts:
+        key += f"|{opts}"
+    return key
+
+
+def export_wisdom(path: Optional[str] = None) -> str:
+    """Serialize accumulated wisdom to JSON; write it to ``path`` when
+    given. Returns the JSON text either way."""
+    text = json.dumps(
+        {"version": WISDOM_VERSION, "entries": _WISDOM}, indent=2, sort_keys=True
+    )
+    if path is not None:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def import_wisdom(source: str) -> int:
+    """Merge wisdom from a JSON string or a path to a JSON file.
+    Returns the number of entries merged; wrong-version files merge 0
+    (wisdom is advisory -- stale formats are dropped, never an error)."""
+    text = source
+    if not source.lstrip().startswith(("{", "[")):
+        # not JSON text -> must be a path; surface a missing file as such
+        # rather than a baffling JSONDecodeError on the path string
+        with open(source) as f:
+            text = f.read()
+    data = json.loads(text)
+    if not isinstance(data, dict) or data.get("version") != WISDOM_VERSION:
+        return 0
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        return 0
+    _WISDOM.update(entries)
+    return len(entries)
+
+
+def forget_wisdom() -> None:
+    """Drop all accumulated wisdom (``fftw_forget_wisdom``)."""
+    _WISDOM.clear()
+
+
+def wisdom_size() -> int:
+    return len(_WISDOM)
+
+
+# ---------------------------------------------------------------------------
+# Measured planning
+# ---------------------------------------------------------------------------
+
+
+def candidate_backends(p: int, *, fuse_dft: bool = False) -> List[str]:
+    """Backends eligible for measurement at this shard count. ``fuse_dft``
+    is a scatter-only feature, so it collapses the field."""
+    from repro.core import backends
+
+    if fuse_dft:
+        return ["scatter"] if backends.get("scatter").supports(p) else []
+    return [n for n in backends.available() if backends.get(n).supports(p)]
+
+
+def plan_measured(
+    global_shape,
+    mesh,
+    *,
+    ndim: int = 2,
+    direction: str = "forward",
+    backend: str = "auto",
+    axis_name: Optional[str] = None,
+    local_impl: str = "jnp",
+    fuse_dft: bool = False,
+    transpose_back: bool = False,
+    dtype=None,
+    params=None,
+    chunk_compute_s: float = 0.0,
+    timer: Optional[Callable] = None,
+    use_wisdom: bool = True,
+    warmup: int = 1,
+    iters: int = 5,
+):
+    """FFTW_MEASURE: time every candidate backend on the real mesh, pin
+    the plan to the measured argmin, and remember the answer as wisdom.
+
+    ``backend="auto"`` measures every registered backend supporting P;
+    a pinned ``backend=`` name restricts the field to that one (the
+    timing still lands on ``Plan.measured``). ``timer(plan) -> seconds``
+    replaces the real measurement when injected.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.plan import Plan
+
+    dtype = jnp.complex64 if dtype is None else dtype
+
+    def build(name: str) -> Plan:
+        return Plan(
+            global_shape,
+            mesh,
+            ndim=ndim,
+            direction=direction,
+            backend=name,
+            axis_name=axis_name,
+            local_impl=local_impl,
+            fuse_dft=fuse_dft,
+            transpose_back=transpose_back,
+            dtype=dtype,
+            params=params,
+            chunk_compute_s=chunk_compute_s,
+        )
+
+    from repro.core.sharding import fft_axis
+
+    ax = axis_name or fft_axis(mesh)
+    p = int(mesh.shape[ax])
+    if backend == "auto":
+        names = candidate_backends(p, fuse_dft=fuse_dft)
+    else:
+        names = [backend]
+    if not names:
+        raise ValueError(f"no measurable backend supports P={p}")
+
+    key = wisdom_key(
+        tuple(global_shape),
+        ndim,
+        jnp.dtype(dtype).name,
+        p,
+        tuple(names),
+        device_kind(mesh),
+        opts=(
+            f"mesh={'x'.join(f'{k}{v}' for k, v in mesh.shape.items())},"
+            f"ax={ax},dir={direction},impl={local_impl},"
+            f"fuse={int(fuse_dft)},tb={int(transpose_back)}"
+        ),
+    )
+    if use_wisdom and key in _WISDOM:
+        entry = _WISDOM[key]
+        best = entry.get("backend") if isinstance(entry, dict) else None
+        timings = entry.get("timings") if isinstance(entry, dict) else None
+        if best in names and isinstance(timings, dict) and timings:
+            plan = build(best)  # still validates shape/mesh/backend
+            plan.planner = "measure"
+            plan.measured = dict(timings)
+            plan.wisdom_hit = True
+            return plan
+        # wisdom is advisory: a malformed/stale entry (e.g. a hand-edited
+        # or foreign wisdom file, or one without usable timings) is
+        # dropped and we re-measure
+        _WISDOM.pop(key, None)
+
+    timer = timer or default_timer(warmup=warmup, iters=iters)
+    plans: Dict[str, Plan] = {}
+    timings: Dict[str, float] = {}
+    for name in names:
+        plans[name] = build(name)
+        timings[name] = float(timer(plans[name]))
+    best = min(sorted(timings), key=timings.__getitem__)
+
+    _WISDOM[key] = {
+        "backend": best,
+        "timings": dict(timings),  # own copy: Plan.measured stays mutable
+        "device_kind": device_kind(mesh),
+    }
+    plan = plans[best]
+    plan.planner = "measure"
+    plan.measured = timings
+    plan.wisdom_hit = False
+    return plan

@@ -1,0 +1,433 @@
+"""Measured planner (FFTW_MEASURE analogue): backend selection by
+injected timings, wisdom round-trip, alpha-beta calibration fit, and the
+plan-level fixes that ride along (lower() executable reuse,
+chunk_compute_s threading)."""
+
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import CommParams, backends, plan_fft, planner
+from repro.core.compat import make_mesh_1d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_wisdom():
+    planner.forget_wisdom()
+    yield
+    planner.forget_wisdom()
+
+
+def _fake_timer(table, calls=None):
+    def timer(plan):
+        if calls is not None:
+            calls.append(plan.backend)
+        return table[plan.backend]
+
+    return timer
+
+
+def _supported(p):
+    return [n for n in backends.available() if backends.get(n).supports(p)]
+
+
+def test_measure_picks_argmin_of_injected_timings():
+    mesh = make_mesh_1d(1)
+    names = _supported(1)
+    table = {n: float(i + 2) for i, n in enumerate(names)}
+    table["bisection"] = 0.5  # the planted winner
+    plan = plan_fft((32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    assert plan.backend == "bisection"
+    assert plan.planner == "measure"
+    assert plan.measured == table
+    assert not plan.wisdom_hit
+    # every supported backend was timed
+    assert set(plan.measured) == set(names)
+
+
+def test_measure_tie_breaks_deterministically():
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    plan = plan_fft((32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    assert plan.backend == sorted(table)[0]
+
+
+def test_second_identical_plan_hits_wisdom_without_remeasuring():
+    mesh = make_mesh_1d(1)
+    table = {n: float(i + 1) for i, n in enumerate(_supported(1))}
+    calls = []
+    timer = _fake_timer(table, calls)
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    n_measured = len(calls)
+    assert n_measured == len(table)
+    p2 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert len(calls) == n_measured  # no re-measurement
+    assert p2.wisdom_hit and not p1.wisdom_hit
+    assert p2.backend == p1.backend
+    assert p2.measured == p1.measured
+    # a *different* problem measures again
+    plan_fft((64, 64), mesh, planner="measure", timer=timer)
+    assert len(calls) == 2 * n_measured
+
+
+def test_mutating_plan_measured_does_not_corrupt_wisdom():
+    """Regression: the miss path stored the same dict object on the plan
+    and in the wisdom store, so user mutation of the public timing table
+    rewrote (and export_wisdom persisted) the cached entry."""
+    mesh = make_mesh_1d(1)
+    table = {n: float(i + 1) for i, n in enumerate(_supported(1))}
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    p1.measured.clear()  # e.g. a caller post-processing timings in place
+    p2 = plan_fft((32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    assert p2.wisdom_hit and p2.measured == table
+    assert json.loads(planner.export_wisdom())["entries"]
+
+
+def test_use_wisdom_false_forces_remeasure():
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    plan_fft((32, 32), mesh, planner="measure", timer=timer, use_wisdom=False)
+    assert len(calls) == 2 * len(table)
+
+
+def test_pinned_backend_measure_times_only_that_backend():
+    mesh = make_mesh_1d(1)
+    calls = []
+    plan = plan_fft(
+        (32, 32),
+        mesh,
+        planner="measure",
+        backend="scatter",
+        timer=_fake_timer({"scatter": 1.0}, calls),
+    )
+    assert plan.backend == "scatter"
+    assert calls == ["scatter"]
+
+
+def test_wisdom_export_import_roundtrip(tmp_path):
+    mesh = make_mesh_1d(1)
+    table = {n: float(i + 1) for i, n in enumerate(_supported(1))}
+    calls = []
+    timer = _fake_timer(table, calls)
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+
+    path = tmp_path / "wisdom.json"
+    text = planner.export_wisdom(str(path))
+    data = json.loads(path.read_text())
+    assert data == json.loads(text)
+    assert data["version"] == planner.WISDOM_VERSION
+    assert len(data["entries"]) == 1
+    (key,) = data["entries"]
+    assert "shape=32x32" in key and "P=1" in key and "dtype=complex64" in key
+
+    planner.forget_wisdom()
+    assert planner.wisdom_size() == 0
+    assert planner.import_wisdom(str(path)) == 1
+    n_calls = len(calls)
+    p2 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert len(calls) == n_calls  # imported wisdom, no re-measure
+    assert p2.wisdom_hit and p2.backend == p1.backend
+
+
+def test_forward_and_inverse_plans_measure_separately():
+    """Regression: the wisdom key omitted the direction, so an inverse
+    plan silently replayed forward-measured wisdom without ever timing
+    the inverse transform."""
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    inv = plan_fft((32, 32), mesh, direction="inverse", planner="measure", timer=timer)
+    assert not inv.wisdom_hit
+    assert len(calls) == 2 * len(table)  # inverse measured on its own
+    inv2 = plan_fft((32, 32), mesh, direction="inverse", planner="measure", timer=timer)
+    assert inv2.wisdom_hit and len(calls) == 2 * len(table)
+
+
+def test_plans_over_different_mesh_axes_measure_separately():
+    """Regression: the wisdom key omitted the mesh axis, so a plan over
+    a different axis of the same mesh replayed the other axis's winner
+    (on hardware the axes can be entirely different fabrics)."""
+    from repro.core.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    plan_fft((32, 32), mesh, axis_name="model", planner="measure", timer=timer)
+    other = plan_fft((32, 32), mesh, axis_name="data", planner="measure", timer=timer)
+    assert not other.wisdom_hit
+    assert len(calls) == 2 * len(table)
+
+
+def test_malformed_wisdom_entry_dropped_and_remeasured():
+    """Wisdom is advisory: an entry without a usable backend (hand-edited
+    or foreign file) must be dropped and re-measured, not KeyError."""
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    good = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    # corrupt the stored entry in place (simulates a bad wisdom file)
+    (key,) = json.loads(planner.export_wisdom())["entries"]
+    planner._WISDOM[key] = {}
+    replanned = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert not replanned.wisdom_hit and replanned.backend == good.backend
+    assert len(calls) == 2 * len(table)  # re-measured
+    # and the store healed itself
+    assert planner._WISDOM[key]["backend"] == good.backend
+
+
+def test_different_mesh_topologies_measure_separately():
+    """Regression: the wisdom key omitted the mesh topology, so a winner
+    measured on one mesh was replayed on a differently-shaped mesh with
+    the same fft-axis size."""
+    from repro.core.compat import make_mesh
+
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    plan_fft((32, 32), make_mesh((1,), ("model",)), planner="measure", timer=timer)
+    other = plan_fft(
+        (32, 32),
+        make_mesh((1, 1), ("model", "data")),
+        axis_name="model",
+        planner="measure",
+        timer=timer,
+    )
+    assert not other.wisdom_hit
+    assert len(calls) == 2 * len(table)
+
+
+def test_import_wisdom_tolerates_malformed_files():
+    """Advisory contract: malformed wisdom merges 0 entries, never raises."""
+    assert planner.import_wisdom("[1, 2]") == 0  # non-object JSON text
+    assert planner.import_wisdom('{"version": 1, "entries": ["not", "a", "dict"]}') == 0
+    assert planner.import_wisdom('{"no": "version"}') == 0
+    assert planner.wisdom_size() == 0
+
+
+def test_calibrate_constant_sweep_falls_back_on_beta():
+    """A flat (latency-only) sweep cannot identify bandwidth: the fit
+    must warn and keep the default beta rather than silently producing
+    an absurd 1e26 B/s constant that zeroes every bandwidth term."""
+    from repro.core import comm_model as cm
+
+    with pytest.warns(RuntimeWarning, match="bandwidth not identifiable"):
+        prm = CommParams.calibrate(timer=lambda m: 1e-4)
+    assert prm.beta_bytes_s == cm.ICI_BW_PER_LINK * cm.ICI_LINKS
+    assert abs(prm.alpha_s - 5e-5) < 1e-8  # intercept/2 still fitted
+
+
+def test_import_wisdom_missing_file_raises_file_not_found(tmp_path):
+    """Regression: a typo'd path fell through to json.loads(path) and
+    raised a baffling JSONDecodeError instead of FileNotFoundError."""
+    with pytest.raises(FileNotFoundError):
+        planner.import_wisdom(str(tmp_path / "no_such_wisdom.json"))
+
+
+def test_calibrate_defaults_to_fft_axis():
+    """Regression: calibrate ping-ponged over the FIRST mesh axis while
+    every plan ships over fft_axis(mesh) -- on a multi-axis mesh that
+    fits the wrong fabric."""
+    from repro.core import comm_model as cm
+    from repro.core.compat import make_mesh
+    from repro.core.sharding import fft_axis
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert fft_axis(mesh) == "model"
+    timer = cm._pingpong_timer(mesh, None, warmup=0, iters=1)
+    assert timer.axis_name == "model"  # not the first axis ("data")
+    assert timer(4) >= 0.0  # and the roundtrip actually runs on that axis
+
+
+def test_import_wisdom_accepts_json_text_and_rejects_other_versions():
+    assert planner.import_wisdom('{"version": -1, "entries": {"k": {}}}') == 0
+    assert planner.wisdom_size() == 0
+    text = json.dumps(
+        {"version": planner.WISDOM_VERSION, "entries": {"k": {"backend": "scatter"}}}
+    )
+    assert planner.import_wisdom(text) == 1
+    assert planner.wisdom_size() == 1
+
+
+def test_measure_real_timer_smoke():
+    """Default (real-clock) path on one device: picks something it
+    actually timed, and the timings are positive."""
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((16, 16), mesh, planner="measure")
+    assert plan.backend in plan.measured
+    assert plan.measured[plan.backend] == min(plan.measured.values())
+    assert all(t > 0 for t in plan.measured.values())
+
+
+def test_invalid_planner_rejected():
+    mesh = make_mesh_1d(1)
+    with pytest.raises(ValueError, match="planner"):
+        plan_fft((32, 32), mesh, planner="guess")
+    # measure-only knobs with the (default) estimate planner: a forgotten
+    # planner="measure" must fail loudly, not silently skip the timer
+    with pytest.raises(ValueError, match="planner='measure'"):
+        plan_fft((32, 32), mesh, timer=lambda plan: 1.0)
+    with pytest.raises(ValueError, match="planner='measure'"):
+        plan_fft((32, 32), mesh, use_wisdom=False)
+
+
+def test_wisdom_entry_without_timings_remeasured():
+    """A hit must come with the full timing table (Plan.measured's
+    contract); an entry holding only a backend is advisory-dropped."""
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    calls = []
+    timer = _fake_timer(table, calls)
+    plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    (key,) = json.loads(planner.export_wisdom())["entries"]
+    planner._WISDOM[key] = {"backend": sorted(table)[0]}  # no timings
+    replanned = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert not replanned.wisdom_hit
+    assert replanned.measured == table
+    assert len(calls) == 2 * len(table)
+
+
+# ---------------------------------------------------------------------------
+# CommParams.calibrate
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_recovers_alpha_beta_from_synthetic_timings():
+    alpha, beta = 2.5e-6, 40e9
+    prm = CommParams.calibrate(timer=lambda m: 2 * (alpha + m / beta))
+    assert abs(prm.alpha_s - alpha) / alpha < 1e-6
+    assert abs(prm.beta_bytes_s - beta) / beta < 1e-6
+
+
+def test_calibrate_noisy_fit_close():
+    alpha, beta = 1e-5, 10e9
+    rng = np.random.default_rng(0)
+
+    def timer(m):
+        return 2 * (alpha + m / beta) * (1 + 0.01 * rng.standard_normal())
+
+    prm = CommParams.calibrate(timer=timer)
+    assert abs(prm.alpha_s - alpha) / alpha < 0.25
+    assert abs(prm.beta_bytes_s - beta) / beta < 0.05
+
+
+def test_calibrated_params_drive_estimate_selection():
+    """estimate mode ranks with the calibrated constants, not the
+    module-level v5e numbers: a fabric measured with ~1 s per-message
+    latency must predict second-scale exchanges, and per-message cost
+    must separate the many-message schedules from the single collective
+    (the paper's Fig. 3 parcelport separation)."""
+    mesh = make_mesh_1d(1)
+    lat = CommParams.calibrate(timer=lambda m: 2 * (1.0 + m / 1e12))  # 1 s alpha
+    assert abs(lat.alpha_s - 1.0) < 1e-6
+    m_bytes, p = 8 * 2**20, 16
+    # alpha-dominated fabric: cost ~ message count (1 vs log P vs P-1)
+    costs = {n: backends.get(n).cost(m_bytes, p, lat) for n in backends.available()}
+    assert costs["alltoall"] < costs["bisection"] < costs["scatter"]
+    assert backends.cheapest(m_bytes, p, lat) == "alltoall"
+    # the calibrated params flow into the plan's own ranking
+    plan = plan_fft((64, 64), mesh, params=lat)
+    assert plan.params is lat
+    default = plan_fft((64, 64), mesh, backend=plan.backend).predict()
+    for name, t in plan.predict().items():
+        assert t >= default[name]  # v5e napkin constants are wildly optimistic here
+
+
+def test_calibrate_validates_inputs():
+    with pytest.raises(ValueError, match="2 message sizes"):
+        CommParams.calibrate(timer=lambda m: m * 1e-9, sizes=(4096,))
+    with pytest.raises(ValueError, match="mesh"):
+        CommParams.calibrate()
+
+
+def test_calibrate_real_pingpong_single_device():
+    """The real measurement path runs (P=1 self-permute): constants come
+    back finite and positive-ish even on a degenerate mesh."""
+    mesh = make_mesh_1d(1)
+    prm = CommParams.calibrate(mesh, sizes=(4096, 65536, 262144), iters=2)
+    assert np.isfinite(prm.alpha_s) and prm.alpha_s >= 0
+    assert np.isfinite(prm.beta_bytes_s) and prm.beta_bytes_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Plan fixes riding along: lower() reuse + chunk_compute_s threading
+# ---------------------------------------------------------------------------
+
+
+def test_lower_reuses_cached_executable():
+    """Regression: lower() built a fresh jax.jit wrapper, bypassing the
+    cache and understating Plan.compiles."""
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((16, 16), mesh, backend="alltoall")
+    plan.lower()
+    assert plan.compiles == 1
+    x = jnp.zeros((16, 16), jnp.complex64)
+    plan.execute(x)
+    assert plan.compiles == 1  # same wrapper, not a second one
+    plan.lower()
+    assert plan.compiles == 1
+
+
+def test_predict_threads_chunk_compute():
+    """Heavy per-chunk compute must surface the streaming backends'
+    overlap advantage in the plan-level ranking."""
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((64, 64), mesh, backend="alltoall")
+    base = plan.predict()
+    heavy = plan.predict(chunk_compute_s=1e-3)
+    assert heavy["alltoall"] > base["alltoall"]  # threaded through to cost()
+    # plan-level default: chunk_compute_s set at plan time feeds predict()
+    plan2 = plan_fft((64, 64), mesh, backend="alltoall", chunk_compute_s=1e-3)
+    assert plan2.predict() == heavy
+    # the ranking consequence (P>1 model; predict() uses this same path):
+    # streaming scatter overlaps per-chunk compute, monolithic alltoall
+    # serializes all P of them
+    prm = plan.params
+    assert backends.get("scatter").cost(2**20, 8, prm, 1e-3) < backends.get(
+        "alltoall"
+    ).cost(2**20, 8, prm, 1e-3)
+
+
+MEASURE_4DEV_CODE = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core import CommParams, plan_fft
+from repro.core.compat import make_mesh
+
+mesh = make_mesh((4,), ("model",))
+plan = plan_fft((64, 64), mesh, planner="measure")
+assert plan.backend in plan.measured
+assert plan.measured[plan.backend] == min(plan.measured.values())
+plan2 = plan_fft((64, 64), mesh, planner="measure")
+assert plan2.wisdom_hit and plan2.backend == plan.backend, (plan2.wisdom_hit, plan2.backend)
+
+rng = np.random.default_rng(0)
+x = (rng.standard_normal((64, 64)) + 1j * rng.standard_normal((64, 64))).astype(np.complex64)
+ref = np.fft.fft2(x)
+y = np.asarray(plan.execute(jnp.asarray(x)))
+assert np.abs(y - ref.T).max() < 1e-4 * np.abs(ref).max()
+print("PASS measured plan 4dev")
+
+prm = CommParams.calibrate(mesh, sizes=(4096, 65536, 262144), iters=3)
+assert np.isfinite(prm.alpha_s) and np.isfinite(prm.beta_bytes_s) and prm.beta_bytes_s > 0
+est = plan_fft((64, 64), mesh, params=prm)
+assert est.predict()  # estimate ranking with fabric-measured constants
+print("PASS calibrate 4dev")
+"""
+
+
+@pytest.mark.slow
+def test_measure_planner_and_calibrate_4dev():
+    """End-to-end on a real (host-device) mesh: measured selection,
+    wisdom hit, numerical correctness of the picked plan, calibration."""
+    from conftest import run_subprocess
+
+    out = run_subprocess(MEASURE_4DEV_CODE, devices=4)
+    assert out.count("PASS") == 2, out

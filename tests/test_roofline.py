@@ -98,6 +98,147 @@ ENTRY %main (p: f32[64,64]) -> f32[64,64] {
     assert abs(stats.bytes_moved["all-reduce"] - sz * 2 * 3 / 4) < 1
 
 
+ASYNC_CP_HLO = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %cps = (f32[1024]{0}, f32[1024]{0}, u32[], u32[]) collective-permute-start(%p), source_target_pairs={{0,1},{1,0}}
+  ROOT %cpd = f32[1024]{0} collective-permute-done(%cps)
+}
+"""
+
+ASYNC_AG_HLO = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (p: f32[8,4]) -> f32[32,4] {
+  %p = f32[8,4]{1,0} parameter(0)
+  %ags = (f32[8,4]{1,0}, f32[32,4]{1,0}) all-gather-start(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %agd = f32[32,4]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_async_collective_permute_both_parsers_agree():
+    """Regression: tuple-typed -start results. parse_collectives counted
+    0 bytes (empty head before '('); hlo_analysis summed the whole tuple
+    (operand alias + u32 contexts = 8200). Both must count exactly the
+    4096-byte receive buffer, once, with the -done contributing nothing."""
+    stats = comm_model.parse_collectives(ASYNC_CP_HLO)
+    cost = hlo_analysis.HloAnalyzer(ASYNC_CP_HLO).entry_cost()
+    assert stats.counts["collective-permute"] == 1
+    assert stats.bytes_moved["collective-permute"] == 4096
+    assert cost.coll_counts == {"collective-permute": 1}
+    assert cost.coll_bytes == 4096
+    assert stats.total_bytes == cost.coll_bytes
+
+
+def test_async_all_gather_both_parsers_agree():
+    """Same receive-buffer rule for group collectives: the (P-1)/P ring
+    factor applies to the gathered result (2nd tuple element), not the
+    operand-alias + result sum."""
+    expect = 32 * 4 * 4 * 3 / 4  # full result * (P-1)/P, P=4
+    stats = comm_model.parse_collectives(ASYNC_AG_HLO)
+    cost = hlo_analysis.HloAnalyzer(ASYNC_AG_HLO).entry_cost()
+    assert stats.counts["all-gather"] == 1
+    assert abs(stats.bytes_moved["all-gather"] - expect) < 1e-9
+    assert cost.coll_counts == {"all-gather": 1}
+    assert abs(cost.coll_bytes - expect) < 1e-9
+    assert abs(stats.total_bytes - cost.coll_bytes) < 1e-9
+
+
+ASYNC_VARIADIC_AR_HLO = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (a: f32[1024], b: f32[1024]) -> (f32[1024], f32[1024]) {
+  %a = f32[1024]{0} parameter(0)
+  %b = f32[1024]{0} parameter(1)
+  %ars = (f32[1024]{0}, f32[1024]{0}) all-reduce-start(%a, %b), replica_groups={{0,1}}, to_apply=%add
+  ROOT %ard = (f32[1024]{0}, f32[1024]{0}) all-reduce-done(%ars)
+}
+"""
+
+RS_A2A_HLO = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (p: f32[64,64]) -> f32[16,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %a2a = f32[64,64]{1,0} all-to-all(%p), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %rs = f32[16,64]{1,0} reduce-scatter(%a2a), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_async_variadic_all_reduce_counts_every_result():
+    """Regression: all-reduce-start tuples are (result1, result2, ...) --
+    results only, no operand alias or context scalars -- so the
+    receive-buffer-only rule must NOT apply: a 2-tensor combined async
+    all-reduce ships both payloads."""
+    expect = 2 * 4096 * 2 * (2 - 1) / 2  # both tensors, 2(P-1)/P at P=2
+    stats = comm_model.parse_collectives(ASYNC_VARIADIC_AR_HLO)
+    cost = hlo_analysis.HloAnalyzer(ASYNC_VARIADIC_AR_HLO).entry_cost()
+    assert stats.counts["all-reduce"] == 1
+    assert stats.bytes_moved["all-reduce"] == expect
+    assert cost.coll_bytes_by_kind.get("all-reduce") == expect
+    assert stats.total_bytes == cost.coll_bytes
+
+
+def test_reduce_scatter_and_all_to_all_parsers_agree():
+    """Pin the shared ring-factor table (collective_scaled_bytes) for the
+    kinds the other fixtures don't cover, on both parsers."""
+    expect_a2a = 64 * 64 * 4 * 3 / 4  # (P-1)/P, P=4
+    expect_rs = 16 * 64 * 4 * 3  # result * (P-1), P=4
+    stats = comm_model.parse_collectives(RS_A2A_HLO)
+    cost = hlo_analysis.HloAnalyzer(RS_A2A_HLO).entry_cost()
+    assert stats.bytes_moved["all-to-all"] == expect_a2a
+    assert stats.bytes_moved["reduce-scatter"] == expect_rs
+    assert cost.coll_bytes_by_kind.get("all-to-all") == expect_a2a
+    assert cost.coll_bytes_by_kind.get("reduce-scatter") == expect_rs
+    assert stats.total_bytes == cost.coll_bytes
+
+
+TILED_HLO = """
+HloModule t, is_scheduled=true
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0:T(1024)} parameter(0)
+  %cps = (f32[1024]{0:T(1024)}, f32[1024]{0:T(1024)}, u32[]{:T(128)S(1)}, u32[]{:T(128)S(1)}) collective-permute-start(%p), source_target_pairs={{0,1},{1,0}}
+  %cpd = f32[1024]{0:T(1024)} collective-permute-done(%cps)
+  ROOT %ar = f32[1024]{0:T(1024)} all-reduce(%cpd), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+
+def test_tpu_layout_annotations_do_not_hide_collectives():
+    """Regression: post-layout TPU types carry parenthesized tile /
+    memory-space annotations ({0:T(1024)}, S(1)); an eager first-'word('
+    op-name search reads 'T(' as the op and drops the line, silently
+    zeroing the collective term on the roofline's target platform. Both
+    parsers must see through the annotations and still agree."""
+    stats = comm_model.parse_collectives(TILED_HLO)
+    cost = hlo_analysis.HloAnalyzer(TILED_HLO).entry_cost()
+    assert stats.counts["collective-permute"] == 1
+    assert stats.bytes_moved["collective-permute"] == 4096
+    assert stats.counts["all-reduce"] == 1
+    assert stats.bytes_moved["all-reduce"] == 4096  # 2*(P-1)/P, P=2
+    assert cost.coll_counts == {"collective-permute": 1, "all-reduce": 1}
+    assert cost.coll_bytes == stats.total_bytes == 8192
+
+
+def test_collective_payload_bytes_rules():
+    """The shared tuple-shape helper both parsers delegate to."""
+    f = comm_model.collective_payload_bytes
+    assert f("f32[64,64]{1,0}") == 64 * 64 * 4
+    # async start: receive buffer (2nd element) only
+    assert f("(f32[1024]{0}, f32[1024]{0}, u32[], u32[])", is_start=True) == 4096
+    # sync variadic collective: every element is payload
+    assert f("(f32[16]{0}, bf16[8]{0})") == 16 * 4 + 8 * 2
+    # nested tuple receive buffer (variadic async form)
+    assert f("((f32[8]{0}, f32[8]{0}), (f32[32]{0}, f32[32]{0}))", is_start=True) == 2 * 32 * 4
+    # commas inside dims/layout do not split elements
+    assert f("(f32[8,4]{1,0}, f32[32,4]{1,0})", is_start=True) == 32 * 4 * 4
+
+
 COLLECTIVE_CODE = r"""
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
