@@ -37,7 +37,7 @@ for name in sorted(plan.measured):
 """
 
 
-def run_json(n: int = 256, device_counts: Iterable[int] = (1, 2, 4)) -> List[dict]:
+def run_json(n: int = 256, device_counts: Iterable[int] = (1, 2, 4, 8)) -> List[dict]:
     """Measured + model-predicted rows per backend per device count."""
     rows: List[dict] = []
     for p in device_counts:

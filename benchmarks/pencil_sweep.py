@@ -1,0 +1,81 @@
+"""Slab-vs-pencil decomposition sweep -- one BENCH row per grid shape.
+
+For a fixed device count P, runs the measured planner for the slab
+decomposition (1-D mesh, every backend) and for every non-degenerate
+(P_row x P_col) factorization of P (2-D mesh, every per-axis backend
+pair), on the same global fft3 problem. Each row carries the measured
+median next to the alpha-beta model prediction, so the slab-vs-pencil
+crossover (and the per-axis backend split the pencil grid enables) is
+visible as data -- the companion case-study's decomposition comparison.
+
+``run_json()`` returns machine-readable rows (merged into
+``BENCH_fft.json`` by ``benchmarks/run.py --json``); ``to_csv()``
+renders the harness's ``name,us_per_call,derived`` format.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import json
+from repro.core import grid, plan_fft, planner
+from repro.core.compat import make_mesh
+
+n, p = __N__, __P__
+shape = (n, n, n)
+dev = None
+
+def emit(decomp, grid_name, plan, pred):
+    for name in sorted(plan.measured):
+        row = {"bench": "fft3_decomp", "n": n, "p": p, "decomp": decomp,
+               "grid": grid_name, "backend": name,
+               "measured_us": round(plan.measured[name] * 1e6, 1),
+               "model_us": round(pred[name] * 1e6, 2),
+               "picked": plan.backend, "device_kind": dev}
+        print("ROW " + json.dumps(row))
+
+mesh1d = make_mesh((p,), ("model",))
+dev = planner.device_kind(mesh1d)
+plan = plan_fft(shape, mesh1d, ndim=3, planner="measure")
+emit("slab", f"{p}x1", plan, plan.predict())
+
+for pr, pc in grid.grid_shapes(p):
+    if pr == 1 or pc == 1:
+        continue  # degenerate grids are the slab row above
+    mesh = make_mesh((pr, pc), ("rows", "cols"))
+    plan = plan_fft(shape, mesh, ndim=3, decomp="pencil", planner="measure")
+    emit("pencil", f"{pr}x{pc}", plan, plan.predict())
+"""
+
+
+def run_json(n: int = 32, device_counts: Iterable[int] = (4, 8)) -> List[dict]:
+    """Slab + every-pencil-grid measured/model rows per device count."""
+    rows: List[dict] = []
+    for p in device_counts:
+        out = run_devices_subprocess(
+            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        )
+        for line in out.splitlines():
+            if line.startswith("ROW "):
+                rows.append(json.loads(line[4:]))
+    return rows
+
+
+def to_csv(rows: List[dict]) -> List[str]:
+    return [
+        f"pencil_sweep/{r['decomp']}/{r['grid']}/{r['backend']},{r['measured_us']},"
+        f"model_us={r['model_us']};picked={r['picked']}"
+        for r in rows
+    ]
+
+
+def run(n: int = 32) -> List[str]:
+    return to_csv(run_json(n))
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -4,15 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3_chunk/*     chunk-size scaling of collective strategies (Fig. 3)
   fig45_strong/*   FFT strong scaling per strategy + reference (Figs. 4-5)
   fft_measure/*    measured planner vs alpha-beta model per backend
+  pencil_sweep/*   slab vs pencil decomposition per grid shape
   moe_dispatch/*   paper technique on the LM stack (MoE a2a strategies)
   local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel,fft]
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel,fft,pencil]
      [--json BENCH_fft.json]
 
-``--json PATH`` additionally writes the fft_measure rows (measured +
-model-predicted per backend) as machine-readable JSON -- the perf
-trajectory artifact CI uploads.
+``--json PATH`` additionally writes the fft_measure + pencil_sweep rows
+(measured + model-predicted per backend / per grid shape) as
+machine-readable JSON -- the perf trajectory artifact CI uploads.
 """
 
 import argparse
@@ -22,12 +23,13 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft")
+    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft,pencil")
     ap.add_argument(
         "--json",
         default=None,
         metavar="PATH",
-        help="write fft_measure rows as JSON (implies the fft section)",
+        help="write fft_measure rows (+ pencil_sweep rows when that "
+        "section is selected) as JSON; implies the fft section only",
     )
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -48,16 +50,25 @@ def main() -> None:
 
         rows += strong_scaling.run()
         _flush(rows)
+    jrows = []
     if "fft" in wanted or args.json:
         from benchmarks import fft_measure
 
-        jrows = fft_measure.run_json()
-        rows += fft_measure.to_csv(jrows)
+        frows = fft_measure.run_json()
+        jrows += frows
+        rows += fft_measure.to_csv(frows)
         _flush(rows)
-        if args.json:
-            with open(args.json, "w") as f:
-                json.dump({"schema": 1, "rows": jrows}, f, indent=2)
-            print(f"# wrote {len(jrows)} rows to {args.json}", file=sys.stderr)
+    if "pencil" in wanted:
+        from benchmarks import pencil_sweep
+
+        prows = pencil_sweep.run_json()
+        jrows += prows
+        rows += pencil_sweep.to_csv(prows)
+        _flush(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 2, "rows": jrows}, f, indent=2)
+        print(f"# wrote {len(jrows)} rows to {args.json}", file=sys.stderr)
     if "moe" in wanted:
         from benchmarks import moe_dispatch
 

@@ -10,6 +10,7 @@ from repro.core import backends
 from repro.core.backends import CollectiveBackend
 from repro.core.distributed_fft import FFTConfig, fft2, ifft2, fft3, fft1d_large, reference_fft2
 from repro.core.fftmath import local_fft, local_fft2, fft_matmul, dft_matrix, MAX_DFT
+from repro.core.grid import ProcessGrid, auto_grid_shape, grid_from_mesh, grid_shapes, make_grid
 from repro.core.overlap import (
     collective_matmul_ag,
     ring_all_gather,
@@ -17,15 +18,18 @@ from repro.core.overlap import (
     ring_scatter_reduce,
 )
 from repro.core.comm_model import CommParams
+from repro.core.pencil import PencilConfig, pencil_fft2, pencil_fft3
 from repro.core.plan import FFTPlan, Plan, make_plan, plan_fft
 from repro.core.planner import export_wisdom, forget_wisdom, import_wisdom, wisdom_size
 from repro.core.transpose import distributed_transpose
 
 __all__ = [
-    "CollectiveBackend", "CommParams", "FFTConfig", "FFTPlan", "MAX_DFT", "Plan",
-    "backends", "collective_matmul_ag", "dft_matrix", "distributed_transpose",
-    "export_wisdom", "fft1d_large", "fft2", "fft3", "fft_matmul", "forget_wisdom",
-    "ifft2", "import_wisdom", "local_fft", "local_fft2", "make_plan", "plan_fft",
-    "reference_fft2", "ring_all_gather", "ring_reduce_scatter",
-    "ring_scatter_reduce", "wisdom_size",
+    "CollectiveBackend", "CommParams", "FFTConfig", "FFTPlan", "MAX_DFT",
+    "PencilConfig", "Plan", "ProcessGrid", "auto_grid_shape", "backends",
+    "collective_matmul_ag", "dft_matrix", "distributed_transpose",
+    "export_wisdom", "fft1d_large", "fft2", "fft3", "fft_matmul",
+    "forget_wisdom", "grid_from_mesh", "grid_shapes", "ifft2", "import_wisdom",
+    "local_fft", "local_fft2", "make_grid", "make_plan", "pencil_fft2",
+    "pencil_fft3", "plan_fft", "reference_fft2", "ring_all_gather",
+    "ring_reduce_scatter", "ring_scatter_reduce", "wisdom_size",
 ]

@@ -116,9 +116,19 @@ def get(name: str) -> CollectiveBackend:
         ) from None
 
 
-def available() -> Tuple[str, ...]:
-    """Sorted names of every registered backend."""
-    return tuple(sorted(_REGISTRY))
+def available(kind: Optional[str] = None) -> Tuple[str, ...]:
+    """Sorted names of every registered backend; ``kind="shard_map"``
+    restricts to backends with a per-shard transpose (the only ones a
+    pencil grid can route per-axis)."""
+    return tuple(sorted(n for n, b in _REGISTRY.items() if kind is None or b.kind == kind))
+
+
+def supporting(p: int, kind: Optional[str] = None) -> Tuple[str, ...]:
+    """Sorted names of registered backends (of ``kind``, when given)
+    whose schedule is defined for ``p`` shards -- THE eligibility filter:
+    auto selection, ``Plan.predict_axes`` and the measured planner's
+    candidate sets all go through here, so they cover the same field."""
+    return tuple(n for n in available(kind) if _REGISTRY[n].supports(p))
 
 
 def cheapest(
@@ -135,7 +145,7 @@ def cheapest(
     toward the lexicographically first name, so selection is
     deterministic."""
     if names is None:
-        names = available()
+        names = supporting(p)
     costs = {}
     for n in sorted(names):
         b = get(n)
@@ -144,6 +154,35 @@ def cheapest(
     if not costs:
         raise ValueError(f"no registered backend supports P={p}")
     return min(costs, key=costs.__getitem__)
+
+
+def cheapest_pair(
+    m_bytes: float,
+    p_rows: int,
+    p_cols: int,
+    prm: CommParams = CommParams(),
+    *,
+    names: Optional[Iterable[str]] = None,
+    chunk_compute_s: float = 0.0,
+) -> Tuple[str, str]:
+    """Per-axis cost-model argmin for a pencil grid: (backend_row,
+    backend_col), each the :func:`cheapest` shard_map backend for its
+    own sub-ring size. The two selections are independent -- each
+    sub-exchange moves the local block over only its own axis, so the
+    ranking decomposes (the 2-D ``backend="auto"`` rule).
+
+    ``m_bytes`` is the per-device local block -- the whole block
+    participates in each sub-exchange (each ships (1-1/P_axis) of it).
+    """
+    if names is None:
+        row_names = supporting(p_rows, kind="shard_map")
+        col_names = supporting(p_cols, kind="shard_map")
+    else:
+        names = [n for n in names if get(n).kind == "shard_map"]
+        row_names = col_names = names
+    row = cheapest(m_bytes, p_rows, prm, names=row_names, chunk_compute_s=chunk_compute_s)
+    col = cheapest(m_bytes, p_cols, prm, names=col_names, chunk_compute_s=chunk_compute_s)
+    return row, col
 
 
 # ---------------------------------------------------------------------------

@@ -207,6 +207,69 @@ def t_pairwise(m_bytes: float, p: int, prm: CommParams = CommParams(),
     return t_scatter_ring(m_bytes, p, prm, chunk_compute_s)
 
 
+#: Sub-axis exchanges per pencil transform, (n_row, n_col): fft3 is one
+#: transpose per grid axis (+1 each under transpose_back); fft2
+#: transforms each data dim over its own sub-ring with a transpose /
+#: FFT / transpose-back pass, i.e. two exchanges per axis.
+PENCIL_EXCHANGES = {2: (2, 2), 3: (1, 1)}
+
+
+def pencil_exchanges(ndim: int, transpose_back: bool = False):
+    """(n_row, n_col) sub-axis exchanges of one pencil transform -- the
+    single copy shared by :func:`t_pencil` and ``Plan`` (predict /
+    comm_bytes), so the model and the plan cannot desynchronize."""
+    try:
+        n_row, n_col = PENCIL_EXCHANGES[ndim]
+    except KeyError:
+        raise ValueError(f"pencil decomposition supports ndim 2 or 3, got {ndim}") from None
+    if transpose_back and ndim == 3:
+        n_row, n_col = n_row + 1, n_col + 1
+    return n_row, n_col
+
+
+def t_pencil_axis(
+    m_bytes: float,
+    p_axis: int,
+    backend: str,
+    n_exchanges: int,
+    prm: CommParams = CommParams(),
+    chunk_compute_s: float = 0.0,
+) -> float:
+    """Predicted seconds of all of one grid axis's sub-exchanges: the
+    axis's backend costed at the axis's own sub-ring size. The single
+    per-axis formula shared by :func:`t_pencil` and
+    ``Plan.predict_axes`` -- the model and the plan cannot drift."""
+    from repro.core import backends  # late: backends imports this module
+
+    return n_exchanges * backends.get(backend).cost(m_bytes, p_axis, prm, chunk_compute_s)
+
+
+def t_pencil(
+    m_bytes: float,
+    p_rows: int,
+    p_cols: int,
+    backend_row: str,
+    backend_col: str,
+    prm: CommParams = CommParams(),
+    *,
+    ndim: int = 3,
+    transpose_back: bool = False,
+    chunk_compute_s: float = 0.0,
+) -> float:
+    """Predicted seconds of one pencil transform's communication: each
+    sub-axis exchange costed by its *own* backend at its *own* sub-ring
+    size (P_row or P_col) -- the 2-D extension of the per-backend
+    alpha-beta model. ``m_bytes`` is the per-device local block; every
+    sub-exchange re-shards the whole block over one grid axis, so the
+    per-axis cost is ``backend.cost(m_bytes, p_axis)`` and the axes sum
+    (the exchanges are sequentialized by the FFT passes between them).
+    """
+    n_row, n_col = pencil_exchanges(ndim, transpose_back)
+    return t_pencil_axis(m_bytes, p_rows, backend_row, n_row, prm, chunk_compute_s) + (
+        t_pencil_axis(m_bytes, p_cols, backend_col, n_col, prm, chunk_compute_s)
+    )
+
+
 # ---------------------------------------------------------------------------
 # HLO collective parsing
 # ---------------------------------------------------------------------------

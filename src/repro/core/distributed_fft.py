@@ -75,8 +75,6 @@ def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> 
     y = lf.local_fft(x, axis=-1, impl=impl)
     p = axis_size(axis_name)
     r = y.shape[-2]
-    c = y.shape[-1] // p
-    n = p * r
     w_p = jnp.asarray(lf._dft_matrix_np(p))  # (k1, src)
 
     def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
@@ -93,7 +91,6 @@ def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> 
     acc = lf.local_fft(acc, axis=-1, impl=impl)  # (..., c, k1=p, k2=r)
     # F index k = k1 + P*k2 -> order (k2 major, k1 minor).
     out = jnp.swapaxes(acc, -1, -2)  # (..., c, k2, k1)
-    del c, n
     return out.reshape(out.shape[:-2] + (p * r,))
 
 

@@ -128,14 +128,12 @@ def collective_matmul_ag(
     computed as their operands arrive.
     """
     del contract_chunks_of
-    p = axis_size(axis_name)
     kc = x.shape[-1]
 
     def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
         w_slice = lax.dynamic_slice_in_dim(w, src * kc, kc, axis=0)
         return jnp.einsum("...k,kn->...n", chunk, w_slice)
 
-    del p
     return ring_all_gather(x, axis_name, chunk_fn, axis=-1)
 
 

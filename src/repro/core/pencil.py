@@ -1,0 +1,212 @@
+"""Pencil-decomposed distributed FFTs over a 2-D process grid.
+
+Slab decomposition (:mod:`repro.core.distributed_fft`) shards one data
+dimension over one mesh axis: parallelism caps at P <= N and every
+transpose is one global exchange over all P ranks. The pencil
+decomposition shards TWO data dimensions over a
+(:class:`~repro.core.grid.ProcessGrid`) of P_row x P_col processes, so
+
+- parallelism scales to P_row * P_col <= N0 * N1, and
+- each transpose is a **sub-axis** exchange over only P_row or P_col
+  ranks -- smaller rings, independently strategy-switched. ``scatter``
+  over the rows axis and ``bisection`` over cols is a legal (and, per
+  the alpha-beta model, often optimal) combination: the 2-D analogue of
+  the paper's parcelport switch.
+
+``pencil_fft3`` is the canonical shape (the companion case-study's
+algorithm): three local FFT passes separated by two sub-axis transposes,
+
+    (X/Pr, Y/Pc, Z)  --fft Z-->  --T_cols-->  (X/Pr, Z/Pc, Y)
+                     --fft Y-->  --T_rows-->  (Z/Pc, Y/Pr, X)  --fft X-->
+
+returning the reversed-axes spectrum ``fftn(x).transpose(..., -1,-2,-3)``
+(standard pencil output; ``transpose_back=True`` restores the natural
+layout with two more sub-exchanges).
+
+``pencil_fft2`` transforms each data dimension over its own grid axis
+(transpose / FFT / transpose-back per axis -- four sub-exchanges, two
+per sub-ring) and returns the **natural-layout** ``fft2(x)``: with both
+data dims sharded there is no cheaper transposed-output shortcut. Its
+point is the mesh, not the shape: on a 2-D mesh it exchanges over each
+sub-ring separately (per-axis backends, per-fabric tuning) instead of
+flattening everything onto one P-wide ring. Both data dims must divide
+P_row*P_col, so its parallelism cap matches slab's P <= N.
+
+Every sub-exchange dispatches through :mod:`repro.core.backends` by
+name, exactly like the slab path -- whole-transform (``kind="global"``)
+backends have no shard_map transpose and are rejected per-axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro.core.fftmath as lf
+import repro.core.transpose as tr
+from repro.core import backends
+from repro.core.compat import shard_map
+from repro.core.grid import ProcessGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class PencilConfig:
+    """Per-axis exchange strategy + local-FFT settings for the pencil
+    transforms. ``backend_row``/``backend_col`` name registered
+    shard_map backends; they are resolved and validated independently
+    (the 2-D parcelport switch). ``transpose_back`` applies to
+    ``pencil_fft3`` only -- ``pencil_fft2`` is already natural-layout."""
+
+    backend_row: str = "alltoall"
+    backend_col: str = "alltoall"
+    local_impl: lf.LocalImpl = "jnp"
+    transpose_back: bool = False
+
+
+def _check_backends(cfg: PencilConfig, grid: ProcessGrid) -> None:
+    for role, name, p in (
+        ("row", cfg.backend_row, grid.p_rows),
+        ("col", cfg.backend_col, grid.p_cols),
+    ):
+        b = backends.get(name)  # raises listing the registry
+        if b.kind != "shard_map":
+            raise ValueError(
+                f"backend_{role}={name!r} is a whole-transform backend; "
+                f"pencil sub-axis exchanges need shard_map backends "
+                f"({list(backends.available(kind='shard_map'))})"
+            )
+        if not b.supports(p):
+            raise ValueError(
+                f"backend_{role}={name!r} does not support "
+                f"P_{role}={p} (grid {grid.p_rows}x{grid.p_cols})"
+            )
+
+
+def check_divisible(global_shape, grid: ProcessGrid, ndim: int) -> None:
+    """Raise a ValueError naming the offending data axis and grid
+    dimension when ``global_shape`` cannot be pencil-sharded -- the
+    plan-time guard, so the failure never surfaces as an opaque chunking
+    error deep inside :mod:`repro.core.transpose`."""
+    pr, pc = grid.p_rows, grid.p_cols
+
+    def need(axis_from_end: int, divisor: int, why: str) -> None:
+        size = global_shape[len(global_shape) - axis_from_end]
+        if size % divisor:
+            raise ValueError(
+                f"pencil fft{ndim}: data axis -{axis_from_end} (global size "
+                f"{size}) is not divisible by {why} -- shape "
+                f"{tuple(global_shape)} on grid {pr}x{pc} "
+                f"(row_axis={grid.row_axis!r}, col_axis={grid.col_axis!r})"
+            )
+
+    if ndim == 3:
+        need(3, pr, f"P_row={pr} ({grid.row_axis!r})")
+        need(2, pc, f"P_col={pc} ({grid.col_axis!r})")
+        need(2, pr, f"P_row={pr} ({grid.row_axis!r}; the rows exchange re-shards it)")
+        need(1, pc, f"P_col={pc} ({grid.col_axis!r}; the cols exchange re-shards it)")
+    elif ndim == 2:
+        need(2, pr * pc, f"P_row*P_col={pr * pc} (both sub-rings re-shard it)")
+        need(1, pr * pc, f"P_row*P_col={pr * pc} (both sub-rings re-shard it)")
+    else:
+        raise ValueError(f"pencil decomposition supports ndim 2 or 3, got {ndim}")
+
+
+def pencil_fft3(
+    x: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    *,
+    inverse: bool = False,
+) -> jax.Array:
+    """Pencil-decomposed 3-D FFT of (..., D0, D1, D2) with D0 sharded
+    over ``grid.row_axis`` and D1 over ``grid.col_axis``.
+
+    Returns the reversed-axes spectrum (global value
+    ``fftn(x).transpose(..., -1, -2, -3)``) sharded (D2 over cols, D1
+    over rows), or the natural layout with ``cfg.transpose_back`` (two
+    extra sub-exchanges). ``inverse`` computes the matching ifftn
+    (1/(D0*D1*D2) normalization), same layout conventions.
+    """
+    _check_backends(cfg, grid)
+    check_divisible(x.shape, grid, 3)
+    d0, d1, d2 = x.shape[-3:]
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = jnp.conj(xl) if inverse else xl
+        # pass 1: D2 is local -- FFT it, then the cols sub-exchange
+        # swaps (D1, D2): (x_r, y_c, D2) -> (x_r, z_c, D1)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        # pass 2: D1 now local; the rows sub-exchange needs the
+        # rows-sharded D0 at position -2: (x_r, z_c, D1)->(z_c, x_r, D1)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = jnp.swapaxes(v, -3, -2)
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+        # pass 3: D0 local: (z_c, y_r, D0)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        if cfg.transpose_back:
+            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+            v = jnp.swapaxes(v, -3, -2)
+            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        if inverse:
+            v = jnp.conj(v) / (d0 * d1 * d2)
+        return v
+
+    lead = [None] * (x.ndim - 3)
+    in_spec = P(*lead, row, col, None)
+    out_spec = in_spec if cfg.transpose_back else P(*lead, col, row, None)
+    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(x)
+
+
+def pencil_fft2(
+    x: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    *,
+    inverse: bool = False,
+) -> jax.Array:
+    """Pencil-decomposed 2-D FFT of (..., R, C) with R sharded over
+    ``grid.row_axis`` and C over ``grid.col_axis``.
+
+    Each data dimension is transformed over its own grid axis
+    (transpose / local FFT / transpose-back, i.e. two exchanges per
+    sub-ring), so the output is the **natural-layout** ``fft2(x)`` --
+    unlike the slab path's transposed spectrum. ``cfg.transpose_back``
+    must be False (there is nothing to transpose back). Both R and C
+    must divide P_row*P_col (every sub-ring re-shards both dims).
+    """
+    if cfg.transpose_back:
+        raise ValueError(
+            "pencil fft2 already returns the natural layout; "
+            "transpose_back applies to slab transforms and pencil fft3 only"
+        )
+    _check_backends(cfg, grid)
+    check_divisible(x.shape, grid, 2)
+    r_glob, c_glob = x.shape[-2:]
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = jnp.conj(xl) if inverse else xl
+        # pass A -- transform C over the cols sub-ring. The cols
+        # exchange wants the cols-sharded dim at -2 and a fully-local
+        # dim at -1: (r_r, c_c) -> (c_c, r_r) -> T_col -> (r_rc, C).
+        v = jnp.swapaxes(v, -1, -2)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        v = jnp.swapaxes(v, -1, -2)  # back to (r_r, c_c), C-dim done
+        # pass B -- transform R over the rows sub-ring: (r_r, c_c) is
+        # already (rows-sharded, local): T_row -> (c_cr, R).
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+        if inverse:
+            v = jnp.conj(v) / (r_glob * c_glob)
+        return v
+
+    spec = P(*([None] * (x.ndim - 2)), row, col)
+    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(x)

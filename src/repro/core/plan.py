@@ -9,12 +9,19 @@ the distributed transforms, rebuilt on :mod:`repro.core.backends`:
 
 A :class:`Plan`:
 
-- validates the (global shape, mesh, shard axis, backend) combination
-  **once**, at construction;
-- resolves ``backend="auto"`` to the alpha-beta cost-model argmin over
-  every registered backend supporting the shard count
-  (``Plan.predict()`` exposes the full ranking -- the paper's Fig. 3
-  hypothesis step as an API);
+- validates the (global shape, mesh, shard axes, decomposition, backend)
+  combination **once**, at construction -- including shard-divisibility,
+  so a bad shape fails here naming the offending data axis and mesh/grid
+  dimension instead of deep inside the transpose chunking;
+- resolves the decomposition: ``decomp="slab"`` (one mesh axis, the
+  paper's layout), ``"pencil"`` (a 2-D
+  :class:`~repro.core.grid.ProcessGrid`, sub-axis exchanges with
+  independently selected per-axis backends), or ``"auto"`` (pencil
+  whenever the mesh offers a valid 2-D grid, else slab);
+- resolves ``backend="auto"`` to the alpha-beta cost-model argmin --
+  over every registered backend supporting the shard count (slab), or
+  per grid axis via :func:`repro.core.backends.cheapest_pair` (pencil;
+  pass a ``(backend_row, backend_col)`` tuple to pin the pair);
 - caches one jitted executable per (direction, dtype), so repeated
   ``execute`` calls never re-trace or re-compile;
 - exposes ``lower``/``roofline`` for dry-run analysis of the compiled
@@ -39,7 +46,28 @@ from repro.core import comm_model as cm
 from repro.core import distributed_fft as dfft
 from repro.core.distributed_fft import FFTConfig
 
-_EXCHANGES = {1: 3, 2: 1, 3: 2}  # pencil exchanges per forward transform
+_EXCHANGES = {1: 3, 2: 1, 3: 2}  # slab pencil-exchanges per forward transform
+
+#: Pair-key separator for pencil backend pairs ("scatter+bisection") --
+#: registry names are identifiers, so '+' cannot appear inside one.
+PAIR_SEP = "+"
+
+
+def pair_key(backend_row: str, backend_col: str) -> str:
+    return f"{backend_row}{PAIR_SEP}{backend_col}"
+
+
+def split_pair(key) -> Tuple[str, str]:
+    """(row, col) from a pair key, a 2-tuple/list, or a single name
+    (applied to both axes)."""
+    if isinstance(key, (tuple, list)):
+        if len(key) != 2:
+            raise ValueError(f"pencil backend pair must have 2 entries, got {key!r}")
+        return str(key[0]), str(key[1])
+    if PAIR_SEP in key:
+        row, _, col = key.partition(PAIR_SEP)
+        return row, col
+    return key, key
 
 
 class Plan:
@@ -49,11 +77,16 @@ class Plan:
     ``execute`` computes ("forward" or "inverse"); ``inverse`` always
     computes the opposite of ``execute``.
 
+    Slab plans (``decomp="slab"``) expose ``backend`` (one registry
+    name); pencil plans expose ``backend_row``/``backend_col`` plus
+    ``backend`` as the combined ``"row+col"`` pair key, and ``grid``
+    (the resolved :class:`~repro.core.grid.ProcessGrid`).
+
     Partial surface: the 1-D large transform has no inverse -- planning
     ``ndim=1, direction="inverse"`` is rejected at construction, and
     calling ``inverse()`` on a forward 1-D plan raises
     ``NotImplementedError`` before anything executes (conjugate
-    externally instead).
+    externally instead). Pencil supports ndim 2 and 3.
     """
 
     def __init__(
@@ -71,6 +104,9 @@ class Plan:
         dtype=jnp.complex64,
         params: Optional[cm.CommParams] = None,
         chunk_compute_s: float = 0.0,
+        decomp: str = "slab",
+        row_axis: Optional[str] = None,
+        col_axis: Optional[str] = None,
     ):
         from repro.core.sharding import fft_axis
 
@@ -78,11 +114,15 @@ class Plan:
             raise ValueError("ndim must be 1, 2 or 3")
         if direction not in ("forward", "inverse"):
             raise ValueError(f"direction must be 'forward' or 'inverse', got {direction!r}")
+        if decomp not in ("slab", "pencil", "auto"):
+            raise ValueError(f"decomp must be 'slab', 'pencil' or 'auto', got {decomp!r}")
         if ndim == 1 and direction == "inverse":
             # fail at plan time, not first execute (validate-once contract)
             raise NotImplementedError(
                 "1-D large inverse is not implemented: plan forward and conjugate externally"
             )
+        if (row_axis is None) != (col_axis is None):
+            raise ValueError("pass both row_axis and col_axis, or neither")
         self.global_shape = tuple(global_shape)
         self.mesh = mesh
         self.axis_name = axis_name or fft_axis(mesh)
@@ -99,43 +139,181 @@ class Plan:
         self.measured: Optional[Dict[str, float]] = None
         self.wisdom_hit = False
 
-        p = self.shards
-        if ndim == 2:
-            r, c = self.global_shape[-2:]
-            if r % p or c % p:
-                raise ValueError(f"2-D shape {(r, c)} not divisible by shards {p}")
-        elif ndim == 3:
-            d0, d1, d2 = self.global_shape[-3:]
-            if d0 % p or (d1 * d2) % p:
-                raise ValueError(f"3-D shape {(d0, d1, d2)} not shardable by {p}")
+        self.grid = None
+        if decomp == "slab":
+            if row_axis is not None or col_axis is not None:
+                raise ValueError("row_axis/col_axis apply to decomp='pencil' (or 'auto') only")
+            self.decomp = "slab"
+            self._init_slab(backend)
+        elif decomp == "pencil":
+            self.decomp = "pencil"
+            self._init_pencil(backend, row_axis, col_axis)
         else:
-            n = self.global_shape[-1]
-            if n % (p * p):
-                raise ValueError(f"1-D size {n} must be divisible by P^2={p * p}")
+            # auto: pencil when the WHOLE pencil plan validates (grid,
+            # divisibility, per-axis backends), else slab -- a pinned
+            # backend that only works under one decomposition steers the
+            # choice instead of erroring
+            if row_axis is not None:
+                # explicitly configured grid axes are a user argument,
+                # not an infeasibility signal: bad names must raise, not
+                # silently fall back to slab
+                from repro.core import grid as _grid
 
+                _grid.grid_from_mesh(mesh, row_axis, col_axis)
+            pencil_err: Optional[ValueError] = None
+            if ndim in (2, 3) and not fuse_dft and not (ndim == 2 and transpose_back):
+                try:
+                    self.decomp = "pencil"
+                    self._init_pencil(backend, row_axis, col_axis)
+                except ValueError as e:
+                    pencil_err = e
+                    self.grid = None
+                    self.decomp = None
+            else:
+                self.decomp = None
+            if self.decomp == "pencil":
+                # cost-aware tie-break: a structurally-valid pencil grid
+                # can still lose to slab (a degenerate (P,1) grid doubles
+                # the fft2 exchanges over the same ring). Adopt slab when
+                # it keeps at least the same parallelism and its resolved
+                # backend predicts cheaper than the pencil pair. The
+                # trial shards over the larger of fft_axis and the grid
+                # axes -- fft_axis's last-axis fallback would otherwise
+                # pick a size-1 axis on e.g. a (P,1) ("rows","cols") mesh
+                # and lose the comparison to a phantom parallelism gap
+                trial_ax = axis_name
+                if trial_ax is None:
+                    candidates = (fft_axis(mesh), self.grid.row_axis, self.grid.col_axis)
+                    trial_ax = max(candidates, key=lambda a: mesh.shape[a])
+                try:
+                    trial = Plan(
+                        global_shape, mesh, ndim=ndim, direction=direction,
+                        backend=backend, axis_name=trial_ax, local_impl=local_impl,
+                        fuse_dft=fuse_dft, transpose_back=transpose_back, dtype=dtype,
+                        params=params, chunk_compute_s=chunk_compute_s, decomp="slab",
+                    )
+                except (ValueError, NotImplementedError):
+                    trial = None
+                if (
+                    trial is not None
+                    and trial.shards >= self.shards
+                    and trial.predict()[trial.backend] < self.predict()[self.backend]
+                ):
+                    self.grid = None
+                    self.axis_name = trial_ax
+                    self.decomp = "slab"
+                    self._init_slab(backend)
+            if self.decomp is None:
+                self.decomp = "slab"
+                try:
+                    self._init_slab(backend)
+                except ValueError as e:
+                    if pencil_err is not None:
+                        raise ValueError(
+                            f"decomp='auto': neither decomposition fits this "
+                            f"problem -- pencil: {pencil_err} -- slab: {e}"
+                        ) from e
+                    raise
+        self._cache: Dict[Tuple[str, str], jax.stages.Wrapped] = {}
+        self.compiles = 0  # jit wrappers created (not per-shape recompiles)
+
+    def _init_slab(self, backend: str) -> None:
+        p = self.shards
+        shape, ax = self.global_shape, self.axis_name
+        if self.ndim == 2:
+            r, c = shape[-2:]
+            for off, size in ((2, r), (1, c)):
+                if size % p:
+                    raise ValueError(
+                        f"slab fft2: data axis -{off} (global size {size}) is not "
+                        f"divisible by mesh axis {ax!r} (P={p}) -- shape {shape}"
+                    )
+        elif self.ndim == 3:
+            d0, d1, d2 = shape[-3:]
+            if d0 % p:
+                raise ValueError(
+                    f"slab fft3: data axis -3 (global size {d0}) is not divisible "
+                    f"by mesh axis {ax!r} (P={p}) -- shape {shape}"
+                )
+            if (d1 * d2) % p:
+                raise ValueError(
+                    f"slab fft3: flattened axes (-2,-1) (size {d1}*{d2}={d1 * d2}) "
+                    f"not divisible by mesh axis {ax!r} (P={p}) -- shape {shape}"
+                )
+        else:
+            n = shape[-1]
+            if n % (p * p):
+                raise ValueError(
+                    f"fft1d_large: data axis -1 (size {n}) must be divisible by "
+                    f"P^2={p * p} of mesh axis {ax!r} -- shape {shape}"
+                )
+
+        if not isinstance(backend, str) or PAIR_SEP in backend:
+            raise ValueError(
+                f"slab plans take one backend name, got {backend!r} "
+                f"(per-axis pairs are decomp='pencil')"
+            )
         if backend == "auto":
-            backend = "scatter" if fuse_dft else backends.cheapest(
-                self.local_bytes(), p, self.params, chunk_compute_s=chunk_compute_s
+            backend = "scatter" if self.fuse_dft else backends.cheapest(
+                self.local_bytes(), p, self.params, chunk_compute_s=self.chunk_compute_s
             )
         self.backend_obj = backends.get(backend)  # raises listing the registry
         self.backend = backend
+        self.backend_row = self.backend_col = None
         if not self.backend_obj.supports(p):
             raise ValueError(f"backend {backend!r} does not support P={p}")
-        if fuse_dft and backend != "scatter":
+        if self.fuse_dft and backend != "scatter":
             raise ValueError("fuse_dft requires backend='scatter'")
 
         self._cfg = FFTConfig(
             strategy=backend,
-            local_impl=local_impl,  # type: ignore[arg-type]
-            fuse_dft=fuse_dft,
-            transpose_back=transpose_back,
+            local_impl=self.local_impl,  # type: ignore[arg-type]
+            fuse_dft=self.fuse_dft,
+            transpose_back=self.transpose_back,
         )
-        self._cache: Dict[Tuple[str, str], jax.stages.Wrapped] = {}
-        self.compiles = 0  # jit wrappers created (not per-shape recompiles)
+
+    def _init_pencil(self, backend, row_axis: Optional[str], col_axis: Optional[str]) -> None:
+        from repro.core import grid as _grid
+        from repro.core import pencil as _pencil
+
+        if self.ndim == 1:
+            raise ValueError("pencil decomposition supports ndim 2 or 3 (1-D is slab-only)")
+        if self.fuse_dft:
+            raise ValueError("fuse_dft is a slab scatter-only feature; use decomp='slab'")
+        if self.ndim == 2 and self.transpose_back:
+            raise ValueError(
+                "pencil fft2 already returns the natural layout; "
+                "transpose_back applies to slab plans and pencil fft3 only"
+            )
+        self.grid = _grid.grid_from_mesh(self.mesh, row_axis, col_axis)
+        _pencil.check_divisible(self.global_shape, self.grid, self.ndim)
+
+        if backend == "auto":
+            br, bc = backends.cheapest_pair(
+                self.local_bytes(),
+                self.grid.p_rows,
+                self.grid.p_cols,
+                self.params,
+                chunk_compute_s=self.chunk_compute_s,
+            )
+        else:
+            br, bc = split_pair(backend)
+        self.backend_row, self.backend_col = br, bc
+        self.backend = pair_key(br, bc)
+        self.backend_obj = None  # per-axis backends; see backend_row/col
+        self._cfg = _pencil.PencilConfig(
+            backend_row=br,
+            backend_col=bc,
+            local_impl=self.local_impl,  # type: ignore[arg-type]
+            transpose_back=self.transpose_back,
+        )
+        _pencil._check_backends(self._cfg, self.grid)  # raises naming the axis
 
     # -- geometry --------------------------------------------------------------
     @property
     def shards(self) -> int:
+        if self.decomp == "pencil":
+            return self.grid.size
         return self.mesh.shape[self.axis_name]
 
     def local_bytes(self, dtype=None) -> float:
@@ -144,25 +322,51 @@ class Plan:
         return float(np.prod(self.global_shape)) * itemsize / self.shards
 
     def comm_bytes(self, dtype=None) -> float:
-        """Bytes each device ships per pencil exchange ((1-1/P) of local)."""
-        p = self.shards
-        return self.local_bytes(dtype) * (1 - 1 / p)
+        """Total bytes each device ships over the fabric per transform,
+        summed over every exchange -- each exchange re-shards the local
+        block over its ring (P for slab, P_row/P_col per sub-exchange
+        for pencil), shipping (1-1/P_ring) of it. Same units under both
+        decompositions, so slab-vs-pencil comparisons are direct."""
+        m = self.local_bytes(dtype)
+        if self.decomp == "pencil":
+            n_row, n_col = self._pencil_exchanges()
+            pr, pc = self.grid.p_rows, self.grid.p_cols
+            return m * (n_row * (1 - 1 / pr) + n_col * (1 - 1 / pc))
+        return m * self._slab_exchanges() * (1 - 1 / self.shards)
 
     # -- cost model ------------------------------------------------------------
+    def _slab_exchanges(self) -> int:
+        return _EXCHANGES[self.ndim] + (1 if self.ndim == 2 and self.transpose_back else 0)
+
+    def _pencil_exchanges(self) -> Tuple[int, int]:
+        return cm.pencil_exchanges(self.ndim, self.transpose_back)
+
     def predict(self, dtype=None, chunk_compute_s: Optional[float] = None) -> Dict[str, float]:
-        """Alpha-beta predicted seconds per backend for this problem --
-        ``n_exchanges * backend.cost(local_bytes, P, params, chunk_compute_s)``
-        for every registered backend that supports this shard count.
+        """Alpha-beta predicted seconds per backend for this problem.
+
+        Slab: ``n_exchanges * backend.cost(local_bytes, P, params,
+        chunk_compute_s)`` for every registered backend that supports
+        this shard count. Pencil: one entry per ``"row+col"`` pair of
+        shard_map backends, each axis costed at its own sub-ring size
+        (P_row / P_col) by :func:`repro.core.comm_model.t_pencil` --
+        see :meth:`predict_axes` for the per-axis decomposition.
         ``chunk_compute_s`` (default: the plan's own) is per-chunk compute:
         streaming backends overlap it with later rounds, monolithic ones
         serialize it, so the overlap advantage shows up in the ranking.
         Uses the plan's ``params`` -- pass a calibrated
         :meth:`~repro.core.comm_model.CommParams.calibrate` result at plan
         time for measured (rather than v5e napkin) constants."""
-        p = self.shards
+        if self.decomp == "pencil":
+            row_costs, col_costs = self.predict_axes(dtype, chunk_compute_s)
+            return {
+                pair_key(r, c): row_costs[r] + col_costs[c]
+                for r in row_costs
+                for c in col_costs
+            }
         m = self.local_bytes(dtype)
         cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
-        n_ex = _EXCHANGES[self.ndim] + (1 if self.ndim == 2 and self.transpose_back else 0)
+        p = self.shards
+        n_ex = self._slab_exchanges()
         out = {}
         for name in backends.available():
             b = backends.get(name)
@@ -170,20 +374,80 @@ class Plan:
                 out[name] = n_ex * b.cost(m, p, self.params, cc)
         return out
 
+    def predict_axes(
+        self, dtype=None, chunk_compute_s: Optional[float] = None
+    ) -> Tuple[Dict[str, float], Dict[str, float]]:
+        """Pencil only: (row_costs, col_costs) -- per-backend predicted
+        seconds of all of this transform's exchanges over that grid axis,
+        each at its own sub-ring size. ``predict()[f"{r}+{c}"] ==
+        row_costs[r] + col_costs[c]`` by construction."""
+        if self.decomp != "pencil":
+            raise ValueError("predict_axes is a pencil-plan method; use predict()")
+        m = self.local_bytes(dtype)
+        cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
+        n_row, n_col = self._pencil_exchanges()
+        out = []
+        for p_axis, n_ex in ((self.grid.p_rows, n_row), (self.grid.p_cols, n_col)):
+            out.append({
+                name: cm.t_pencil_axis(m, p_axis, name, n_ex, self.params, cc)
+                for name in backends.supporting(p_axis, kind="shard_map")
+            })
+        return out[0], out[1]
+
     # -- sharding specs --------------------------------------------------------
-    def input_sharding(self) -> NamedSharding:
+    def _opposite_reverses_layout(self) -> bool:
+        """Whether the opposite direction consumes the reversed-axes
+        pencil layout (3-D pencil without transpose_back: the forward
+        output is fftn reversed, sharded (cols, rows))."""
+        return self.decomp == "pencil" and self.ndim == 3 and not self.transpose_back
+
+    def input_sharding(self, opposite: bool = False) -> NamedSharding:
+        """Sharding of the planned direction's input; ``opposite=True``
+        gives the opposite direction's input (differs only when that
+        direction consumes the reversed-axes pencil layout)."""
         nd = len(self.global_shape)
         spec = [None] * nd
-        spec[nd - self.ndim] = self.axis_name  # shard the leading transform dim
+        if self.decomp == "pencil":
+            # shard the two leading transform dims over the grid; the
+            # reversed layout arrives sharded (cols, rows)
+            row, col = self.grid.row_axis, self.grid.col_axis
+            if opposite and self._opposite_reverses_layout():
+                row, col = col, row
+            spec[nd - self.ndim] = row
+            spec[nd - self.ndim + 1] = col
+        else:
+            spec[nd - self.ndim] = self.axis_name  # shard the leading transform dim
         return NamedSharding(self.mesh, P(*spec))
 
-    def input_spec(self, dtype=None) -> jax.ShapeDtypeStruct:
+    def input_spec(self, dtype=None, opposite: bool = False) -> jax.ShapeDtypeStruct:
+        shape = self.global_shape
+        if opposite and self._opposite_reverses_layout():
+            shape = shape[:-3] + tuple(reversed(shape[-3:]))
         return jax.ShapeDtypeStruct(
-            self.global_shape, dtype or self.dtype, sharding=self.input_sharding()
+            shape, dtype or self.dtype, sharding=self.input_sharding(opposite)
         )
 
     # -- execution -------------------------------------------------------------
     def _fn(self, inverse: bool):
+        if self.decomp == "pencil":
+            from repro.core import pencil as _pencil
+            from repro.core.grid import ProcessGrid
+
+            cfg, grid = self._cfg, self.grid
+            opposite = inverse != (self.direction == "inverse")
+            if opposite and self._opposite_reverses_layout():
+                # the opposite direction consumes the reversed-axes
+                # output, sharded (cols, rows): swap the grid roles (and
+                # the per-axis backends with them) so the transform
+                # reads that sharding directly -- no hidden reshard, and
+                # the forward divisibility constraints already imply the
+                # reversed ones, so round trips always plan
+                grid = ProcessGrid(grid.mesh, grid.col_axis, grid.row_axis)
+                cfg = dataclasses.replace(
+                    cfg, backend_row=cfg.backend_col, backend_col=cfg.backend_row
+                )
+            f = _pencil.pencil_fft2 if self.ndim == 2 else _pencil.pencil_fft3
+            return lambda x: f(x, grid, cfg, inverse=inverse)
         if self.ndim == 2:
             return lambda x: dfft.fft2(x, self.mesh, self.axis_name, self._cfg, inverse=inverse)
         if self.ndim == 3:
@@ -229,9 +493,14 @@ class Plan:
 
         Goes through the same cached jit wrapper ``execute`` uses, so a
         later ``execute`` at this (direction, dtype) reuses the wrapper
-        (and ``compiles`` counts it exactly once)."""
+        (and ``compiles`` counts it exactly once). Lowering the opposite
+        direction uses that direction's actual input layout (the
+        reversed-axes pencil output where applicable)."""
         inv = (self.direction == "inverse") if inverse is None else inverse
-        return self._executable(inv, dtype or self.dtype).lower(self.input_spec(dtype))
+        opposite = inv != (self.direction == "inverse")
+        return self._executable(inv, dtype or self.dtype).lower(
+            self.input_spec(dtype, opposite=opposite)
+        )
 
     def roofline(self, inverse: Optional[bool] = None) -> cm.Roofline:
         """Compile abstractly and derive the three roofline terms from
@@ -248,8 +517,14 @@ class Plan:
         )
 
     def __repr__(self) -> str:
+        where = (
+            f"grid={self.grid.p_rows}x{self.grid.p_cols}"
+            if self.decomp == "pencil"
+            else f"P={self.shards}"
+        )
         return (
-            f"Plan(shape={self.global_shape}, ndim={self.ndim}, P={self.shards}, "
+            f"Plan(shape={self.global_shape}, ndim={self.ndim}, "
+            f"decomp={self.decomp!r}, {where}, "
             f"backend={self.backend!r}, direction={self.direction!r}, "
             f"dtype={self.dtype.name})"
         )
@@ -272,23 +547,50 @@ def plan_fft(
     planner: str = "estimate",
     timer=None,
     use_wisdom: bool = True,
+    decomp: str = "slab",
+    row_axis: Optional[str] = None,
+    col_axis: Optional[str] = None,
 ) -> Plan:
     """Plan a distributed FFT (the FFTW ``plan`` analogue).
+
+    ``decomp`` picks the process decomposition:
+
+    ``"slab"`` (default)
+        One sharded data dim over one mesh axis (``axis_name``, the
+        paper's layout): parallelism caps at P <= N, one global exchange
+        over all P ranks per transpose.
+    ``"pencil"``
+        Two sharded data dims over a 2-D process grid (``row_axis`` /
+        ``col_axis``, conventionally ``("rows", "cols")`` -- see
+        :mod:`repro.core.grid`): each transpose is a sub-axis exchange
+        over only P_row or P_col ranks, and each axis gets its own
+        backend -- pass ``backend=("scatter", "bisection")`` (or the
+        ``"scatter+bisection"`` pair key) to pin, ``backend="auto"``
+        for the per-axis cost-model argmin. ndim 2 or 3.
+    ``"auto"``
+        Pencil whenever the mesh offers a valid 2-D grid for this
+        shape/ndim AND the cost model does not predict a slab plan of at
+        least equal parallelism to be strictly cheaper (a degenerate
+        (P,1) grid, for example, doubles the fft2 exchanges over the
+        same ring, so slab wins it); else slab.
 
     ``planner`` picks the selection discipline (FFTW's ESTIMATE/MEASURE):
 
     ``"estimate"`` (default)
         ``backend="auto"`` = alpha-beta cost-model argmin over every
-        registered backend supporting this shard count -- the same set
-        (and costs) ``Plan.predict()`` ranks. Pass a
+        registered backend supporting this shard count (per grid axis at
+        its own sub-ring size under pencil) -- the same set (and costs)
+        ``Plan.predict()`` ranks. Pass a
         :meth:`CommParams.calibrate <repro.core.comm_model.CommParams.calibrate>`
         result as ``params`` to estimate with measured constants.
     ``"measure"``
-        Times every candidate backend on the real mesh (warmup + median)
-        and pins the measured argmin; per-backend timings land on
-        ``Plan.measured``. Consults the wisdom store first
-        (:mod:`repro.core.planner`), so a second identical plan never
-        re-measures; ``use_wisdom=False`` forces re-measurement and
+        Times every candidate backend (every per-axis pair, under
+        pencil) on the real mesh (warmup + median) and pins the measured
+        argmin; per-candidate timings land on ``Plan.measured``.
+        Consults the wisdom store first (:mod:`repro.core.planner`) --
+        keys carry the decomposition, grid shape and per-axis backend
+        pair -- so a second identical plan never re-measures;
+        ``use_wisdom=False`` forces re-measurement and
         ``timer(plan) -> seconds`` replaces the real clock (tests).
 
     Pass any name from ``repro.core.backends.available()`` as
@@ -318,6 +620,9 @@ def plan_fft(
             chunk_compute_s=chunk_compute_s,
             timer=timer,
             use_wisdom=use_wisdom,
+            decomp=decomp,
+            row_axis=row_axis,
+            col_axis=col_axis,
         )
     return Plan(
         global_shape,
@@ -332,6 +637,9 @@ def plan_fft(
         dtype=dtype,
         params=params,
         chunk_compute_s=chunk_compute_s,
+        decomp=decomp,
+        row_axis=row_axis,
+        col_axis=col_axis,
     )
 
 

@@ -11,8 +11,10 @@ discipline for the distributed transforms:
   benchmarks use) and pins the plan to the measured argmin, recording
   the full per-backend timing table on ``Plan.measured``;
 - an FFTW-style **wisdom store** -- JSON, keyed by
-  (shape, ndim, dtype, P, candidate backend set, device kind) -- is
-  consulted before measuring, so a repeated identical plan is free.
+  (shape, ndim, dtype, P, candidate backend set, device kind, and the
+  decomposition: slab axis, or pencil grid shape + axes + per-axis
+  backend pairs) -- is consulted before measuring, so a repeated
+  identical plan is free.
   :func:`export_wisdom` / :func:`import_wisdom` round-trip it to disk
   exactly like ``fftw_export_wisdom_to_filename``;
 - the alpha-beta constants feeding ``planner="estimate"`` can themselves
@@ -157,7 +159,19 @@ def candidate_backends(p: int, *, fuse_dft: bool = False) -> List[str]:
 
     if fuse_dft:
         return ["scatter"] if backends.get("scatter").supports(p) else []
-    return [n for n in backends.available() if backends.get(n).supports(p)]
+    return list(backends.supporting(p))
+
+
+def candidate_pairs(p_rows: int, p_cols: int) -> List[str]:
+    """Every measurable ``"row+col"`` pair for a pencil grid: the cross
+    product of shard_map backends supporting each sub-ring size (the
+    same eligibility filter ``Plan.predict_axes`` ranks)."""
+    from repro.core import backends
+    from repro.core.plan import pair_key
+
+    rows = backends.supporting(p_rows, kind="shard_map")
+    cols = backends.supporting(p_cols, kind="shard_map")
+    return [pair_key(r, c) for r in rows for c in cols]
 
 
 def plan_measured(
@@ -178,18 +192,25 @@ def plan_measured(
     use_wisdom: bool = True,
     warmup: int = 1,
     iters: int = 5,
+    decomp: str = "slab",
+    row_axis: Optional[str] = None,
+    col_axis: Optional[str] = None,
 ):
     """FFTW_MEASURE: time every candidate backend on the real mesh, pin
     the plan to the measured argmin, and remember the answer as wisdom.
 
-    ``backend="auto"`` measures every registered backend supporting P;
-    a pinned ``backend=`` name restricts the field to that one (the
-    timing still lands on ``Plan.measured``). ``timer(plan) -> seconds``
-    replaces the real measurement when injected.
+    ``backend="auto"`` measures every registered backend supporting P --
+    under ``decomp="pencil"``, every ``"row+col"`` pair of shard_map
+    backends supporting the sub-ring sizes. A pinned ``backend=`` name
+    (or pair) restricts the field to that one (the timing still lands on
+    ``Plan.measured``). ``timer(plan) -> seconds`` replaces the real
+    measurement when injected. Wisdom keys carry the decomposition and,
+    for pencil, the grid shape and axes, so slab and pencil winners (and
+    different grid shapes) never alias.
     """
     import jax.numpy as jnp
 
-    from repro.core.plan import Plan
+    from repro.core.plan import Plan, pair_key, split_pair
 
     dtype = jnp.complex64 if dtype is None else dtype
 
@@ -207,18 +228,41 @@ def plan_measured(
             dtype=dtype,
             params=params,
             chunk_compute_s=chunk_compute_s,
+            decomp=decomp,
+            row_axis=row_axis,
+            col_axis=col_axis,
         )
 
     from repro.core.sharding import fft_axis
 
-    ax = axis_name or fft_axis(mesh)
-    p = int(mesh.shape[ax])
-    if backend == "auto":
-        names = candidate_backends(p, fuse_dft=fuse_dft)
+    # one probe plan resolves decomp="auto", the grid, and validates the
+    # shape once; candidates then rebuild with the resolved decomposition.
+    # The probe uses the caller's backend so a pinned backend that only
+    # works under one decomposition steers auto the same way estimate does
+    probe = build(backend)
+    p = probe.shards
+    if probe.decomp == "pencil":
+        grid = probe.grid
+        if backend == "auto":
+            names = candidate_pairs(grid.p_rows, grid.p_cols)
+        else:
+            names = [pair_key(*split_pair(backend))]
+        placement = (
+            f"decomp=pencil,grid={grid.p_rows}x{grid.p_cols},"
+            f"axes={grid.row_axis}+{grid.col_axis}"
+        )
     else:
-        names = [backend]
+        ax = axis_name or fft_axis(mesh)
+        if backend == "auto":
+            names = candidate_backends(p, fuse_dft=fuse_dft)
+        else:
+            names = [backend]
+        placement = f"decomp=slab,ax={ax}"
     if not names:
         raise ValueError(f"no measurable backend supports P={p}")
+    decomp = probe.decomp  # pin for the candidate builds
+    if decomp == "slab":
+        row_axis = col_axis = None  # auto may have fallen back from pencil
 
     key = wisdom_key(
         tuple(global_shape),
@@ -229,7 +273,7 @@ def plan_measured(
         device_kind(mesh),
         opts=(
             f"mesh={'x'.join(f'{k}{v}' for k, v in mesh.shape.items())},"
-            f"ax={ax},dir={direction},impl={local_impl},"
+            f"{placement},dir={direction},impl={local_impl},"
             f"fuse={int(fuse_dft)},tb={int(transpose_back)}"
         ),
     )

@@ -249,7 +249,11 @@ def distributed_transpose(
         )
     p = _axis_size(axis_name)
     if x.shape[-1] % p:
-        raise ValueError(f"column count {x.shape[-1]} not divisible by shards {p}")
+        raise ValueError(
+            f"column count {x.shape[-1]} not divisible by the {p} shards of "
+            f"mesh axis {axis_name!r} (plan-level shapes are validated by "
+            f"plan_fft; direct callers must pre-chunk)"
+        )
     if chunk_fn is not None and not backend.supports_chunk_fn:
         raise ValueError(
             f"chunk_fn requires a chunk-streaming backend "

@@ -1,0 +1,395 @@
+"""Pencil-grid subsystem, host-process side: ProcessGrid validation,
+grid-shape factorizations, per-axis cost-model selection, plan-level
+decomp plumbing and its validate-once error surface. Multi-device
+numerical sweeps live in tests/test_pencil.py."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CommParams, backends, comm_model, plan_fft, planner
+from repro.core import grid as gridmod
+from repro.core.compat import make_mesh, make_mesh_1d
+from repro.core.grid import ProcessGrid, auto_grid_shape, grid_from_mesh, grid_shapes, make_grid
+
+
+@pytest.fixture(autouse=True)
+def _fresh_wisdom():
+    planner.forget_wisdom()
+    yield
+    planner.forget_wisdom()
+
+
+# ---------------------------------------------------------------------------
+# grid shapes / factorizations (property-style)
+# ---------------------------------------------------------------------------
+
+
+@given(p=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=50)
+def test_grid_shapes_are_exact_factorizations(p):
+    shapes = grid_shapes(p)
+    assert all(pr * pc == p for pr, pc in shapes)
+    assert len(set(shapes)) == len(shapes)  # no duplicates
+    assert (1, p) in shapes and (p, 1) in shapes
+    # complete: every divisor appears as a row count
+    assert [pr for pr, _ in shapes] == [d for d in range(1, p + 1) if p % d == 0]
+
+
+@given(p=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=50)
+def test_auto_grid_shape_most_square(p):
+    pr, pc = auto_grid_shape(p)
+    assert pr * pc == p and pr <= pc
+    # no other factorization is closer to square
+    assert all(max(a, b) >= pc for a, b in grid_shapes(p))
+
+
+def test_grid_shapes_reject_nonpositive():
+    with pytest.raises(ValueError, match="positive"):
+        grid_shapes(0)
+    with pytest.raises(ValueError, match="positive"):
+        auto_grid_shape(-2)
+
+
+# ---------------------------------------------------------------------------
+# ProcessGrid / resolution
+# ---------------------------------------------------------------------------
+
+
+def test_process_grid_validates_axes():
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    g = ProcessGrid(mesh)
+    assert g.shape == (1, 1) and g.size == 1
+    assert g.axis_of("row") == "rows" and g.axis_of("col") == "cols"
+    with pytest.raises(ValueError, match="distinct"):
+        ProcessGrid(mesh, "rows", "rows")
+    with pytest.raises(ValueError, match="not an axis"):
+        ProcessGrid(mesh, "rows", "model")
+    with pytest.raises(ValueError, match="'row' or 'col'"):
+        g.axis_of("diag")
+
+
+def test_grid_from_mesh_resolution_rules():
+    # conventional names win
+    g = grid_from_mesh(make_mesh((1, 1), ("rows", "cols")))
+    assert (g.row_axis, g.col_axis) == ("rows", "cols")
+    # otherwise the last two axes (mirrors fft_axis's fallback)
+    g = grid_from_mesh(make_mesh((1, 1), ("data", "model")))
+    assert (g.row_axis, g.col_axis) == ("data", "model")
+    # explicit names always win
+    g = grid_from_mesh(make_mesh((1, 1), ("a", "b")), row_axis="b", col_axis="a")
+    assert (g.row_axis, g.col_axis) == ("b", "a")
+    with pytest.raises(ValueError, match="both"):
+        grid_from_mesh(make_mesh((1, 1), ("a", "b")), row_axis="a")
+    with pytest.raises(ValueError, match=">= 2 axes"):
+        grid_from_mesh(make_mesh_1d(1))
+
+
+def test_make_grid_validates():
+    g = make_grid((1, 1))
+    assert g.shape == (1, 1)
+    with pytest.raises(ValueError, match="positive"):
+        make_grid((0, 1))
+    import jax
+
+    with pytest.raises(ValueError, match="devices"):
+        make_grid((1, 2), devices=jax.devices()[:1])
+
+
+# ---------------------------------------------------------------------------
+# per-axis cost model
+# ---------------------------------------------------------------------------
+
+
+def test_available_kind_filter():
+    shard = backends.available(kind="shard_map")
+    assert "xla_auto" not in shard and "scatter" in shard
+    assert set(shard) | {"xla_auto"} == set(backends.available())
+    assert backends.available(kind="global") == ("xla_auto",)
+
+
+def test_cheapest_pair_is_per_axis_argmin():
+    m = 4 * 2**20
+    row, col = backends.cheapest_pair(m, 8, 2)
+    assert row == backends.cheapest(m, 8, names=backends.available(kind="shard_map"))
+    assert col == backends.cheapest(m, 2, names=backends.available(kind="shard_map"))
+    # global backends never selected per-axis, even when named
+    row, col = backends.cheapest_pair(m, 2, 2, names=("alltoall", "xla_auto"))
+    assert row == "alltoall" and col == "alltoall"
+
+
+def test_t_pencil_sums_per_axis_costs():
+    m, pr, pc = 2 * 2**20, 4, 2
+    prm = CommParams()
+    t = comm_model.t_pencil(m, pr, pc, "scatter", "bisection", prm, ndim=3)
+    expect = comm_model.t_scatter_ring(m, pr, prm) + comm_model.t_bisection(m, pc, prm)
+    assert abs(t - expect) < 1e-18
+    # fft2 runs two exchanges per sub-ring
+    t2 = comm_model.t_pencil(m, pr, pc, "scatter", "bisection", prm, ndim=2)
+    assert abs(t2 - 2 * expect) < 1e-18
+    # transpose_back adds one exchange per axis (3-D only)
+    tb = comm_model.t_pencil(m, pr, pc, "scatter", "bisection", prm, ndim=3, transpose_back=True)
+    assert abs(tb - 2 * expect) < 1e-18
+    with pytest.raises(ValueError, match="ndim 2 or 3"):
+        comm_model.t_pencil(m, pr, pc, "scatter", "scatter", ndim=1)
+
+
+def test_pencil_sub_axis_ring_sizes_separate_backends():
+    """The point of the extension: at the same total P, the per-axis
+    ranking differs between a long and a short sub-ring (the alpha/beta
+    regimes the paper separates by parcelport)."""
+    prm = CommParams(alpha_s=1.0, beta_bytes_s=1e12)  # alpha-dominated
+    m = 2**20
+    # alpha-dominated: message count decides -- alltoall (1) wins both
+    # axes; but a streaming backend's cost grows with the sub-ring size,
+    # so the *gap* is wider on the longer axis
+    s8 = backends.get("scatter").cost(m, 8, prm)
+    s2 = backends.get("scatter").cost(m, 2, prm)
+    assert s8 > s2  # sub-ring size reached the model
+    row, col = backends.cheapest_pair(m, 8, 2, prm)
+    assert row == "alltoall"
+
+
+# ---------------------------------------------------------------------------
+# plan-level decomp plumbing (1x1 grid executes on the single real device)
+# ---------------------------------------------------------------------------
+
+
+def test_pencil_plan_predict_decomposes_per_axis():
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    plan = plan_fft((8, 8, 8), mesh, ndim=3, decomp="pencil")
+    assert plan.decomp == "pencil" and plan.grid.shape == (1, 1)
+    pred = plan.predict()
+    rowc, colc = plan.predict_axes()
+    for r in rowc:
+        for c in colc:
+            assert pred[f"{r}+{c}"] == rowc[r] + colc[c]
+    # pair count = shard_map backends squared (all support P=1)
+    n = len(backends.available(kind="shard_map"))
+    assert len(pred) == n * n
+    assert plan.backend == f"{plan.backend_row}+{plan.backend_col}"
+
+
+def test_pencil_plan_executes_and_roundtrips_1x1():
+    import jax.numpy as jnp
+
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((8, 4, 4)) + 1j * rng.standard_normal((8, 4, 4))).astype(
+        np.complex64
+    )
+    plan = plan_fft((8, 4, 4), mesh, ndim=3, decomp="pencil", backend=("scatter", "bisection"))
+    assert (plan.backend_row, plan.backend_col) == ("scatter", "bisection")
+    y = np.asarray(plan.execute(jnp.asarray(x)))
+    ref = np.fft.fftn(x).transpose(2, 1, 0)
+    assert np.abs(y - ref).max() < 1e-4 * np.abs(ref).max()
+    z = np.asarray(plan.inverse(jnp.asarray(y)))
+    assert np.abs(z - x).max() < 1e-4
+    # executable caching applies to pencil plans too
+    plan.execute(jnp.asarray(x))
+    assert plan.compiles == 2  # forward + inverse wrappers only
+
+
+def test_pencil_fft2_natural_layout_1x1():
+    import jax.numpy as jnp
+
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal((8, 8)) + 1j * rng.standard_normal((8, 8))).astype(np.complex64)
+    plan = plan_fft((8, 8), mesh, ndim=2, decomp="pencil")
+    y = np.asarray(plan.execute(jnp.asarray(x)))
+    ref = np.fft.fft2(x)  # natural layout, NOT transposed like slab
+    assert np.abs(y - ref).max() < 1e-4 * np.abs(ref).max()
+
+
+def test_decomp_auto_picks_pencil_on_2d_mesh_slab_on_1d():
+    mesh2 = make_mesh((1, 1), ("rows", "cols"))
+    auto2 = plan_fft((8, 8, 8), mesh2, ndim=3, decomp="auto")
+    assert auto2.decomp == "pencil" and auto2.grid is not None
+    auto1 = plan_fft((8, 8), make_mesh_1d(1), decomp="auto")
+    assert auto1.decomp == "slab" and auto1.grid is None
+    # 1-D transforms are slab-only, even on a 2-D mesh
+    auto1d = plan_fft((4096,), mesh2, ndim=1, decomp="auto")
+    assert auto1d.decomp == "slab"
+
+
+def test_decomp_auto_steered_by_pinned_backend():
+    """A pinned backend that only works under one decomposition steers
+    auto instead of erroring (regression: whole-transform backends raised
+    under auto on a 2-D mesh even though slab handles them)."""
+    mesh2 = make_mesh((1, 1), ("rows", "cols"))
+    p = plan_fft((8, 8, 8), mesh2, ndim=3, decomp="auto", backend="xla_auto")
+    assert p.decomp == "slab" and p.backend == "xla_auto"
+    # the same steering through the measured planner
+    mp = plan_fft(
+        (8, 8, 8), mesh2, ndim=3, decomp="auto", backend="xla_auto",
+        planner="measure", timer=lambda plan: 1.0,
+    )
+    assert mp.decomp == "slab" and mp.measured == {"xla_auto": 1.0}
+    # a pinned pair steers toward pencil
+    p2 = plan_fft((8, 8, 8), mesh2, ndim=3, decomp="auto", backend=("scatter", "bisection"))
+    assert p2.decomp == "pencil" and p2.backend == "scatter+bisection"
+    # neither decomposition fits: the error reports both reasons
+    with pytest.raises(ValueError, match=r"neither decomposition.*pencil:.*slab:"):
+        plan_fft((8, 8), mesh2, decomp="auto", backend=("xla_auto", "xla_auto"))
+
+
+def test_decomp_validation_errors():
+    mesh2 = make_mesh((1, 1), ("rows", "cols"))
+    mesh1 = make_mesh_1d(1)
+    with pytest.raises(ValueError, match="decomp"):
+        plan_fft((8, 8), mesh2, decomp="brick")
+    with pytest.raises(ValueError, match="ndim 2 or 3"):
+        plan_fft((4096,), mesh2, ndim=1, decomp="pencil")
+    with pytest.raises(ValueError, match="slab scatter-only"):
+        plan_fft((8, 8), mesh2, decomp="pencil", fuse_dft=True, backend="scatter")
+    with pytest.raises(ValueError, match="natural layout"):
+        plan_fft((8, 8), mesh2, decomp="pencil", transpose_back=True)
+    with pytest.raises(ValueError, match=">= 2 axes"):
+        plan_fft((8, 8), mesh1, decomp="pencil")
+    with pytest.raises(ValueError, match="decomp='pencil'"):
+        plan_fft((8, 8), mesh2, decomp="slab", row_axis="rows", col_axis="cols")
+    with pytest.raises(ValueError, match="one backend name"):
+        plan_fft((8, 8), mesh1, backend="scatter+bisection")
+    with pytest.raises(ValueError, match="whole-transform"):
+        plan_fft((8, 8), mesh2, decomp="pencil", backend="xla_auto")
+    with pytest.raises(ValueError, match="registered backends"):
+        plan_fft((8, 8), mesh2, decomp="pencil", backend=("scatter", "lci"))
+    with pytest.raises(ValueError, match="2 entries"):
+        plan_fft((8, 8), mesh2, decomp="pencil", backend=("a", "b", "c"))
+
+
+def test_auto_does_not_swallow_axis_argument_errors():
+    """decomp='auto' falls back to slab on *infeasibility*, never on a
+    bad user argument (regression: row_axis without col_axis, or a
+    nonexistent axis name, silently produced a slab plan)."""
+    mesh2 = make_mesh((1, 1), ("rows", "cols"))
+    with pytest.raises(ValueError, match="both row_axis and col_axis"):
+        plan_fft((8, 8), mesh2, decomp="auto", row_axis="rows")
+    with pytest.raises(ValueError, match="not an axis"):
+        plan_fft((8, 8), mesh2, decomp="auto", row_axis="rows", col_axis="model")
+    # well-formed explicit axes still auto-resolve to pencil
+    p = plan_fft((8, 8), mesh2, decomp="auto", row_axis="cols", col_axis="rows")
+    assert p.decomp == "pencil" and p.grid.row_axis == "cols"
+
+
+def test_pencil_divisibility_errors_name_axis_and_grid_dim():
+    """The satellite contract: a bad shape fails naming the data axis
+    and grid dimension, not deep inside transpose chunking. (The duck-
+    typed grid stands in for the 2x4 mesh a 1-device host can't build;
+    the plan_fft-level path is exercised in tests/test_pencil.py.)"""
+    from repro.core.pencil import check_divisible
+
+    class FakeGrid:
+        p_rows, p_cols = 2, 4
+        row_axis, col_axis = "rows", "cols"
+
+    with pytest.raises(ValueError, match=r"axis -3 .*P_row=2"):
+        check_divisible((9, 8, 8), FakeGrid(), 3)
+    with pytest.raises(ValueError, match=r"axis -2 .*P_col=4"):
+        check_divisible((8, 9, 8), FakeGrid(), 3)
+    with pytest.raises(ValueError, match=r"axis -1 .*P_col=4"):
+        check_divisible((8, 8, 9), FakeGrid(), 3)
+    # D1 is re-sharded by BOTH exchanges: divisible by P_col but not P_row
+    class LopsidedGrid(FakeGrid):
+        p_rows, p_cols = 3, 4
+
+    with pytest.raises(ValueError, match=r"axis -2 .*P_row=3.*re-shards"):
+        check_divisible((9, 4, 8), LopsidedGrid(), 3)
+    with pytest.raises(ValueError, match=r"axis -2 .*P_row\*P_col=8"):
+        check_divisible((9, 8), FakeGrid(), 2)
+    with pytest.raises(ValueError, match="ndim 2 or 3"):
+        check_divisible((8, 8), FakeGrid(), 1)
+
+
+# ---------------------------------------------------------------------------
+# measured planner + wisdom with pencil key fields
+# ---------------------------------------------------------------------------
+
+
+def test_measured_pencil_plan_and_wisdom_roundtrip(tmp_path):
+    """Acceptance: wisdom round-trips the new key fields (decomp, grid
+    shape, per-axis backend pair)."""
+    import json
+
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    pairs = planner.candidate_pairs(1, 1)
+    assert all("+" in k for k in pairs)
+    table = {k: float(i + 2) for i, k in enumerate(pairs)}
+    table["scatter+bisection"] = 0.5
+    calls = []
+
+    def timer(plan):
+        calls.append(plan.backend)
+        return table[plan.backend]
+
+    p1 = plan_fft((8, 8, 8), mesh, ndim=3, decomp="pencil", planner="measure", timer=timer)
+    assert p1.backend == "scatter+bisection"
+    assert (p1.backend_row, p1.backend_col) == ("scatter", "bisection")
+    assert p1.measured == table and not p1.wisdom_hit
+    assert set(calls) == set(pairs)
+
+    # key carries the new fields
+    (key,) = json.loads(planner.export_wisdom())["entries"]
+    assert "decomp=pencil" in key and "grid=1x1" in key and "axes=rows+cols" in key
+
+    # wisdom hit: no re-measure, same pair
+    n = len(calls)
+    p2 = plan_fft((8, 8, 8), mesh, ndim=3, decomp="pencil", planner="measure", timer=timer)
+    assert p2.wisdom_hit and len(calls) == n
+    assert p2.backend == p1.backend and p2.measured == table
+
+    # disk round-trip restores the pencil entry
+    path = tmp_path / "wisdom.json"
+    planner.export_wisdom(str(path))
+    planner.forget_wisdom()
+    assert planner.import_wisdom(str(path)) == 1
+    p3 = plan_fft((8, 8, 8), mesh, ndim=3, decomp="pencil", planner="measure", timer=timer)
+    assert p3.wisdom_hit and p3.backend == p1.backend and len(calls) == n
+
+
+def test_slab_and_pencil_wisdom_never_alias():
+    """Same shape, same total P, different decomposition -> separate
+    wisdom entries (a slab winner says nothing about a pencil grid)."""
+    mesh2 = make_mesh((1, 1), ("rows", "cols"))
+    calls = []
+
+    def timer(plan):
+        calls.append(plan.backend)
+        return 1.0
+
+    plan_fft((8, 8, 8), mesh2, ndim=3, decomp="pencil", planner="measure", timer=timer)
+    n = len(calls)
+    slab = plan_fft((8, 8, 8), mesh2, ndim=3, decomp="slab", planner="measure", timer=timer)
+    assert not slab.wisdom_hit  # measured fresh, no aliasing
+    assert len(calls) > n
+    assert planner.wisdom_size() == 2
+
+
+def test_measured_pinned_pair_times_only_that_pair():
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    calls = []
+
+    def timer(plan):
+        calls.append(plan.backend)
+        return 1.0
+
+    plan = plan_fft(
+        (8, 8, 8),
+        mesh,
+        ndim=3,
+        decomp="pencil",
+        backend=("scatter", "bisection"),
+        planner="measure",
+        timer=timer,
+    )
+    assert plan.backend == "scatter+bisection"
+    assert calls == ["scatter+bisection"]
+
+
+def test_pencil_comm_bytes_accounts_both_axes():
+    mesh = make_mesh((1, 1), ("rows", "cols"))
+    plan = plan_fft((8, 8, 8), mesh, ndim=3, decomp="pencil")
+    assert plan.comm_bytes() == 0.0  # 1x1 grid: nothing crosses a fabric
+    assert plan.local_bytes() == 8 * 8 * 8 * 8  # c64 itemsize, 1 shard
