@@ -1,0 +1,78 @@
+"""c2c-vs-r2c sweep -- the wire-byte-halving trajectory rows.
+
+For each device count, runs the measured planner for the complex
+transform and for the real (Hermitian-truncated) transform on the same
+logical 2-D problem. Each row carries the measured median and the
+alpha-beta model prediction per backend, plus the model's per-device
+exchange bytes (``Plan.comm_bytes``) and -- for the picked backend --
+the compiled HLO's parsed collective bytes, so the "r2c moves ~half the
+bytes" claim is visible as data at every P.
+
+``run_json()`` returns machine-readable rows (merged into
+``BENCH_fft.json`` by ``benchmarks/run.py --json``); ``to_csv()``
+renders the harness's ``name,us_per_call,derived`` format.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import json
+from repro.core import comm_model, plan_fft, planner
+
+from repro.core.compat import make_mesh
+
+n, p = __N__, __P__
+mesh = make_mesh((p,), ("model",))
+dev = planner.device_kind(mesh)
+for real in (False, True):
+    plan = plan_fft((n, n), mesh, real=real, planner="measure")
+    pred = plan.predict()
+    hlo_bytes = comm_model.parse_collectives(
+        plan.lower().compile().as_text(), default_group=p
+    ).total_bytes
+    for name in sorted(plan.measured):
+        row = {"bench": "real", "n": n, "p": p,
+               "transform": "r2c" if real else "c2c", "backend": name,
+               "measured_us": round(plan.measured[name] * 1e6, 1),
+               "model_us": round(pred[name] * 1e6, 2),
+               "model_bytes": plan.comm_bytes(),
+               "picked": plan.backend, "device_kind": dev}
+        if name == plan.backend:
+            row["hlo_bytes"] = hlo_bytes
+        print("ROW " + json.dumps(row))
+"""
+
+
+def run_json(n: int = 256, device_counts: Iterable[int] = (2, 4, 8)) -> List[dict]:
+    """Measured + model rows per backend per device count, c2c and r2c."""
+    rows: List[dict] = []
+    for p in device_counts:
+        out = run_devices_subprocess(
+            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        )
+        for line in out.splitlines():
+            if line.startswith("ROW "):
+                rows.append(json.loads(line[4:]))
+    return rows
+
+
+def to_csv(rows: List[dict]) -> List[str]:
+    return [
+        f"real_sweep/{r['transform']}/{r['backend']}/p{r['p']},{r['measured_us']},"
+        f"model_us={r['model_us']};model_bytes={r['model_bytes']:.0f};"
+        f"picked={r['picked']}"
+        for r in rows
+    ]
+
+
+def run(n: int = 256) -> List[str]:
+    return to_csv(run_json(n))
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

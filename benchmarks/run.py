@@ -5,31 +5,47 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig45_strong/*   FFT strong scaling per strategy + reference (Figs. 4-5)
   fft_measure/*    measured planner vs alpha-beta model per backend
   pencil_sweep/*   slab vs pencil decomposition per grid shape
+  real_sweep/*     c2c vs r2c (Hermitian payload) per backend per P
   moe_dispatch/*   paper technique on the LM stack (MoE a2a strategies)
   local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only fig3,fig45,moe,kernel,fft,pencil]
-     [--json BENCH_fft.json]
+Run: PYTHONPATH=src python -m benchmarks.run
+         [--only fig3,fig45,moe,kernel,fft,pencil,real]
+     [--json BENCH_fft.json] [--force]
 
-``--json PATH`` additionally writes the fft_measure + pencil_sweep rows
-(measured + model-predicted per backend / per grid shape) as
-machine-readable JSON -- the perf trajectory artifact CI uploads.
+``--json PATH`` additionally writes the fft_measure + pencil_sweep +
+real_sweep rows (measured + model-predicted per backend / per grid
+shape / per transform kind) as machine-readable JSON -- the perf
+trajectory artifact CI uploads. Sections that did not run in this
+invocation keep their rows from an existing file at PATH (a partial run
+merges instead of clobbering the committed baseline); ``--force``
+overwrites the file with only this run's sections.
 """
 
 import argparse
 import json
+import os
 import sys
+
+BENCH_SCHEMA = 2
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft,pencil")
+    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft,pencil,real")
     ap.add_argument(
         "--json",
         default=None,
         metavar="PATH",
-        help="write fft_measure rows (+ pencil_sweep rows when that "
-        "section is selected) as JSON; implies the fft section only",
+        help="write fft_measure rows (+ pencil_sweep/real_sweep rows when "
+        "those sections are selected) as JSON, merging into an existing "
+        "file; implies the fft section",
+    )
+    ap.add_argument(
+        "--force",
+        action="store_true",
+        help="with --json: overwrite PATH instead of merging this run's "
+        "sections into its existing rows",
     )
     args = ap.parse_args()
     wanted = set(args.only.split(","))
@@ -65,15 +81,46 @@ def main() -> None:
         jrows += prows
         rows += pencil_sweep.to_csv(prows)
         _flush(rows)
+    if "real" in wanted:
+        from benchmarks import real_sweep
+
+        rrows = real_sweep.run_json()
+        jrows += rrows
+        rows += real_sweep.to_csv(rrows)
+        _flush(rows)
     if args.json:
+        merged = _merge_json(args.json, jrows, force=args.force)
         with open(args.json, "w") as f:
-            json.dump({"schema": 2, "rows": jrows}, f, indent=2)
-        print(f"# wrote {len(jrows)} rows to {args.json}", file=sys.stderr)
+            json.dump({"schema": BENCH_SCHEMA, "rows": merged}, f, indent=2)
+        print(
+            f"# wrote {len(merged)} rows to {args.json} "
+            f"({len(jrows)} from this run)",
+            file=sys.stderr,
+        )
     if "moe" in wanted:
         from benchmarks import moe_dispatch
 
         rows += moe_dispatch.run()
         _flush(rows)
+
+
+def _merge_json(path: str, new_rows, *, force: bool = False):
+    """Merge this run's rows into an existing BENCH json: sections (the
+    ``bench`` key) produced now replace their old rows; sections that did
+    not run survive -- so a partial ``--only`` run cannot clobber the
+    committed multi-section baseline. ``force`` skips the read."""
+    if force or not os.path.exists(path):
+        return list(new_rows)
+    try:
+        with open(path) as f:
+            old = json.load(f)
+        old_rows = old.get("rows", []) if isinstance(old, dict) else []
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# --json: could not merge existing {path} ({e}); overwriting", file=sys.stderr)
+        return list(new_rows)
+    ran = {r.get("bench") for r in new_rows}
+    kept = [r for r in old_rows if isinstance(r, dict) and r.get("bench") not in ran]
+    return kept + list(new_rows)
 
 
 _printed = 0

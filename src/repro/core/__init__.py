@@ -19,17 +19,30 @@ from repro.core.overlap import (
 )
 from repro.core.comm_model import CommParams
 from repro.core.pencil import PencilConfig, pencil_fft2, pencil_fft3
-from repro.core.plan import FFTPlan, Plan, make_plan, plan_fft
+from repro.core.plan import FFTPlan, Plan, SpectralAxis, make_plan, plan_fft
 from repro.core.planner import export_wisdom, forget_wisdom, import_wisdom, wisdom_size
+from repro.core.real import (
+    irfft2,
+    irfft3,
+    pencil_irfft2,
+    pencil_irfft3,
+    pencil_rfft2,
+    pencil_rfft3,
+    rfft2,
+    rfft3,
+    rfft_len,
+)
 from repro.core.transpose import distributed_transpose
 
 __all__ = [
     "CollectiveBackend", "CommParams", "FFTConfig", "FFTPlan", "MAX_DFT",
-    "PencilConfig", "Plan", "ProcessGrid", "auto_grid_shape", "backends",
-    "collective_matmul_ag", "dft_matrix", "distributed_transpose",
+    "PencilConfig", "Plan", "ProcessGrid", "SpectralAxis", "auto_grid_shape",
+    "backends", "collective_matmul_ag", "dft_matrix", "distributed_transpose",
     "export_wisdom", "fft1d_large", "fft2", "fft3", "fft_matmul",
     "forget_wisdom", "grid_from_mesh", "grid_shapes", "ifft2", "import_wisdom",
-    "local_fft", "local_fft2", "make_grid", "make_plan", "pencil_fft2",
-    "pencil_fft3", "plan_fft", "reference_fft2", "ring_all_gather",
-    "ring_reduce_scatter", "ring_scatter_reduce", "wisdom_size",
+    "irfft2", "irfft3", "local_fft", "local_fft2", "make_grid", "make_plan",
+    "pencil_fft2", "pencil_fft3", "pencil_irfft2", "pencil_irfft3",
+    "pencil_rfft2", "pencil_rfft3", "plan_fft", "reference_fft2", "rfft2",
+    "rfft3", "rfft_len", "ring_all_gather", "ring_reduce_scatter",
+    "ring_scatter_reduce", "wisdom_size",
 ]

@@ -234,14 +234,26 @@ def t_pencil_axis(
     n_exchanges: int,
     prm: CommParams = CommParams(),
     chunk_compute_s: float = 0.0,
+    *,
+    first_m_bytes: Optional[float] = None,
 ) -> float:
     """Predicted seconds of all of one grid axis's sub-exchanges: the
     axis's backend costed at the axis's own sub-ring size. The single
     per-axis formula shared by :func:`t_pencil` and
-    ``Plan.predict_axes`` -- the model and the plan cannot drift."""
+    ``Plan.predict_axes`` -- the model and the plan cannot drift.
+
+    ``first_m_bytes`` sizes the axis's *first* exchange separately --
+    the real pencil rfft2's first cols exchange ships the untransformed
+    real block while every later exchange carries the Hermitian-truncated
+    complex payload (see :mod:`repro.core.real`)."""
     from repro.core import backends  # late: backends imports this module
 
-    return n_exchanges * backends.get(backend).cost(m_bytes, p_axis, prm, chunk_compute_s)
+    b = backends.get(backend)
+    if first_m_bytes is None:
+        return n_exchanges * b.cost(m_bytes, p_axis, prm, chunk_compute_s)
+    return b.cost(first_m_bytes, p_axis, prm, chunk_compute_s) + (
+        (n_exchanges - 1) * b.cost(m_bytes, p_axis, prm, chunk_compute_s)
+    )
 
 
 def t_pencil(
@@ -255,6 +267,7 @@ def t_pencil(
     ndim: int = 3,
     transpose_back: bool = False,
     chunk_compute_s: float = 0.0,
+    first_col_m_bytes: Optional[float] = None,
 ) -> float:
     """Predicted seconds of one pencil transform's communication: each
     sub-axis exchange costed by its *own* backend at its *own* sub-ring
@@ -263,10 +276,18 @@ def t_pencil(
     sub-exchange re-shards the whole block over one grid axis, so the
     per-axis cost is ``backend.cost(m_bytes, p_axis)`` and the axes sum
     (the exchanges are sequentialized by the FFT passes between them).
+
+    For real (Hermitian-truncated) transforms pass the half-spectrum
+    block as ``m_bytes``; ``first_col_m_bytes`` sizes the rfft2 pencil
+    path's first cols exchange, which still ships the full-width real
+    block (the r2c pass needs the axis local first).
     """
     n_row, n_col = pencil_exchanges(ndim, transpose_back)
     return t_pencil_axis(m_bytes, p_rows, backend_row, n_row, prm, chunk_compute_s) + (
-        t_pencil_axis(m_bytes, p_cols, backend_col, n_col, prm, chunk_compute_s)
+        t_pencil_axis(
+            m_bytes, p_cols, backend_col, n_col, prm, chunk_compute_s,
+            first_m_bytes=first_col_m_bytes,
+        )
     )
 
 

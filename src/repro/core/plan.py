@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,9 +52,45 @@ _EXCHANGES = {1: 3, 2: 1, 3: 2}  # slab pencil-exchanges per forward transform
 #: registry names are identifiers, so '+' cannot appear inside one.
 PAIR_SEP = "+"
 
+_DTYPE_PARTNERS = {
+    "float32": "complex64", "complex64": "float32",
+    "float64": "complex128", "complex128": "float64",
+}
+
+
+def real_complex_pair(dtype) -> Tuple[jnp.dtype, jnp.dtype]:
+    """The (real, complex) dtype pair containing ``dtype`` -- the single
+    copy of the r2c dtype mapping (plan validation and byte accounting
+    must agree on it). Raises for dtypes with no real/complex partner."""
+    d = jnp.dtype(dtype)
+    partner = _DTYPE_PARTNERS.get(d.name)
+    if partner is None:
+        raise ValueError(
+            f"no real/complex dtype pair for {d.name}; real plans support "
+            f"{sorted(n for n in _DTYPE_PARTNERS if not n.startswith('c'))}"
+        )
+    return (jnp.dtype(partner), d) if d.kind == "c" else (d, jnp.dtype(partner))
+
 
 def pair_key(backend_row: str, backend_col: str) -> str:
     return f"{backend_row}{PAIR_SEP}{backend_col}"
+
+
+class SpectralAxis(NamedTuple):
+    """One output axis of a plan's frequency-domain (spectrum) layout.
+
+    ``orig`` is the original data axis it carries (negative index into
+    the trailing transform dims), ``n`` that axis's real/complex global
+    length, ``n_out`` the length in the spectrum layout (``rfft_len(n)``
+    or its shard-padded version for the Hermitian axis of a real plan,
+    ``n`` otherwise), and ``half`` whether the axis is
+    Hermitian-truncated. The apps layer builds wavenumber grids from
+    this -- see :func:`repro.apps.spectral.wavenumbers`."""
+
+    orig: int
+    n: int
+    n_out: int
+    half: bool
 
 
 def split_pair(key) -> Tuple[str, str]:
@@ -107,6 +143,8 @@ class Plan:
         decomp: str = "slab",
         row_axis: Optional[str] = None,
         col_axis: Optional[str] = None,
+        real: bool = False,
+        pad: bool = True,
     ):
         from repro.core.sharding import fft_axis
 
@@ -116,6 +154,15 @@ class Plan:
             raise ValueError(f"direction must be 'forward' or 'inverse', got {direction!r}")
         if decomp not in ("slab", "pencil", "auto"):
             raise ValueError(f"decomp must be 'slab', 'pencil' or 'auto', got {decomp!r}")
+        if real and ndim == 1:
+            raise NotImplementedError(
+                "1-D real transform is not implemented: complexify and use ndim=1 c2c"
+            )
+        if real and fuse_dft:
+            raise ValueError(
+                "fuse_dft folds a c2c DFT into the scatter ring; real plans "
+                "have no fused path -- use real=False or fuse_dft=False"
+            )
         if ndim == 1 and direction == "inverse":
             # fail at plan time, not first execute (validate-once contract)
             raise NotImplementedError(
@@ -128,7 +175,24 @@ class Plan:
         self.axis_name = axis_name or fft_axis(mesh)
         self.ndim = ndim
         self.direction = direction
+        self.real = bool(real)
+        self.pad = bool(pad)
         self.dtype = jnp.dtype(dtype)
+        if self.real:
+            # a real plan's dtype is the REAL input dtype; the matching
+            # complex dtype (the spectrum side) is derived. Passing the
+            # complex default through plan_fft maps to its real partner.
+            try:
+                self.dtype, self.cdtype = real_complex_pair(self.dtype)
+            except ValueError:
+                raise ValueError(
+                    f"real plans take a real input dtype (float32/float64), "
+                    f"got {self.dtype.name}"
+                ) from None
+        else:
+            self.cdtype = self.dtype
+        self.hermitian_len: Optional[int] = None
+        self.padded_hermitian_len: Optional[int] = None
         self.local_impl = local_impl
         self.fuse_dft = fuse_dft
         self.transpose_back = transpose_back
@@ -191,6 +255,7 @@ class Plan:
                         backend=backend, axis_name=trial_ax, local_impl=local_impl,
                         fuse_dft=fuse_dft, transpose_back=transpose_back, dtype=dtype,
                         params=params, chunk_compute_s=chunk_compute_s, decomp="slab",
+                        real=real, pad=pad,
                     )
                 except (ValueError, NotImplementedError):
                     trial = None
@@ -220,7 +285,13 @@ class Plan:
     def _init_slab(self, backend: str) -> None:
         p = self.shards
         shape, ax = self.global_shape, self.axis_name
-        if self.ndim == 2:
+        if self.real:
+            from repro.core import real as _real
+
+            self.hermitian_len, self.padded_hermitian_len = _real.check_divisible_slab(
+                shape, p, self.ndim, ax, pad=self.pad
+            )
+        elif self.ndim == 2:
             r, c = shape[-2:]
             for off, size in ((2, r), (1, c)):
                 if size % p:
@@ -255,7 +326,7 @@ class Plan:
             )
         if backend == "auto":
             backend = "scatter" if self.fuse_dft else backends.cheapest(
-                self.local_bytes(), p, self.params, chunk_compute_s=self.chunk_compute_s
+                self._cost_bytes(), p, self.params, chunk_compute_s=self.chunk_compute_s
             )
         self.backend_obj = backends.get(backend)  # raises listing the registry
         self.backend = backend
@@ -286,11 +357,18 @@ class Plan:
                 "transpose_back applies to slab plans and pencil fft3 only"
             )
         self.grid = _grid.grid_from_mesh(self.mesh, row_axis, col_axis)
-        _pencil.check_divisible(self.global_shape, self.grid, self.ndim)
+        if self.real:
+            from repro.core import real as _real
+
+            self.hermitian_len, self.padded_hermitian_len = _real.check_divisible_pencil(
+                self.global_shape, self.grid, self.ndim, pad=self.pad
+            )
+        else:
+            _pencil.check_divisible(self.global_shape, self.grid, self.ndim)
 
         if backend == "auto":
             br, bc = backends.cheapest_pair(
-                self.local_bytes(),
+                self._cost_bytes(),
                 self.grid.p_rows,
                 self.grid.p_cols,
                 self.params,
@@ -317,22 +395,50 @@ class Plan:
         return self.mesh.shape[self.axis_name]
 
     def local_bytes(self, dtype=None) -> float:
-        """Bytes of one device's local block of the input."""
-        itemsize = jnp.dtype(dtype or self.dtype).itemsize
+        """Bytes of one device's local block of the input (the real
+        block, for a real plan)."""
+        itemsize = self._dtype_pair(dtype)[0].itemsize if self.real else jnp.dtype(
+            dtype or self.dtype
+        ).itemsize
         return float(np.prod(self.global_shape)) * itemsize / self.shards
+
+    def _dtype_pair(self, dtype=None) -> Tuple[jnp.dtype, jnp.dtype]:
+        """(real, complex) dtype pair for a byte query: either side of
+        the pair may be passed; None means the plan's own."""
+        if dtype is None:
+            return self.dtype, self.cdtype
+        return real_complex_pair(dtype)
+
+    def _cost_bytes(self, dtype=None) -> float:
+        """Per-device block bytes the exchanges actually move -- the
+        input block for c2c plans, the Hermitian-truncated (shard-padded)
+        complex block for real plans. This is what feeds the alpha-beta
+        costs and ``backend='auto'``."""
+        if not self.real:
+            return self.local_bytes(dtype)
+        citem = self._dtype_pair(dtype)[1].itemsize
+        elems = float(np.prod(self.global_shape[:-1])) * self.padded_hermitian_len
+        return elems * citem / self.shards
 
     def comm_bytes(self, dtype=None) -> float:
         """Total bytes each device ships over the fabric per transform,
         summed over every exchange -- each exchange re-shards the local
         block over its ring (P for slab, P_row/P_col per sub-exchange
         for pencil), shipping (1-1/P_ring) of it. Same units under both
-        decompositions, so slab-vs-pencil comparisons are direct."""
-        m = self.local_bytes(dtype)
+        decompositions, so slab-vs-pencil comparisons are direct.
+
+        Real plans count the Hermitian payload: every complex exchange
+        moves the truncated ``Hp`` block (~half the c2c bytes at the
+        same shape); the pencil rfft2's first cols exchange moves the
+        full-width block at the *real* dtype (also half). The c2r
+        inverse mirrors the chain, so the total is direction-agnostic."""
         if self.decomp == "pencil":
-            n_row, n_col = self._pencil_exchanges()
+            row, col = self._pencil_blocks(dtype)
             pr, pc = self.grid.p_rows, self.grid.p_cols
-            return m * (n_row * (1 - 1 / pr) + n_col * (1 - 1 / pc))
-        return m * self._slab_exchanges() * (1 - 1 / self.shards)
+            return sum(b * (1 - 1 / pr) for b in row) + (
+                sum(b * (1 - 1 / pc) for b in col)
+            )
+        return self._cost_bytes(dtype) * self._slab_exchanges() * (1 - 1 / self.shards)
 
     # -- cost model ------------------------------------------------------------
     def _slab_exchanges(self) -> int:
@@ -340,6 +446,22 @@ class Plan:
 
     def _pencil_exchanges(self) -> Tuple[int, int]:
         return cm.pencil_exchanges(self.ndim, self.transpose_back)
+
+    def _pencil_blocks(self, dtype=None) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+        """(row_blocks, col_blocks): per-exchange shipped block bytes of
+        one pencil transform -- THE single copy of the exchange schedule
+        that :meth:`comm_bytes` and :meth:`predict_axes` both consume,
+        so the byte accounting and the cost model cannot drift. All
+        blocks are the (real: Hermitian-truncated) local block, except
+        the real rfft2's first cols exchange, which ships the full-width
+        block at the real dtype (the r2c pass needs the axis local
+        first)."""
+        n_row, n_col = self._pencil_exchanges()
+        m = self._cost_bytes(dtype)
+        row, col = [m] * n_row, [m] * n_col
+        if self.real and self.ndim == 2:
+            col[0] = self.local_bytes(dtype)
+        return tuple(row), tuple(col)
 
     def predict(self, dtype=None, chunk_compute_s: Optional[float] = None) -> Dict[str, float]:
         """Alpha-beta predicted seconds per backend for this problem.
@@ -363,7 +485,7 @@ class Plan:
                 for r in row_costs
                 for c in col_costs
             }
-        m = self.local_bytes(dtype)
+        m = self._cost_bytes(dtype)
         cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
         p = self.shards
         n_ex = self._slab_exchanges()
@@ -383,13 +505,21 @@ class Plan:
         row_costs[r] + col_costs[c]`` by construction."""
         if self.decomp != "pencil":
             raise ValueError("predict_axes is a pencil-plan method; use predict()")
-        m = self.local_bytes(dtype)
         cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
-        n_row, n_col = self._pencil_exchanges()
+        row_blocks, col_blocks = self._pencil_blocks(dtype)
         out = []
-        for p_axis, n_ex in ((self.grid.p_rows, n_row), (self.grid.p_cols, n_col)):
+        for p_axis, blocks in (
+            (self.grid.p_rows, row_blocks),
+            (self.grid.p_cols, col_blocks),
+        ):
+            # _pencil_blocks is [first?, m, m, ...]: everything after the
+            # first block is uniform, which is exactly t_pencil_axis's shape
+            first = blocks[0] if blocks[0] != blocks[-1] else None
             out.append({
-                name: cm.t_pencil_axis(m, p_axis, name, n_ex, self.params, cc)
+                name: cm.t_pencil_axis(
+                    blocks[-1], p_axis, name, len(blocks), self.params, cc,
+                    first_m_bytes=first,
+                )
                 for name in backends.supporting(p_axis, kind="shard_map")
             })
         return out[0], out[1]
@@ -401,6 +531,43 @@ class Plan:
         output is fftn reversed, sharded (cols, rows))."""
         return self.decomp == "pencil" and self.ndim == 3 and not self.transpose_back
 
+    def _spectrum_side(self, opposite: bool) -> bool:
+        """Real plans only: whether the (possibly opposite) direction's
+        input is the half spectrum (the c2r side) rather than the real
+        array."""
+        return (self.direction == "inverse") != opposite
+
+    def spectral_axes(self) -> Tuple[SpectralAxis, ...]:
+        """The plan's frequency-domain layout: one :class:`SpectralAxis`
+        per trailing output dim of the forward transform (equivalently,
+        per trailing input dim of the inverse), in output order. Works
+        for c2c and real plans -- the apps layer keys off it."""
+        nd = self.ndim
+        dims = self.global_shape[-nd:]
+        natural = list(range(-nd, 0))
+        if self.decomp == "pencil":
+            order = natural if (nd == 2 or self.transpose_back) else natural[::-1]
+        else:
+            order = [-1, -2] if (nd == 2 and not self.transpose_back) else natural
+        # output dims the decomposition keeps sharded: the Hermitian axis
+        # must stay padded there (trimming would break divisibility)
+        sharded = {0, 1} if self.decomp == "pencil" else ({0} if nd > 1 else set())
+        axes = []
+        for pos, orig in enumerate(order):
+            n = dims[orig]
+            half = self.real and orig == -1
+            if half:
+                n_out = self.padded_hermitian_len if pos in sharded else self.hermitian_len
+            else:
+                n_out = n
+            axes.append(SpectralAxis(orig, n, n_out, half))
+        return tuple(axes)
+
+    def spectrum_shape(self) -> Tuple[int, ...]:
+        """Global shape of the frequency-domain array (forward output /
+        inverse input), batch dims included."""
+        return self.global_shape[: -self.ndim] + tuple(a.n_out for a in self.spectral_axes())
+
     def input_sharding(self, opposite: bool = False) -> NamedSharding:
         """Sharding of the planned direction's input; ``opposite=True``
         gives the opposite direction's input (differs only when that
@@ -411,7 +578,11 @@ class Plan:
             # shard the two leading transform dims over the grid; the
             # reversed layout arrives sharded (cols, rows)
             row, col = self.grid.row_axis, self.grid.col_axis
-            if opposite and self._opposite_reverses_layout():
+            if self.real:
+                reversed_spectrum = self.ndim == 3 and not self.transpose_back
+                if self._spectrum_side(opposite) and reversed_spectrum:
+                    row, col = col, row
+            elif opposite and self._opposite_reverses_layout():
                 row, col = col, row
             spec[nd - self.ndim] = row
             spec[nd - self.ndim + 1] = col
@@ -421,6 +592,13 @@ class Plan:
 
     def input_spec(self, dtype=None, opposite: bool = False) -> jax.ShapeDtypeStruct:
         shape = self.global_shape
+        if self.real:
+            if self._spectrum_side(opposite):
+                shape = self.spectrum_shape()
+                dt = dtype or self.cdtype
+            else:
+                dt = dtype or self.dtype
+            return jax.ShapeDtypeStruct(shape, dt, sharding=self.input_sharding(opposite))
         if opposite and self._opposite_reverses_layout():
             shape = shape[:-3] + tuple(reversed(shape[-3:]))
         return jax.ShapeDtypeStruct(
@@ -429,6 +607,29 @@ class Plan:
 
     # -- execution -------------------------------------------------------------
     def _fn(self, inverse: bool):
+        if self.real:
+            from repro.core import real as _real
+
+            n_last, pad = self.global_shape[-1], self.pad
+            if self.decomp == "pencil":
+                cfg, grid = self._cfg, self.grid
+                # no grid-role swap here: each irfft consumes exactly the
+                # layout its rfft produces (explicit reverse chain)
+                if self.ndim == 2:
+                    if inverse:
+                        return lambda x: _real.pencil_irfft2(x, grid, cfg, n_last, pad=pad)
+                    return lambda x: _real.pencil_rfft2(x, grid, cfg, pad=pad)
+                if inverse:
+                    return lambda x: _real.pencil_irfft3(x, grid, cfg, n_last, pad=pad)
+                return lambda x: _real.pencil_rfft3(x, grid, cfg, pad=pad)
+            mesh, ax, cfg = self.mesh, self.axis_name, self._cfg
+            if self.ndim == 2:
+                if inverse:
+                    return lambda x: _real.irfft2(x, mesh, ax, cfg, n_last, pad=pad)
+                return lambda x: _real.rfft2(x, mesh, ax, cfg, pad=pad)
+            if inverse:
+                return lambda x: _real.irfft3(x, mesh, ax, cfg, n_last, pad=pad)
+            return lambda x: _real.rfft3(x, mesh, ax, cfg, pad=pad)
         if self.decomp == "pencil":
             from repro.core import pencil as _pencil
             from repro.core.grid import ProcessGrid
@@ -498,9 +699,11 @@ class Plan:
         reversed-axes pencil output where applicable)."""
         inv = (self.direction == "inverse") if inverse is None else inverse
         opposite = inv != (self.direction == "inverse")
-        return self._executable(inv, dtype or self.dtype).lower(
-            self.input_spec(dtype, opposite=opposite)
-        )
+        spec = self.input_spec(dtype, opposite=opposite)
+        # key the cache with the direction's ACTUAL input dtype (a real
+        # plan's c2r side consumes the complex spectrum, not self.dtype),
+        # so a later execute/inverse reuses this wrapper
+        return self._executable(inv, spec.dtype).lower(spec)
 
     def roofline(self, inverse: Optional[bool] = None) -> cm.Roofline:
         """Compile abstractly and derive the three roofline terms from
@@ -522,8 +725,9 @@ class Plan:
             if self.decomp == "pencil"
             else f"P={self.shards}"
         )
+        kind = "r2c" if self.real else "c2c"
         return (
-            f"Plan(shape={self.global_shape}, ndim={self.ndim}, "
+            f"Plan({kind}, shape={self.global_shape}, ndim={self.ndim}, "
             f"decomp={self.decomp!r}, {where}, "
             f"backend={self.backend!r}, direction={self.direction!r}, "
             f"dtype={self.dtype.name})"
@@ -550,8 +754,23 @@ def plan_fft(
     decomp: str = "slab",
     row_axis: Optional[str] = None,
     col_axis: Optional[str] = None,
+    real: bool = False,
+    pad: bool = True,
 ) -> Plan:
     """Plan a distributed FFT (the FFTW ``plan`` analogue).
+
+    ``real=True`` plans the r2c/c2r pair (:mod:`repro.core.real`):
+    ``execute`` computes the distributed ``rfftn`` of a real array (and
+    ``inverse`` the matching ``irfftn``; ``direction="inverse"`` swaps
+    the two), every exchange after the local r2c pass shipping only the
+    Hermitian-truncated ``N//2+1`` payload -- ~half the c2c wire bytes
+    at the same shape. ``dtype`` is then the real input dtype
+    (float32/float64; the complex default maps to its real partner).
+    The ``N//2+1`` axis rarely divides the shard count: ``pad=True``
+    (default) zero-pads it to the next divisible length (recorded as
+    ``Plan.padded_hermitian_len``, trimmed wherever the axis lands
+    local -- see the module docs for the per-layout contract);
+    ``pad=False`` raises at plan time naming the offending axis.
 
     ``decomp`` picks the process decomposition:
 
@@ -623,6 +842,8 @@ def plan_fft(
             decomp=decomp,
             row_axis=row_axis,
             col_axis=col_axis,
+            real=real,
+            pad=pad,
         )
     return Plan(
         global_shape,
@@ -640,6 +861,8 @@ def plan_fft(
         decomp=decomp,
         row_axis=row_axis,
         col_axis=col_axis,
+        real=real,
+        pad=pad,
     )
 
 

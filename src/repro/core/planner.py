@@ -60,15 +60,16 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def default_timer(warmup: int = 1, iters: int = 5) -> Callable:
     """``timer(plan) -> seconds``: run the plan's cached executable on a
-    zeros input laid out with the plan's own input sharding."""
+    zeros input with the plan's own input layout (``Plan.input_spec``
+    carries the shape/dtype/sharding, so real c2r plans -- whose input
+    is the half spectrum, not ``global_shape`` -- time correctly)."""
 
     def timer(plan) -> float:
         import jax
         import jax.numpy as jnp
 
-        x = jax.device_put(
-            jnp.zeros(plan.global_shape, plan.dtype), plan.input_sharding()
-        )
+        spec = plan.input_spec()
+        x = jax.device_put(jnp.zeros(spec.shape, spec.dtype), spec.sharding)
         return time_fn(plan.execute, x, warmup=warmup, iters=iters)
 
     return timer
@@ -195,6 +196,8 @@ def plan_measured(
     decomp: str = "slab",
     row_axis: Optional[str] = None,
     col_axis: Optional[str] = None,
+    real: bool = False,
+    pad: bool = True,
 ):
     """FFTW_MEASURE: time every candidate backend on the real mesh, pin
     the plan to the measured argmin, and remember the answer as wisdom.
@@ -212,7 +215,8 @@ def plan_measured(
 
     from repro.core.plan import Plan, pair_key, split_pair
 
-    dtype = jnp.complex64 if dtype is None else dtype
+    if dtype is None:
+        dtype = jnp.float32 if real else jnp.complex64
 
     def build(name: str) -> Plan:
         return Plan(
@@ -231,6 +235,8 @@ def plan_measured(
             decomp=decomp,
             row_axis=row_axis,
             col_axis=col_axis,
+            real=real,
+            pad=pad,
         )
 
     from repro.core.sharding import fft_axis
@@ -267,7 +273,7 @@ def plan_measured(
     key = wisdom_key(
         tuple(global_shape),
         ndim,
-        jnp.dtype(dtype).name,
+        probe.dtype.name,  # the resolved dtype (real plans: the real side)
         p,
         tuple(names),
         device_kind(mesh),
@@ -275,6 +281,12 @@ def plan_measured(
             f"mesh={'x'.join(f'{k}{v}' for k, v in mesh.shape.items())},"
             f"{placement},dir={direction},impl={local_impl},"
             f"fuse={int(fuse_dft)},tb={int(transpose_back)}"
+            # r2c winners must never alias c2c ones (nor padded vs
+            # strict); c2c keys stay byte-identical to the pre-real
+            # format -- pad is a no-op there, and appending it would
+            # both re-measure on a spurious pad= argument and orphan
+            # every previously exported c2c wisdom entry
+            + (f",real=1,pad={int(pad)}" if real else "")
         ),
     )
     if use_wisdom and key in _WISDOM:

@@ -1,0 +1,612 @@
+"""Distributed real-to-complex FFTs (rfftn / irfftn) over the backend
+registry -- half the wire bytes for real-input workloads.
+
+The paper's FFTW3+MPI reference is what scientific users drive with
+*real* data: an r2c transform keeps only the Hermitian-non-redundant
+half of the last axis (``H = N//2 + 1`` complex values instead of ``N``),
+so every pencil exchange after the first local pass ships ~half the
+bytes of the complex-to-complex path. The structure mirrors
+:mod:`repro.core.distributed_fft` / :mod:`repro.core.pencil`:
+
+- the r2c pass runs **locally on the contiguous last axis** (it is the
+  only pass whose input is real);
+- every remaining pass is an ordinary c2c FFT fed through the same
+  strategy-switched :func:`repro.core.transpose.distributed_transpose`,
+  so the whole parcelport axis (backend registry, per-axis pencil
+  backends, measured planner) applies unchanged -- just on the truncated
+  payload;
+- c2r mirrors the chain in reverse and restores the real layout.
+
+**The N//2+1 divisibility problem.** ``H`` is almost never divisible by
+the shard count (it is odd whenever ``N`` is even), so the Hermitian
+axis cannot be re-sharded as-is. With ``pad=True`` (default) the half
+spectrum is zero-padded to the next divisible length ``Hp`` before the
+exchange and the pad is trimmed wherever the axis ends up local again
+(the plan records ``hermitian_len``/``padded_hermitian_len``); the
+padded tail is exactly zero (FFTs of zeros), so layouts that keep it
+are still numerically exact. With ``pad=False`` a non-divisible ``H``
+raises a plan-time ``ValueError`` naming the offending data axis and
+mesh/grid dimension, in the same style as the c2c validators.
+
+Spectrum layouts (global values; ``H``/``Hp`` along the original last
+axis):
+
+====================  =====================================================
+slab ``rfft2``        ``(..., Hp, R)`` transposed, Hp-sharded (the slab
+                      c2c convention); ``transpose_back`` -> exact
+                      natural ``(..., R, H)``
+slab ``rfft3``        natural ``(..., D0, D1, H)``, D0-sharded (exact)
+pencil ``rfft2``      natural ``(..., R, Hp)``, (rows, cols)-sharded
+pencil ``rfft3``      reversed ``(..., Hp, D1, D0)``, (cols, rows)-sharded;
+                      ``transpose_back`` -> exact natural
+====================  =====================================================
+
+Each ``irfft*`` consumes exactly the layout its ``rfft*`` produces.
+``n_last`` (the original real length) is explicit on every inverse --
+``H`` alone cannot distinguish even ``2*(H-1)`` from odd ``2*H-1``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.core.fftmath as lf
+import repro.core.transpose as tr
+from repro.core import backends
+from repro.core.compat import shard_map
+from repro.core.distributed_fft import FFTConfig
+from repro.core.grid import ProcessGrid
+from repro.core.pencil import PencilConfig, _check_backends
+
+
+# ---------------------------------------------------------------------------
+# Hermitian-length helpers
+# ---------------------------------------------------------------------------
+
+
+def rfft_len(n: int) -> int:
+    """Length of the Hermitian-non-redundant rfft output for a real
+    length-``n`` axis (numpy's ``n//2 + 1``)."""
+    return int(n) // 2 + 1
+
+
+def padded_rfft_len(n: int, multiple: int, weight: int = 1) -> int:
+    """Smallest ``hp >= rfft_len(n)`` with ``(weight * hp) % multiple == 0``.
+
+    ``weight`` covers the slab fft3 case where the *flattened* axis
+    ``D1 * Hp`` (not ``Hp`` itself) must divide the shard count."""
+    hp = rfft_len(n)
+    while (weight * hp) % multiple:
+        hp += 1
+    return hp
+
+
+def _pad_disabled_hint(n: int, multiple: int, weight: int = 1) -> str:
+    return (
+        f"pass pad=True (pads the half spectrum to "
+        f"{padded_rfft_len(n, multiple, weight)}, plan-recorded trim)"
+    )
+
+
+def check_divisible_slab(global_shape, p: int, ndim: int, axis_name, *, pad: bool = True):
+    """Validate a slab r2c problem; returns ``(h, hp)`` for the Hermitian
+    axis. Raises a ValueError naming the offending data axis and mesh
+    axis -- the plan-time guard, mirroring the c2c validators."""
+    shape = tuple(global_shape)
+    if ndim == 2:
+        r, c = shape[-2:]
+        if r % p:
+            raise ValueError(
+                f"real slab rfft2: data axis -2 (global size {r}) is not "
+                f"divisible by mesh axis {axis_name!r} (P={p}) -- shape {shape}"
+            )
+        h = rfft_len(c)
+        if not pad and h % p:
+            raise ValueError(
+                f"real slab rfft2: Hermitian axis -1 (N={c} -> N//2+1={h}) is "
+                f"not divisible by mesh axis {axis_name!r} (P={p}) and "
+                f"pad=False -- shape {shape}; {_pad_disabled_hint(c, p)}"
+            )
+        return h, (padded_rfft_len(c, p) if pad else h)
+    if ndim == 3:
+        d0, d1, d2 = shape[-3:]
+        if d0 % p:
+            raise ValueError(
+                f"real slab rfft3: data axis -3 (global size {d0}) is not "
+                f"divisible by mesh axis {axis_name!r} (P={p}) -- shape {shape}"
+            )
+        h = rfft_len(d2)
+        if not pad and (d1 * h) % p:
+            raise ValueError(
+                f"real slab rfft3: flattened axes (-2,-1) (size {d1}*{h}={d1 * h} "
+                f"after the Hermitian truncation of N={d2}) not divisible by "
+                f"mesh axis {axis_name!r} (P={p}) and pad=False -- shape "
+                f"{shape}; {_pad_disabled_hint(d2, p, d1)}"
+            )
+        return h, (padded_rfft_len(d2, p, weight=d1) if pad else h)
+    raise NotImplementedError(
+        f"real transforms support ndim 2 or 3, got ndim={ndim} "
+        f"(1-D real: run the c2c fft1d_large on a complexified signal)"
+    )
+
+
+def check_divisible_pencil(global_shape, grid: ProcessGrid, ndim: int, *, pad: bool = True):
+    """Validate a pencil r2c problem; returns ``(h, hp)``. Errors name
+    the data axis and grid dimension, like the c2c pencil validator."""
+    shape = tuple(global_shape)
+    pr, pc = grid.p_rows, grid.p_cols
+    where = (
+        f"shape {shape} on grid {pr}x{pc} "
+        f"(row_axis={grid.row_axis!r}, col_axis={grid.col_axis!r})"
+    )
+    if ndim == 3:
+        d0, d1, d2 = shape[-3:]
+        if d0 % pr:
+            raise ValueError(
+                f"real pencil rfft3: data axis -3 (global size {d0}) is not "
+                f"divisible by P_row={pr} ({grid.row_axis!r}) -- {where}"
+            )
+        for divisor, why in ((pc, f"P_col={pc} ({grid.col_axis!r})"),
+                             (pr, f"P_row={pr} ({grid.row_axis!r}; the rows "
+                                  f"exchange re-shards it)")):
+            if d1 % divisor:
+                raise ValueError(
+                    f"real pencil rfft3: data axis -2 (global size {d1}) is "
+                    f"not divisible by {why} -- {where}"
+                )
+        h = rfft_len(d2)
+        if not pad and h % pc:
+            raise ValueError(
+                f"real pencil rfft3: Hermitian axis -1 (N={d2} -> N//2+1={h}) "
+                f"is not divisible by P_col={pc} ({grid.col_axis!r}) and "
+                f"pad=False -- {where}; {_pad_disabled_hint(d2, pc)}"
+            )
+        return h, (padded_rfft_len(d2, pc) if pad else h)
+    if ndim == 2:
+        r, c = shape[-2:]
+        if r % (pr * pc):
+            raise ValueError(
+                f"real pencil rfft2: data axis -2 (global size {r}) is not "
+                f"divisible by P_row*P_col={pr * pc} (both sub-rings re-shard "
+                f"it) -- {where}"
+            )
+        if c % pc:
+            raise ValueError(
+                f"real pencil rfft2: data axis -1 (global size {c}) is not "
+                f"divisible by P_col={pc} ({grid.col_axis!r}) -- {where}"
+            )
+        h = rfft_len(c)
+        if not pad and h % (pr * pc):
+            raise ValueError(
+                f"real pencil rfft2: Hermitian axis -1 (N={c} -> N//2+1={h}) "
+                f"is not divisible by P_row*P_col={pr * pc} (both sub-rings "
+                f"re-shard it) and pad=False -- {where}; "
+                f"{_pad_disabled_hint(c, pr * pc)}"
+            )
+        return h, (padded_rfft_len(c, pr * pc) if pad else h)
+    raise NotImplementedError(f"real pencil transforms support ndim 2 or 3, got {ndim}")
+
+
+# ---------------------------------------------------------------------------
+# Local r2c / c2r building blocks (impl-switched like lf.local_fft)
+# ---------------------------------------------------------------------------
+
+
+def _local_rfft(x: jax.Array, impl: lf.LocalImpl) -> jax.Array:
+    """r2c along the last axis. ``jnp`` uses the native rfft; the matmul
+    and pallas impls have no r2c codelet, so they transform the
+    complexified axis and keep the non-redundant half."""
+    if impl == "jnp":
+        return jnp.fft.rfft(x, axis=-1)
+    return lf.local_fft(x, axis=-1, impl=impl)[..., : rfft_len(x.shape[-1])]
+
+
+def _local_irfft(x: jax.Array, n: int, impl: lf.LocalImpl) -> jax.Array:
+    """c2r along the last axis: half spectrum (length ``n//2+1``) to a
+    real length-``n`` signal, carrying the 1/n factor."""
+    if impl == "jnp":
+        return jnp.fft.irfft(x, n=n, axis=-1)
+    h = x.shape[-1]
+    # rebuild the redundant half (X[n-k] = conj(X[k]), k = 1..n-h) and
+    # run the impl's c2c inverse; the result is real up to roundoff
+    tail = jnp.conj(x[..., 1 : n - h + 1])[..., ::-1]
+    full = jnp.concatenate([x, tail], axis=-1)
+    return jnp.real(lf.local_fft(full, axis=-1, inverse=True, impl=impl))
+
+
+def _pad_last(v: jax.Array, count: int) -> jax.Array:
+    if count == 0:
+        return v
+    return jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, count)])
+
+
+def _check_real_cfg(cfg) -> backends.CollectiveBackend:
+    backend = backends.get(cfg.strategy)
+    if cfg.fuse_dft:
+        raise ValueError(
+            "fuse_dft folds a c2c DFT into the scatter ring; the real "
+            "transforms have no fused path -- use fuse_dft=False"
+        )
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Slab r2c / c2r
+# ---------------------------------------------------------------------------
+
+
+def rfft2(
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Slab-decomposed 2-D r2c FFT of real (..., R, C), R sharded.
+
+    Returns the transposed half spectrum ``(..., Hp, C->R)`` (global
+    value ``rfftn(x).swapaxes(-1, -2)`` with ``Hp - H`` zero rows
+    appended), Hp-sharded -- the one exchange ships only the Hermitian
+    payload. ``cfg.transpose_back`` restores the exact natural
+    ``(..., R, H)`` layout with a second (equally truncated) exchange.
+    """
+    backend = _check_real_cfg(cfg)
+    p = mesh.shape[axis_name]
+    h, hp = check_divisible_slab(x.shape, p, 2, axis_name, pad=pad)
+    if backend.kind == "global":
+        return _rfft2_xla_auto(x, mesh, axis_name, hp=hp, transpose_back=cfg.transpose_back)
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = _local_rfft(xl, cfg.local_impl)  # (..., r, H)
+        v = _pad_last(v, hp - h)
+        v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)  # (..., hp/P, R)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        if cfg.transpose_back:
+            v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)
+            v = v[..., :h]  # (..., r, H) exact
+        return v
+
+    spec = P(*([None] * (x.ndim - 2)), axis_name, None)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def irfft2(
+    y: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    n_last: int = 0,
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Inverse of :func:`rfft2`: consumes exactly its layout (transposed
+    padded half spectrum, or natural when ``cfg.transpose_back``) and
+    returns the real (..., R, C=``n_last``), R sharded."""
+    backend = _check_real_cfg(cfg)
+    if n_last <= 0:
+        raise ValueError("irfft2 needs n_last (the original real length of axis -1)")
+    p = mesh.shape[axis_name]
+    r_glob = y.shape[-2] if cfg.transpose_back else y.shape[-1]
+    h, hp = check_divisible_slab(
+        y.shape[:-2] + (r_glob, n_last), p, 2, axis_name, pad=pad
+    )
+    expect = (r_glob, h) if cfg.transpose_back else (hp, r_glob)
+    if y.shape[-2:] != expect:
+        raise ValueError(
+            f"irfft2: spectrum axes {y.shape[-2:]} do not match the rfft2 "
+            f"layout {expect} for n_last={n_last} "
+            f"(transpose_back={cfg.transpose_back}, pad={pad})"
+        )
+    if backend.kind == "global":
+        return _irfft2_xla_auto(
+            y, mesh, axis_name, n_last=n_last, h=h, transpose_back=cfg.transpose_back
+        )
+
+    def fn(yl: jax.Array) -> jax.Array:
+        v = yl
+        if cfg.transpose_back:  # natural (..., r, H): re-enter the spectral layout
+            v = _pad_last(v, hp - h)
+            v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)
+        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
+        v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)  # (..., r, Hp)
+        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (..., r, C), 1/C
+
+    spec = P(*([None] * (y.ndim - 2)), axis_name, None)
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(y)
+
+
+def rfft3(
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Slab-decomposed 3-D r2c FFT of real (..., D0, D1, D2), D0 sharded.
+
+    Exact natural output ``(..., D0, D1, H)`` = ``numpy.fft.rfftn`` over
+    the last three axes (the internal ``Hp`` padding rides the two
+    exchanges flattened with D1 and is trimmed before returning -- the
+    trim is free because the Hermitian axis ends up local)."""
+    backend = _check_real_cfg(cfg)
+    p = mesh.shape[axis_name]
+    h, hp = check_divisible_slab(x.shape, p, 3, axis_name, pad=pad)
+    d1 = x.shape[-2]
+    spec = P(*([None] * (x.ndim - 3)), axis_name, None, None)
+    if backend.kind == "global":
+        sh = NamedSharding(mesh, spec)
+        out_sh = NamedSharding(mesh, spec)
+        return jax.jit(
+            lambda v: jnp.fft.rfftn(v, axes=(-3, -2, -1)),
+            in_shardings=sh, out_shardings=out_sh,
+        )(x)
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = _local_rfft(xl, cfg.local_impl)  # (..., d0, D1, H)
+        v = _pad_last(v, hp - h)
+        v = lf.local_fft(v, axis=-2, impl=cfg.local_impl)  # c2c along D1
+        flat = v.reshape(v.shape[:-2] + (d1 * hp,))
+        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
+        t = lf.local_fft(t, axis=-1, impl=cfg.local_impl)  # along D0
+        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        return back.reshape(v.shape)[..., :h]
+
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def irfft3(
+    y: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    cfg: FFTConfig = FFTConfig(),
+    n_last: int = 0,
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Inverse of :func:`rfft3`: natural half spectrum (..., D0, D1, H)
+    to the real (..., D0, D1, ``n_last``), D0 sharded."""
+    backend = _check_real_cfg(cfg)
+    if n_last <= 0:
+        raise ValueError("irfft3 needs n_last (the original real length of axis -1)")
+    p = mesh.shape[axis_name]
+    h, hp = check_divisible_slab(y.shape[:-1] + (n_last,), p, 3, axis_name, pad=pad)
+    if y.shape[-1] != h:
+        raise ValueError(
+            f"irfft3: Hermitian axis has length {y.shape[-1]}, expected "
+            f"{n_last}//2+1={h} for n_last={n_last}"
+        )
+    d1 = y.shape[-2]
+    spec = P(*([None] * (y.ndim - 3)), axis_name, None, None)
+    if backend.kind == "global":
+        sh = NamedSharding(mesh, spec)
+        return jax.jit(
+            lambda v: jnp.fft.irfftn(v, s=y.shape[-3:-1] + (n_last,), axes=(-3, -2, -1)),
+            in_shardings=sh, out_shardings=sh,
+        )(y)
+
+    def fn(yl: jax.Array) -> jax.Array:
+        v = _pad_last(yl, hp - h)
+        flat = v.reshape(v.shape[:-2] + (d1 * hp,))
+        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
+        t = lf.local_fft(t, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
+        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        v = back.reshape(v.shape)
+        v = lf.local_fft(v, axis=-2, inverse=True, impl=cfg.local_impl)  # 1/D1
+        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
+
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(y)
+
+
+def _rfft2_xla_auto(x, mesh, axis_name, *, hp: int, transpose_back: bool):
+    """GSPMD reference for the slab r2c: same layout contract as the
+    shard_map path (padded transposed spectrum / exact natural)."""
+    spec = P(*([None] * (x.ndim - 2)), axis_name, None)
+    sh = NamedSharding(mesh, spec)
+
+    def fn(v):
+        y = jnp.fft.rfft2(v)
+        if transpose_back:
+            return y
+        y = jnp.swapaxes(y, -1, -2)
+        return jnp.pad(y, [(0, 0)] * (y.ndim - 2) + [(0, hp - y.shape[-2]), (0, 0)])
+
+    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(x)
+
+
+def _irfft2_xla_auto(y, mesh, axis_name, *, n_last: int, h: int, transpose_back: bool):
+    spec = P(*([None] * (y.ndim - 2)), axis_name, None)
+    sh = NamedSharding(mesh, spec)
+    r_glob = y.shape[-2] if transpose_back else y.shape[-1]
+
+    def fn(v):
+        if not transpose_back:
+            v = jnp.swapaxes(v[..., :h, :], -1, -2)
+        return jnp.fft.irfft2(v, s=(r_glob, n_last))
+
+    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(y)
+
+
+# ---------------------------------------------------------------------------
+# Pencil r2c / c2r
+# ---------------------------------------------------------------------------
+
+
+def pencil_rfft3(
+    x: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Pencil-decomposed 3-D r2c FFT of real (..., D0, D1, D2) with D0
+    sharded over ``grid.row_axis`` and D1 over ``grid.col_axis``.
+
+    Returns the reversed-axes half spectrum ``(..., Hp, D1, D0)``
+    (global value ``rfftn(x).transpose(..., -1, -2, -3)`` with zero rows
+    appended) sharded (Hp over cols, D1 over rows) -- the c2c pencil
+    convention on the truncated payload. ``cfg.transpose_back`` restores
+    the exact natural ``(..., D0, D1, H)`` with two more sub-exchanges.
+    """
+    _check_backends(cfg, grid)
+    h, hp = check_divisible_pencil(x.shape, grid, 3, pad=pad)
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(xl: jax.Array) -> jax.Array:
+        v = _local_rfft(xl, cfg.local_impl)  # (..., d0r, d1c, H)
+        v = _pad_last(v, hp - h)
+        # cols sub-exchange swaps (D1, Hp): (d0r, d1c, Hp) -> (d0r, hp_c, D1)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d1r, D0)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        if cfg.transpose_back:
+            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+            v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
+            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+            v = v[..., :h]  # (d0r, d1c, H) exact
+        return v
+
+    lead = [None] * (x.ndim - 3)
+    in_spec = P(*lead, row, col, None)
+    out_spec = in_spec if cfg.transpose_back else P(*lead, col, row, None)
+    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(x)
+
+
+def pencil_irfft3(
+    y: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    n_last: int = 0,
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Inverse of :func:`pencil_rfft3`: consumes exactly its layout
+    (reversed padded half spectrum, or exact natural when
+    ``cfg.transpose_back``) and returns the real
+    (..., D0, D1, ``n_last``) sharded (rows, cols)."""
+    _check_backends(cfg, grid)
+    if n_last <= 0:
+        raise ValueError("pencil_irfft3 needs n_last (the original real length of axis -1)")
+    if cfg.transpose_back:
+        d0, d1 = y.shape[-3], y.shape[-2]
+    else:
+        d0, d1 = y.shape[-1], y.shape[-2]
+    h, hp = check_divisible_pencil(y.shape[:-3] + (d0, d1, n_last), grid, 3, pad=pad)
+    expect = (d0, d1, h) if cfg.transpose_back else (hp, d1, d0)
+    if y.shape[-3:] != expect:
+        raise ValueError(
+            f"pencil_irfft3: spectrum axes {y.shape[-3:]} do not match the "
+            f"pencil_rfft3 layout {expect} for n_last={n_last} "
+            f"(transpose_back={cfg.transpose_back}, pad={pad})"
+        )
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(yl: jax.Array) -> jax.Array:
+        v = yl
+        if cfg.transpose_back:  # natural (d0r, d1c, H): re-enter the spectral layout
+            v = _pad_last(v, hp - h)
+            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (d0r, hp_c, D1)
+            v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
+            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d1r, D0)
+        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d0r, D1)
+        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D1
+        v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (d0r, d1c, Hp)
+        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
+
+    lead = [None] * (y.ndim - 3)
+    in_spec = P(*lead, row, col, None) if cfg.transpose_back else P(*lead, col, row, None)
+    out_spec = P(*lead, row, col, None)
+    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(y)
+
+
+def pencil_rfft2(
+    x: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Pencil-decomposed 2-D r2c FFT of real (..., R, C) with R sharded
+    over ``grid.row_axis`` and C over ``grid.col_axis``.
+
+    Natural-layout output ``(..., R, Hp)`` sharded (rows, cols), zero
+    columns beyond ``H``. Like the c2c :func:`~repro.core.pencil.pencil_fft2`
+    this is four sub-exchanges -- but only the first (which localizes the
+    real axis for the r2c pass) ships full-width data, and it ships it at
+    the *real* dtype: every complex exchange carries the truncated
+    payload. ``transpose_back`` is rejected (already natural)."""
+    if cfg.transpose_back:
+        raise ValueError(
+            "pencil rfft2 already returns the natural layout; "
+            "transpose_back applies to slab transforms and pencil rfft3 only"
+        )
+    _check_backends(cfg, grid)
+    h, hp = check_divisible_pencil(x.shape, grid, 2, pad=pad)
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(xl: jax.Array) -> jax.Array:
+        # pass A -- localize C over the cols sub-ring (real payload),
+        # r2c it, and re-shard the truncated half spectrum back
+        v = jnp.swapaxes(xl, -1, -2)  # (c_c, r_r)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (r_rc, C)
+        v = _local_rfft(v, cfg.local_impl)  # (r_rc, H)
+        v = _pad_last(v, hp - h)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (hp_c, r_r)
+        v = jnp.swapaxes(v, -1, -2)  # (r_r, hp_c)
+        # pass B -- c2c transform R over the rows sub-ring (half payload)
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_rc, R)
+        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (r_r, hp_c)
+        return v
+
+    spec = P(*([None] * (x.ndim - 2)), row, col)
+    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(x)
+
+
+def pencil_irfft2(
+    y: jax.Array,
+    grid: ProcessGrid,
+    cfg: PencilConfig = PencilConfig(),
+    n_last: int = 0,
+    *,
+    pad: bool = True,
+) -> jax.Array:
+    """Inverse of :func:`pencil_rfft2`: padded natural half spectrum
+    (..., R, Hp) to the real (..., R, ``n_last``), both (rows, cols)
+    sharded. The final (real-payload) exchange restores the real layout."""
+    if cfg.transpose_back:
+        raise ValueError(
+            "pencil irfft2 consumes the natural layout; transpose_back "
+            "applies to slab transforms and pencil rfft3 only"
+        )
+    _check_backends(cfg, grid)
+    if n_last <= 0:
+        raise ValueError("pencil_irfft2 needs n_last (the original real length of axis -1)")
+    h, hp = check_divisible_pencil(y.shape[:-1] + (n_last,), grid, 2, pad=pad)
+    if y.shape[-1] != hp:
+        raise ValueError(
+            f"pencil_irfft2: Hermitian axis has length {y.shape[-1]}, expected "
+            f"the padded {hp} (H={h}) for n_last={n_last} on grid "
+            f"{grid.p_rows}x{grid.p_cols} (pad={pad})"
+        )
+    row, col = grid.row_axis, grid.col_axis
+
+    def fn(yl: jax.Array) -> jax.Array:
+        v = tr.distributed_transpose(yl, row, strategy=cfg.backend_row)  # (hp_rc, R)
+        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
+        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (r_r, hp_c)
+        v = jnp.swapaxes(v, -1, -2)  # (hp_c, r_r)
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (r_rc, Hp)
+        v = _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (r_rc, C), 1/C
+        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (c_c, r_r)
+        return jnp.swapaxes(v, -1, -2)  # (r_r, c_c)
+
+    spec = P(*([None] * (y.ndim - 2)), row, col)
+    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(y)

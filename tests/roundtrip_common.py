@@ -1,0 +1,49 @@
+"""Shared forward/inverse round-trip parametrization (hypothesis).
+
+One strategy set -- odd batch sizes, both dtype widths, slab and pencil
+decompositions, 2-D and 3-D -- drawn by the c2c property test
+(tests/test_fft_distributed.py) and reused verbatim by the r2c round
+trips (tests/test_real.py), so the two transform families are always
+exercised over the same field. Runs in-process on the 1-device mesh
+(pencil uses a 1x1 grid); the multi-device numerics live in the
+subprocess suites.
+"""
+
+from __future__ import annotations
+
+from hypothesis import given, settings, strategies as st
+
+#: odd leading batch sizes -- regression territory for chunking bugs
+BATCHES = st.sampled_from([1, 3, 5, 7])
+DECOMPS = st.sampled_from(["slab", "pencil"])
+NDIMS = st.sampled_from([2, 3])
+#: False -> 32-bit pair (complex64 / float32), True -> 64-bit pair
+WIDE = st.booleans()
+#: trailing-axis length: even and odd Hermitian cases for r2c
+LAST_N = st.sampled_from([6, 7, 8])
+
+
+def roundtrip_given(fn):
+    """The shared ``@given`` + ``@settings`` decorator: draws
+    (batch, decomp, ndim, wide, last_n)."""
+    return settings(max_examples=12, deadline=None)(
+        given(batch=BATCHES, decomp=DECOMPS, ndim=NDIMS, wide=WIDE, last_n=LAST_N)(fn)
+    )
+
+
+def transform_shape(batch: int, ndim: int, last_n: int):
+    """(batch, ...transform dims) with the drawn trailing length."""
+    return (batch,) + (8,) * (ndim - 1) + (last_n,)
+
+
+def build_plan(shape, decomp: str, **kw):
+    """plan_fft on a 1-device mesh matching ``decomp`` (slab: 1-axis
+    mesh; pencil: 1x1 ProcessGrid mesh)."""
+    from repro.core import plan_fft
+    from repro.core.compat import make_mesh
+
+    if decomp == "pencil":
+        mesh = make_mesh((1, 1), ("rows", "cols"))
+    else:
+        mesh = make_mesh((1,), ("model",))
+    return plan_fft(shape, mesh, decomp=decomp, **kw)

@@ -1,0 +1,57 @@
+"""benchmarks/run.py --json merge semantics: a partial run must merge
+its sections into an existing BENCH_fft.json instead of clobbering the
+committed multi-section baseline (and --force must overwrite)."""
+
+import json
+import sys
+
+from conftest import REPO
+
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from benchmarks.run import _merge_json  # noqa: E402
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"schema": 2, "rows": rows}))
+
+
+def test_partial_run_keeps_other_sections(tmp_path):
+    path = tmp_path / "BENCH_fft.json"
+    baseline = [
+        {"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 1.0},
+        {"bench": "fft3_decomp", "p": 8, "grid": "2x4", "measured_us": 2.0},
+        {"bench": "real", "p": 8, "transform": "r2c", "measured_us": 3.0},
+    ]
+    _write(path, baseline)
+    new = [{"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 9.0}]
+    merged = _merge_json(str(path), new)
+    benches = sorted(r["bench"] for r in merged)
+    assert benches == ["fft2", "fft3_decomp", "real"]
+    (fft2_row,) = [r for r in merged if r["bench"] == "fft2"]
+    assert fft2_row["measured_us"] == 9.0  # ran section replaced...
+    assert any(r["bench"] == "real" and r["measured_us"] == 3.0 for r in merged)
+
+
+def test_ran_section_fully_replaced_not_appended(tmp_path):
+    path = tmp_path / "b.json"
+    _write(path, [{"bench": "real", "p": 2}, {"bench": "real", "p": 4}])
+    merged = _merge_json(str(path), [{"bench": "real", "p": 8}])
+    assert merged == [{"bench": "real", "p": 8}]
+
+
+def test_force_overwrites(tmp_path):
+    path = tmp_path / "b.json"
+    _write(path, [{"bench": "fft3_decomp", "p": 8}])
+    merged = _merge_json(str(path), [{"bench": "fft2", "p": 8}], force=True)
+    assert merged == [{"bench": "fft2", "p": 8}]
+
+
+def test_missing_or_corrupt_file_is_fresh_start(tmp_path):
+    assert _merge_json(str(tmp_path / "nope.json"), [{"bench": "fft2"}]) == [
+        {"bench": "fft2"}
+    ]
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert _merge_json(str(bad), [{"bench": "fft2"}]) == [{"bench": "fft2"}]

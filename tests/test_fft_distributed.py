@@ -126,3 +126,33 @@ def test_distributed_fft_8dev():
 def test_plan_all_backends_p124():
     out = run_subprocess(PLAN_SWEEP_CODE, devices=4)
     assert out.count("PASS") == 3, out
+
+
+# ---------------------------------------------------------------------------
+# In-process property test: forward/inverse round trip over the shared
+# (odd batch, dtype width, slab/pencil, ndim) field -- the r2c twin lives
+# in tests/test_real.py and draws from the same strategies.
+# ---------------------------------------------------------------------------
+
+import numpy as np
+
+from roundtrip_common import build_plan, roundtrip_given, transform_shape
+
+
+@roundtrip_given
+def test_c2c_roundtrip_property(batch, decomp, ndim, wide, last_n):
+    import jax.numpy as jnp
+
+    shape = transform_shape(batch, ndim, last_n)
+    dtype = jnp.complex128 if wide else jnp.complex64
+    plan = build_plan(shape, decomp, ndim=ndim, dtype=dtype)
+    rng = np.random.default_rng(batch * 100 + ndim * 10 + last_n)
+    x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex128 if wide else np.complex64
+    )
+    z = np.asarray(plan.inverse(plan.execute(jnp.asarray(x))))
+    assert z.shape == x.shape
+    # x64 may be globally off, so 64-bit draws still settle at c64 tolerance
+    assert np.abs(z - x).max() < 1e-4 * max(np.abs(x).max(), 1.0), (
+        decomp, ndim, batch, last_n, wide,
+    )

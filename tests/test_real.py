@@ -1,0 +1,308 @@
+"""Real-to-complex subsystem: rfftn/irfftn vs the numpy oracle on 8 host
+devices (slab + 2x4 and 4x2 pencil grids), the byte-halving acceptance
+check (comm model AND HLO parser both report ~half the c2c bytes), the
+pad-to-divisible / pad=False plan-time errors, measured-planner wisdom
+keys that never alias r2c with c2c, and the in-process r2c round-trip
+property drawn from the shared parametrization in roundtrip_common.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from roundtrip_common import build_plan, roundtrip_given, transform_shape
+
+FAST_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import backends, plan_fft, planner
+from repro.core.compat import make_mesh
+
+rng = np.random.default_rng(0)
+mesh = make_mesh((8,), ("model",))
+P = 8
+
+# --- slab rfft2, every supporting backend (padded transposed layout) ---
+x = rng.standard_normal((64, 64)).astype(np.float32)
+ref = np.fft.rfft2(x)  # (64, 33)
+tol = 1e-4 * np.abs(ref).max()
+for name in backends.supporting(P):
+    plan = plan_fft((64, 64), mesh, real=True, backend=name)
+    assert (plan.hermitian_len, plan.padded_hermitian_len) == (33, 40)
+    y = np.asarray(plan.execute(jnp.asarray(x)))
+    assert y.shape == (40, 64), (name, y.shape)
+    assert np.abs(y[:33] - ref.T).max() < tol, name
+    assert np.abs(y[33:]).max() == 0.0, name  # padded rows are exactly zero
+    z = np.asarray(plan.inverse(jnp.asarray(y)))
+    assert z.dtype == np.float32 and np.abs(z - x).max() < 1e-4, name
+print("PASS slab rfft2 backends")
+
+# transpose_back: exact natural numpy shape, one more (truncated) exchange
+ptb = plan_fft((64, 64), mesh, real=True, transpose_back=True)
+ytb = np.asarray(ptb.execute(jnp.asarray(x)))
+assert ytb.shape == ref.shape and np.abs(ytb - ref).max() < tol
+assert np.abs(np.asarray(ptb.inverse(jnp.asarray(ytb))) - x).max() < 1e-4
+print("PASS slab rfft2 transpose_back")
+
+# --- slab rfft3: exact natural rfftn output ---
+x3 = rng.standard_normal((16, 8, 8)).astype(np.float32)
+ref3 = np.fft.rfftn(x3)
+p3 = plan_fft((16, 8, 8), mesh, ndim=3, real=True)
+y3 = np.asarray(p3.execute(jnp.asarray(x3)))
+assert y3.shape == ref3.shape
+assert np.abs(y3 - ref3).max() < 1e-4 * np.abs(ref3).max()
+assert np.abs(np.asarray(p3.inverse(jnp.asarray(y3))) - x3).max() < 1e-4
+assert p3.compiles == 2  # cached r2c + c2r executables
+print("PASS slab rfft3")
+
+# --- pencil rfft3 on 2x4 AND 4x2 (acceptance grids), odd batch dim ---
+xb = rng.standard_normal((3, 16, 8, 8)).astype(np.float32)
+refb = np.fft.rfftn(xb, axes=(-3, -2, -1))
+refb_rev = refb.transpose(0, 3, 2, 1)  # reversed pencil layout
+for pr, pc in ((2, 4), (4, 2)):
+    gmesh = make_mesh((pr, pc), ("rows", "cols"))
+    pp = plan_fft((3, 16, 8, 8), gmesh, ndim=3, real=True, decomp="pencil")
+    h, hp = pp.hermitian_len, pp.padded_hermitian_len
+    assert (h, hp) == (5, 8 if pc == 4 else 6), (pr, pc, h, hp)
+    yp = np.asarray(pp.execute(jnp.asarray(xb)))
+    assert yp.shape == (3, hp, 8, 16), (pr, pc, yp.shape)
+    assert np.abs(yp[:, :h] - refb_rev).max() < 1e-4 * np.abs(refb_rev).max(), (pr, pc)
+    assert np.abs(yp[:, h:]).max() == 0.0
+    zp = np.asarray(pp.inverse(jnp.asarray(yp)))
+    assert np.abs(zp - xb).max() < 1e-4, (pr, pc)
+    # transpose_back: exact natural rfftn output on the same grid
+    pt = plan_fft((3, 16, 8, 8), gmesh, ndim=3, real=True, decomp="pencil",
+                  transpose_back=True, backend=("scatter", "bisection"))
+    yt = np.asarray(pt.execute(jnp.asarray(xb)))
+    assert yt.shape == refb.shape and np.abs(yt - refb).max() < 1e-4 * np.abs(refb).max()
+    assert np.abs(np.asarray(pt.inverse(jnp.asarray(yt))) - xb).max() < 1e-4
+    print(f"PASS pencil rfft3 {pr}x{pc}")
+
+# --- pencil rfft2: natural padded layout, mixed per-axis backends ---
+gmesh = make_mesh((2, 4), ("rows", "cols"))
+x2 = rng.standard_normal((5, 16, 16)).astype(np.float32)
+ref2 = np.fft.rfft2(x2)
+pq = plan_fft((5, 16, 16), gmesh, ndim=2, real=True, decomp="pencil",
+              backend=("pairwise_xor", "alltoall"))
+h, hp = pq.hermitian_len, pq.padded_hermitian_len
+assert (h, hp) == (9, 16)
+yq = np.asarray(pq.execute(jnp.asarray(x2)))
+assert yq.shape == (5, 16, hp)
+assert np.abs(yq[..., :h] - ref2).max() < 1e-4 * np.abs(ref2).max()
+assert np.abs(yq[..., h:]).max() == 0.0
+assert np.abs(np.asarray(pq.inverse(jnp.asarray(yq))) - x2).max() < 1e-4
+print("PASS pencil rfft2")
+
+# --- pad=False: plan-time ValueError naming axis + mesh/grid dim ---
+try:
+    plan_fft((64, 64), mesh, real=True, pad=False)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "Hermitian axis -1" in str(e) and "P=8" in str(e) and "'model'" in str(e), e
+try:
+    plan_fft((16, 7, 6), mesh, ndim=3, real=True, pad=False)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "flattened axes (-2,-1)" in str(e) and "P=8" in str(e), e
+try:
+    plan_fft((16, 8, 8), gmesh, ndim=3, real=True, decomp="pencil", pad=False)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "Hermitian axis -1" in str(e) and "P_col=4" in str(e), e
+try:
+    plan_fft((16, 16), gmesh, ndim=2, real=True, decomp="pencil", pad=False)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "P_row*P_col=8" in str(e), e
+# ...and a shape whose Hermitian axis happens to divide plans fine unpadded
+ok = plan_fft((64, 126), mesh, real=True, pad=False)  # 126//2+1 = 64
+assert ok.hermitian_len == ok.padded_hermitian_len == 64
+print("PASS pad errors")
+
+# --- acceptance: r2c slab transpose moves ~half the c2c bytes, per the
+# comm model AND the HLO byte parser (both parsers, both backends) ---
+from repro.core import comm_model, hlo_analysis
+for name in ("alltoall", "scatter"):
+    pc_ = plan_fft((256, 256), mesh, backend=name)
+    pr_ = plan_fft((256, 256), mesh, backend=name, real=True)
+    model_ratio = pr_.comm_bytes() / pc_.comm_bytes()
+    ccomp, rcomp = pc_.lower().compile(), pr_.lower().compile()
+    parse_ratio = (
+        comm_model.parse_collectives(rcomp.as_text(), default_group=P).total_bytes
+        / comm_model.parse_collectives(ccomp.as_text(), default_group=P).total_bytes
+    )
+    hlo_ratio = (
+        hlo_analysis.analyze_compiled(rcomp, default_group=P).coll_bytes
+        / hlo_analysis.analyze_compiled(ccomp, default_group=P).coll_bytes
+    )
+    for which, ratio in (("model", model_ratio), ("parse", parse_ratio), ("hlo", hlo_ratio)):
+        assert 0.45 < ratio < 0.60, (name, which, ratio)
+print("PASS byte halving")
+
+# pencil: model and parser agree on the halved payload too
+c3 = plan_fft((16, 8, 64), gmesh, ndim=3, decomp="pencil", backend=("alltoall", "alltoall"))
+r3 = plan_fft((16, 8, 64), gmesh, ndim=3, decomp="pencil", real=True,
+              backend=("alltoall", "alltoall"))
+hr = hlo_analysis.analyze_compiled(r3.lower().compile(), default_group=P).coll_bytes
+assert abs(hr - r3.comm_bytes()) < 1e-6 * max(hr, 1.0), (hr, r3.comm_bytes())
+assert 0.45 < r3.comm_bytes() / c3.comm_bytes() < 0.62
+print("PASS pencil bytes")
+
+# --- measured planner: r2c and c2c wisdom never alias ---
+planner.forget_wisdom()
+mr = plan_fft((64, 64), mesh, real=True, planner="measure")
+mc = plan_fft((64, 64), mesh, planner="measure")
+assert mr.backend in mr.measured and mr.measured[mr.backend] == min(mr.measured.values())
+keys = sorted(planner._WISDOM)
+real_keys = [k for k in keys if "real=1" in k]
+c2c_keys = [k for k in keys if "real=" not in k]
+# r2c keys carry the real flag; c2c keys keep the pre-real byte format
+# (so existing exported wisdom stays valid and pad= can't churn them)
+assert len(real_keys) == 1 and len(c2c_keys) == 1, keys
+assert "pad=1" in real_keys[0] and "pad" not in c2c_keys[0], keys
+again = plan_fft((64, 64), mesh, real=True, planner="measure")
+assert again.wisdom_hit and again.backend == mr.backend
+print("PASS measured real")
+
+# --- decomp='auto' with real: pencil on a 2-D mesh, slab fallback ---
+pa = plan_fft((16, 8, 8), gmesh, ndim=3, real=True, decomp="auto")
+assert pa.decomp == "pencil" and pa.real
+pb = plan_fft((64, 64), mesh, real=True, decomp="auto")
+assert pb.decomp == "slab"
+# fuse_dft is a c2c-only feature
+try:
+    plan_fft((64, 64), mesh, real=True, fuse_dft=True, backend="scatter")
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "fuse_dft" in str(e)
+print("PASS real auto")
+"""
+
+
+def test_real_fast_8dev():
+    """CI fast job runs this under 8 forced host devices: slab + both
+    acceptance pencil grids, byte halving per both parsers, planner."""
+    out = run_subprocess(FAST_CODE, devices=8)
+    assert out.count("PASS") == 11, out
+
+
+SLOW_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from repro.core import backends, plan_fft
+from repro.core.compat import make_mesh
+
+rng = np.random.default_rng(7)
+mesh = make_mesh((8,), ("model",))
+
+# float64 end to end: slab + pencil, fwd vs numpy and round trip
+x = rng.standard_normal((16, 8, 10))
+ref = np.fft.rfftn(x)
+p = plan_fft((16, 8, 10), mesh, ndim=3, real=True, dtype=jnp.float64)
+y = np.asarray(p.execute(jnp.asarray(x)))
+assert y.dtype == np.complex128 and np.abs(y - ref).max() < 1e-10 * np.abs(ref).max()
+z = np.asarray(p.inverse(jnp.asarray(y)))
+assert z.dtype == np.float64 and np.abs(z - x).max() < 1e-12
+print("PASS f64 slab")
+
+gmesh = make_mesh((2, 4), ("rows", "cols"))
+pp = plan_fft((16, 8, 10), gmesh, ndim=3, real=True, decomp="pencil", dtype=jnp.float64)
+yp = np.asarray(pp.execute(jnp.asarray(x)))
+h = pp.hermitian_len
+assert np.abs(yp[:h] - ref.transpose(2, 1, 0)).max() < 1e-10 * np.abs(ref).max()
+assert np.abs(np.asarray(pp.inverse(jnp.asarray(yp))) - x).max() < 1e-12
+print("PASS f64 pencil")
+
+# full per-axis backend pair matrix for pencil rfft3 round trips (c64)
+x32 = x.astype(np.float32)
+NAMES = backends.available(kind="shard_map")
+for br in NAMES:
+    for bc in NAMES:
+        if not (backends.get(br).supports(2) and backends.get(bc).supports(4)):
+            continue
+        q = plan_fft((16, 8, 10), gmesh, ndim=3, real=True, decomp="pencil",
+                     backend=(br, bc))
+        yq = q.execute(jnp.asarray(x32))
+        zq = np.asarray(q.inverse(yq))
+        assert np.abs(zq - x32).max() < 1e-4, (br, bc)
+print("PASS pair matrix")
+
+# odd last axis through every slab backend
+xo = rng.standard_normal((24, 9)).astype(np.float32)
+refo = np.fft.rfft2(xo)
+for name in backends.supporting(8):
+    q = plan_fft((24, 9), mesh, real=True, backend=name, transpose_back=True)
+    yo = np.asarray(q.execute(jnp.asarray(xo)))
+    assert np.abs(yo - refo).max() < 1e-3 * np.abs(refo).max(), name
+    assert np.abs(np.asarray(q.inverse(jnp.asarray(yo))) - xo).max() < 1e-4, name
+print("PASS odd last axis")
+"""
+
+
+@pytest.mark.slow
+def test_real_slow_8dev():
+    out = run_subprocess(SLOW_CODE, devices=8, timeout=1800)
+    assert out.count("PASS") == 4, out
+
+
+# ---------------------------------------------------------------------------
+# In-process: r2c round-trip property over the SAME parametrization the
+# c2c property test draws (tests/roundtrip_common.py).
+# ---------------------------------------------------------------------------
+
+
+@roundtrip_given
+def test_r2c_roundtrip_property(batch, decomp, ndim, wide, last_n):
+    import jax.numpy as jnp
+
+    shape = transform_shape(batch, ndim, last_n)
+    dtype = jnp.float64 if wide else jnp.float32
+    plan = build_plan(shape, decomp, ndim=ndim, dtype=dtype, real=True)
+    rng = np.random.default_rng(batch * 100 + ndim * 10 + last_n)
+    x = rng.standard_normal(shape).astype(np.float64 if wide else np.float32)
+    y = plan.execute(jnp.asarray(x))
+    assert jnp.issubdtype(y.dtype, jnp.complexfloating)
+    assert y.shape == plan.spectrum_shape(), (y.shape, plan.spectrum_shape())
+    z = np.asarray(plan.inverse(y))
+    assert z.shape == x.shape and not np.iscomplexobj(z)
+    assert np.abs(z - x).max() < 1e-4 * max(np.abs(x).max(), 1.0), (
+        decomp, ndim, batch, last_n, wide,
+    )
+
+
+def test_lower_shares_executable_cache_with_execution():
+    """lower()/roofline() of a real plan's c2r side must cache under the
+    spectrum dtype, so a later inverse() reuses the wrapper instead of
+    compiling a second one (the PR-2 lower-reuses-cache contract)."""
+    import jax.numpy as jnp
+
+    plan = build_plan((8, 10), "slab", real=True)
+    plan.lower(inverse=True)
+    assert plan.compiles == 1
+    x = jnp.zeros((8, 10), jnp.float32)
+    y = plan.execute(x)
+    assert plan.compiles == 2
+    plan.inverse(y)  # same wrapper as the lowered c2r side
+    assert plan.compiles == 2, sorted(plan._cache)
+
+
+def test_spectral_axes_contract():
+    """The layout contract the apps build on: orig-axis bookkeeping,
+    Hermitian flags, and padding exactly where the axis stays sharded."""
+    import jax.numpy as jnp
+
+    plan = build_plan((8, 10), "slab", real=True)  # P=1: Hp == H
+    axes = plan.spectral_axes()
+    assert [a.orig for a in axes] == [-1, -2]  # slab 2-D spectrum is transposed
+    assert axes[0].half and not axes[1].half
+    assert axes[0].n == 10 and axes[0].n_out == 6
+    assert plan.spectrum_shape() == (6, 8)
+
+    plan3 = build_plan((4, 6, 8), "pencil", ndim=3, real=True)
+    axes3 = plan3.spectral_axes()
+    assert [a.orig for a in axes3] == [-1, -2, -3]  # reversed pencil layout
+    assert axes3[0].half and axes3[0].n_out == 5
+    assert plan3.spectrum_shape() == (5, 6, 4)
+
+    c2c = build_plan((4, 6, 8), "pencil", ndim=3, dtype=jnp.complex64)
+    assert [a.half for a in c2c.spectral_axes()] == [False] * 3
+    assert c2c.spectrum_shape() == (8, 6, 4)
