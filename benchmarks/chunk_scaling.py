@@ -1,59 +1,147 @@
-"""Paper Fig. 3 analogue: chunk-size scaling of the collective backends.
+"""Overlap section: fused vs unfused streaming exchanges, n_chunks sweep.
 
-The paper sweeps message sizes between two nodes and shows per-message
-overhead separating the parcelports (TCP's latency vs LCI). Here every
-registered shard_map backend is swept over local pencil sizes on 2 host
-devices: measured wall time shows the dispatch/fusion overheads; the
-derived columns give each backend's own alpha-beta v5e model (the
-``cost()`` the implementation itself carries), where the
-latency-vs-bandwidth crossover actually lives.
+The paper's Fig. 3 probes the chunk-size / per-message-overhead trade
+per parcelport; the pipelined overlap executor turns that axis into a
+runtime knob (``plan_fft(..., pipeline=)``). This benchmark measures it:
+for each configuration (slab fft2 / fft3, pencil fft3, slab r2c) and
+each streaming backend, the *same* plan runs
+
+- unfused  (``pipeline=False``: transpose, then the whole-axis FFT),
+- fused    (``pipeline="auto"``: the FFT stage streams into the
+  exchange's flight time, one chunk per peer), and
+- fused with ``n_chunks`` in a sweep (sub-chunked peers: more, smaller
+  messages; finer compute grain -- the paper's message-count scaling),
+
+with the plan's own model prediction (``Plan.predict(fused=, n_chunks=)``)
+next to each measured row -- the acceptance check is that model and
+measurement agree on the *sign* of the fused-vs-unfused win.
+
+``run_json()`` rows land in ``BENCH_fft.json`` under ``bench="overlap"``
+via ``benchmarks/run.py --json``; ``to_csv()`` renders the harness's
+``name,us_per_call,derived`` format.
 """
 
 from __future__ import annotations
 
-from repro.configs.fft_bench import CHUNK_SWEEP_SIZES
-from repro.core import backends
+import json
+from typing import Iterable, List
 
 from benchmarks.common import run_devices_subprocess
 
 _CODE = r"""
-import time, numpy as np, jax, jax.numpy as jnp
-from repro.core import backends, fft2, FFTConfig
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import backends, plan_fft, planner
 from repro.core.compat import make_mesh
 
-mesh = make_mesh((2,), ("model",))
-names = [n for n in backends.available()
-         if backends.get(n).kind == "shard_map" and backends.get(n).supports(2)]
-rng = np.random.default_rng(0)
-for n in __SIZES__:
-    x = jnp.asarray((rng.standard_normal((n, n)) + 1j*rng.standard_normal((n, n))).astype(np.complex64))
-    for strat in names:
-        fn = jax.jit(lambda v, s=strat: fft2(v, mesh, "model", FFTConfig(strategy=s)))
-        jax.block_until_ready(fn(x))
-        ts = []
-        for _ in range(10):
-            t0 = time.perf_counter(); jax.block_until_ready(fn(x)); ts.append(time.perf_counter()-t0)
-        ts.sort()
-        print(f"ROW,{n},{strat},{ts[len(ts)//2]*1e6:.1f}")
+p = __P__
+dev = planner.device_kind(make_mesh((p,), ("model",)))
+
+
+def make_input(plan):
+    spec = plan.input_spec()
+    rng = np.random.default_rng(0)
+    return jax.device_put(
+        jnp.asarray(rng.standard_normal(spec.shape).astype(
+            np.float32 if plan.real else np.complex64)),
+        spec.sharding,
+    )
+
+
+def rows_for(tag, plan_kw, backend, variants, rounds=4, iters=6):
+    # Interleave the variants across timing rounds and keep the MINIMUM
+    # wall time per variant: host-device CPU timings drift with external
+    # load, and interleaving + min cancels that drift where a single
+    # median-of-one-block would bake it into whichever variant ran during
+    # the spike -- fused-vs-unfused is a paired comparison, so both sides
+    # must see the same machine.
+    import time
+    base = backend if isinstance(backend, str) else "+".join(backend)
+    plans = []
+    for fused, n_chunks in variants:
+        pipeline = (n_chunks or True) if fused else False
+        plan = plan_fft(backend=backend, pipeline=pipeline, **plan_kw)
+        plans.append((fused, n_chunks, plan, make_input(plan)))
+    best = [float("inf")] * len(plans)
+    for _ in range(2):  # warmup / compile every variant first
+        for _, _, plan, x in plans:
+            jax.block_until_ready(plan.execute(x))
+    for _ in range(rounds * iters):  # one call per variant per step: max pairing
+        for i, (_, _, plan, x) in enumerate(plans):
+            t0 = time.perf_counter()
+            jax.block_until_ready(plan.execute(x))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    out = []
+    for i, (fused, n_chunks, plan, _) in enumerate(plans):
+        model = plan.predict(fused=fused, n_chunks=n_chunks)[base]
+        out.append({
+            "bench": "overlap", "config": tag, "decomp": plan.decomp,
+            "p": p, "backend": base, "fused": bool(plan.fused),
+            "n_chunks": plan.n_chunks,
+            "measured_us": round(best[i] * 1e6, 1),
+            "model_us": round(model * 1e6, 2),
+            "device_kind": dev,
+        })
+    return out
+
+
+VARIANTS = [(False, None), (True, None), (True, 2 * p), (True, 4 * p)]
+mesh = make_mesh((p,), ("model",))
+rows = []
+for backend in ("scatter", "pairwise_xor"):
+    rows += rows_for(f"slab-fft2-n{__N2__}",
+                     dict(global_shape=(__N2__, __N2__), mesh=mesh), backend, VARIANTS)
+rows += rows_for("slab-fft3-16x16x512",
+                 dict(global_shape=(16, 16, 512), mesh=mesh, ndim=3), "scatter", VARIANTS)
+rows += rows_for(f"slab-r2c-n{__N2__}",
+                 dict(global_shape=(__N2__, __N2__), mesh=mesh, real=True), "scatter", VARIANTS)
+# six-step 1-D: the cross-rank stage is a strided length-P FFT, exactly
+# what the fused in-flight accumulation replaces -- the structural win
+rows += rows_for("slab-fft1d-1M",
+                 dict(global_shape=(1 << 20,), mesh=mesh, ndim=1), "scatter", VARIANTS)
+if p >= 4:
+    pr, pc = (2, p // 2)
+    gmesh = make_mesh((pr, pc), ("rows", "cols"))
+    rows += rows_for(f"pencil-fft3-{pr}x{pc}",
+                     dict(global_shape=(16, 16, 512), mesh=gmesh, ndim=3, decomp="pencil"),
+                     ("scatter", "scatter"), VARIANTS)
+    rows += rows_for(f"pencil-fft2-{pr}x{pc}",
+                     dict(global_shape=(__N2__, __N2__), mesh=gmesh, ndim=2, decomp="pencil"),
+                     ("scatter", "scatter"), VARIANTS)
+for r in rows:
+    print("ROW " + json.dumps(r))
 """
 
 
-def run() -> list[str]:
-    sizes = CHUNK_SWEEP_SIZES[:4]  # CPU budget
-    out = run_devices_subprocess(_CODE.replace("__SIZES__", repr(sizes)), devices=2)
-    rows = []
-    for line in out.splitlines():
-        if not line.startswith("ROW,"):
-            continue
-        _, n, strat, us = line.split(",")
-        n = int(n)
-        p = 2
-        m_local = n * n * 8 / p
-        model = backends.get(strat).cost(m_local, p)
-        rows.append(
-            f"fig3_chunk/{strat}/n{n},{us},v5e_model_us={model*1e6:.2f};local_MB={m_local/2**20:.2f}"
+def run_json(n: int = 256, device_counts: Iterable[int] = (8,)) -> List[dict]:
+    """Fused-vs-unfused + n_chunks rows per backend per configuration."""
+    rows: List[dict] = []
+    for p in device_counts:
+        out = run_devices_subprocess(
+            _CODE.replace("__N2__", str(n)).replace("__P__", str(p)), devices=p
         )
+        for line in out.splitlines():
+            if line.startswith("ROW "):
+                rows.append(json.loads(line[4:]))
     return rows
+
+
+def to_csv(rows: List[dict]) -> List[str]:
+    out = []
+    for r in rows:
+        variant = (
+            f"fused{r['n_chunks']}" if r["fused"] and r["n_chunks"]
+            else ("fused" if r["fused"] else "unfused")
+        )
+        out.append(
+            f"overlap/{r['config']}/{r['backend']}/{variant}/p{r['p']},"
+            f"{r['measured_us']},model_us={r['model_us']}"
+        )
+    return out
+
+
+def run(n: int = 256) -> List[str]:
+    return to_csv(run_json(n))
 
 
 if __name__ == "__main__":

@@ -29,26 +29,28 @@ n, p = __N__, __P__
 shape = (n, n, n)
 dev = None
 
-def emit(decomp, grid_name, plan, pred):
+def emit(decomp, grid_name, plan):
     for name in sorted(plan.measured):
+        # candidates are (backend, n_chunks, fused) variants: model each
+        # with its own pipeline resolution
         row = {"bench": "fft3_decomp", "n": n, "p": p, "decomp": decomp,
                "grid": grid_name, "backend": name,
                "measured_us": round(plan.measured[name] * 1e6, 1),
-               "model_us": round(pred[name] * 1e6, 2),
+               "model_us": round(planner.predict_candidate(plan, name) * 1e6, 2),
                "picked": plan.backend, "device_kind": dev}
         print("ROW " + json.dumps(row))
 
 mesh1d = make_mesh((p,), ("model",))
 dev = planner.device_kind(mesh1d)
 plan = plan_fft(shape, mesh1d, ndim=3, planner="measure")
-emit("slab", f"{p}x1", plan, plan.predict())
+emit("slab", f"{p}x1", plan)
 
 for pr, pc in grid.grid_shapes(p):
     if pr == 1 or pc == 1:
         continue  # degenerate grids are the slab row above
     mesh = make_mesh((pr, pc), ("rows", "cols"))
     plan = plan_fft(shape, mesh, ndim=3, decomp="pencil", planner="measure")
-    emit("pencil", f"{pr}x{pc}", plan, plan.predict())
+    emit("pencil", f"{pr}x{pc}", plan)
 """
 
 

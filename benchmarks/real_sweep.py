@@ -31,15 +31,15 @@ mesh = make_mesh((p,), ("model",))
 dev = planner.device_kind(mesh)
 for real in (False, True):
     plan = plan_fft((n, n), mesh, real=real, planner="measure")
-    pred = plan.predict()
     hlo_bytes = comm_model.parse_collectives(
         plan.lower().compile().as_text(), default_group=p
     ).total_bytes
     for name in sorted(plan.measured):
+        # candidates are (backend, n_chunks, fused) variants
         row = {"bench": "real", "n": n, "p": p,
                "transform": "r2c" if real else "c2c", "backend": name,
                "measured_us": round(plan.measured[name] * 1e6, 1),
-               "model_us": round(pred[name] * 1e6, 2),
+               "model_us": round(planner.predict_candidate(plan, name) * 1e6, 2),
                "model_bytes": plan.comm_bytes(),
                "picked": plan.backend, "device_kind": dev}
         if name == plan.backend:

@@ -1,7 +1,8 @@
 """Benchmark harness -- one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  fig3_chunk/*     chunk-size scaling of collective strategies (Fig. 3)
+  overlap/*        fused vs unfused streaming exchanges, n_chunks sweep
+                   (the paper's Fig. 3 chunk-size axis, as a runtime knob)
   fig45_strong/*   FFT strong scaling per strategy + reference (Figs. 4-5)
   fft_measure/*    measured planner vs alpha-beta model per backend
   pencil_sweep/*   slab vs pencil decomposition per grid shape
@@ -10,16 +11,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
   local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
 
 Run: PYTHONPATH=src python -m benchmarks.run
-         [--only fig3,fig45,moe,kernel,fft,pencil,real]
+         [--only overlap,fig45,moe,kernel,fft,pencil,real]
      [--json BENCH_fft.json] [--force]
 
 ``--json PATH`` additionally writes the fft_measure + pencil_sweep +
-real_sweep rows (measured + model-predicted per backend / per grid
-shape / per transform kind) as machine-readable JSON -- the perf
-trajectory artifact CI uploads. Sections that did not run in this
-invocation keep their rows from an existing file at PATH (a partial run
-merges instead of clobbering the committed baseline); ``--force``
-overwrites the file with only this run's sections.
+real_sweep + overlap rows (measured + model-predicted per backend / per
+grid shape / per transform kind / per pipeline variant) as
+machine-readable JSON -- the perf trajectory artifact CI uploads.
+Sections that did not run in this invocation keep their rows from an
+existing file at PATH (a partial run merges instead of clobbering the
+committed baseline); ``--force`` overwrites the file with only this
+run's sections. ``fig3`` is accepted as a legacy alias for ``overlap``.
 """
 
 import argparse
@@ -32,7 +34,7 @@ BENCH_SCHEMA = 2
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig3,fig45,moe,kernel,fft,pencil,real")
+    ap.add_argument("--only", default="overlap,fig45,moe,kernel,fft,pencil,real")
     ap.add_argument(
         "--json",
         default=None,
@@ -56,17 +58,19 @@ def main() -> None:
 
         rows += kernel_bench.run()
         _flush(rows)
-    if "fig3" in wanted:
-        from benchmarks import chunk_scaling
-
-        rows += chunk_scaling.run()
-        _flush(rows)
     if "fig45" in wanted:
         from benchmarks import strong_scaling
 
         rows += strong_scaling.run()
         _flush(rows)
     jrows = []
+    if "overlap" in wanted or "fig3" in wanted:
+        from benchmarks import chunk_scaling
+
+        orows = chunk_scaling.run_json()
+        jrows += orows
+        rows += chunk_scaling.to_csv(orows)
+        _flush(rows)
     if "fft" in wanted or args.json:
         from benchmarks import fft_measure
 

@@ -25,6 +25,3 @@ BENCH_2D = FFTBenchConfig("bench_2d_1k", (1024, 1024), 2)
 BENCH_2D_SMALL = FFTBenchConfig("bench_2d_256", (256, 256), 2)
 BENCH_3D = FFTBenchConfig("bench_3d_128", (128, 128, 128), 3)
 BENCH_1D = FFTBenchConfig("bench_1d_1m", (1 << 20,), 1)
-
-#: Fig. 3 chunk-size sweep: local data per device, bytes = 8 * n^2 / P
-CHUNK_SWEEP_SIZES = [256, 512, 1024, 2048, 4096]

@@ -32,7 +32,7 @@ from repro.core.real import (
     rfft3,
     rfft_len,
 )
-from repro.core.transpose import distributed_transpose
+from repro.core.transpose import distributed_transpose, transpose_then_fft
 
 __all__ = [
     "CollectiveBackend", "CommParams", "FFTConfig", "FFTPlan", "MAX_DFT",
@@ -44,5 +44,5 @@ __all__ = [
     "pencil_fft2", "pencil_fft3", "pencil_irfft2", "pencil_irfft3",
     "pencil_rfft2", "pencil_rfft3", "plan_fft", "reference_fft2", "rfft2",
     "rfft3", "rfft_len", "ring_all_gather", "ring_reduce_scatter",
-    "ring_scatter_reduce", "wisdom_size",
+    "ring_scatter_reduce", "transpose_then_fft", "wisdom_size",
 ]

@@ -24,8 +24,14 @@ oracle-equivalence test sweep::
     @register
     class MyExchange(CollectiveBackend):
         name = "my_exchange"
-        def transpose(self, x, axis_name, chunk_fn=None): ...
-        def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0): ...
+        def transpose(self, x, axis_name, chunk_fn=None, *, n_chunks=None): ...
+        def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0,
+                 *, n_chunks=None, fused=True): ...
+
+(the keyword-only ``n_chunks``/``fused`` parameters are part of the
+extension contract since the pipelined overlap executor: every call
+site passes them, so a backend must at least accept-and-ignore them --
+monolithic backends do exactly that).
 """
 
 from __future__ import annotations
@@ -67,10 +73,35 @@ class CollectiveBackend:
         return True
 
     def transpose(
-        self, x: jax.Array, axis_name: str, chunk_fn: Optional[ChunkFn] = None
+        self,
+        x: jax.Array,
+        axis_name: str,
+        chunk_fn: Optional[ChunkFn] = None,
+        *,
+        n_chunks: Optional[int] = None,
     ) -> jax.Array:
-        """shard_map-local (..., r, C) -> (..., c, R) pencil exchange."""
+        """shard_map-local (..., r, C) -> (..., c, R) pencil exchange.
+        ``n_chunks`` (streaming backends; a hint elsewhere) sub-chunks
+        each peer block so compute pipelines into flight time."""
         raise NotImplementedError(f"backend {self.name!r} has no shard_map transpose")
+
+    def stream_reduce(
+        self,
+        x: jax.Array,
+        axis_name: str,
+        chunk_fn: ChunkFn,
+        *,
+        n_chunks: Optional[int] = None,
+    ) -> jax.Array:
+        """Streaming exchange-and-accumulate over this backend's own
+        schedule (see :func:`repro.core.transpose._chunked_reduce`) --
+        the hook the fused transpose+FFT stage rides. Only
+        chunk-streaming backends implement it; the monolithic
+        collectives have no per-arrival moment to fold compute into."""
+        raise NotImplementedError(
+            f"backend {self.name!r} is not chunk-streaming; fused stages "
+            f"need a backend with supports_chunk_fn"
+        )
 
     def cost(
         self,
@@ -78,15 +109,23 @@ class CollectiveBackend:
         p: int,
         prm: CommParams = CommParams(),
         chunk_compute_s: float = 0.0,
+        *,
+        n_chunks: Optional[int] = None,
+        fused: bool = True,
     ) -> float:
         """Predicted seconds for one exchange of a local block of
         ``m_bytes`` over ``p`` shards (alpha-beta model).
 
         ``chunk_compute_s`` is *per-chunk* compute (there are ``p``
         chunks) in every backend's model: streaming backends overlap it
-        with later rounds; monolithic collectives serialize all ``p``
-        chunk computes after the exchange. Same units everywhere, so
-        ``cheapest()`` comparisons are apples-to-apples."""
+        with later rounds (``fused=True``, the pipelined default) or --
+        ``fused=False``, the monolithic discipline -- serialize all
+        ``p`` chunk computes after the exchange, exactly like the
+        monolithic collectives always do. ``n_chunks`` models the
+        sub-chunked pipeline (more, smaller messages; finer overlap
+        grain) on streaming backends and is ignored by monolithic ones.
+        Same units everywhere, so ``cheapest()`` comparisons are
+        apples-to-apples."""
         raise NotImplementedError
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -138,19 +177,22 @@ def cheapest(
     *,
     names: Optional[Iterable[str]] = None,
     chunk_compute_s: float = 0.0,
+    n_chunks: Optional[int] = None,
+    fused: bool = True,
 ) -> str:
     """Cost-model argmin over (by default) every registered backend that
     supports ``p`` -- the ``backend="auto"`` selection rule, and by
     construction the argmin of ``Plan.predict()``'s ranking. Ties break
     toward the lexicographically first name, so selection is
-    deterministic."""
+    deterministic. ``n_chunks``/``fused`` rank with the pipelined
+    overlap model (see :meth:`CollectiveBackend.cost`)."""
     if names is None:
         names = supporting(p)
     costs = {}
     for n in sorted(names):
         b = get(n)
         if b.supports(p):
-            costs[n] = b.cost(m_bytes, p, prm, chunk_compute_s)
+            costs[n] = b.cost(m_bytes, p, prm, chunk_compute_s, n_chunks=n_chunks, fused=fused)
     if not costs:
         raise ValueError(f"no registered backend supports P={p}")
     return min(costs, key=costs.__getitem__)
@@ -164,6 +206,8 @@ def cheapest_pair(
     *,
     names: Optional[Iterable[str]] = None,
     chunk_compute_s: float = 0.0,
+    n_chunks: Optional[int] = None,
+    fused: bool = True,
 ) -> Tuple[str, str]:
     """Per-axis cost-model argmin for a pencil grid: (backend_row,
     backend_col), each the :func:`cheapest` shard_map backend for its
@@ -180,8 +224,10 @@ def cheapest_pair(
     else:
         names = [n for n in names if get(n).kind == "shard_map"]
         row_names = col_names = names
-    row = cheapest(m_bytes, p_rows, prm, names=row_names, chunk_compute_s=chunk_compute_s)
-    col = cheapest(m_bytes, p_cols, prm, names=col_names, chunk_compute_s=chunk_compute_s)
+    row = cheapest(m_bytes, p_rows, prm, names=row_names,
+                   chunk_compute_s=chunk_compute_s, n_chunks=n_chunks, fused=fused)
+    col = cheapest(m_bytes, p_cols, prm, names=col_names,
+                   chunk_compute_s=chunk_compute_s, n_chunks=n_chunks, fused=fused)
     return row, col
 
 
@@ -196,10 +242,11 @@ class AllToAllBackend(CollectiveBackend):
 
     name = "alltoall"
 
-    def transpose(self, x, axis_name, chunk_fn=None):
+    def transpose(self, x, axis_name, chunk_fn=None, *, n_chunks=None):
         return tr._alltoall(x, axis_name)
 
-    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0, *,
+             n_chunks=None, fused=True):
         # monolithic: all p chunk computes serialize after the collective
         return cm.t_alltoall(m_bytes, p, prm) + max(p, 1) * chunk_compute_s
 
@@ -213,11 +260,21 @@ class ScatterBackend(CollectiveBackend):
     name = "scatter"
     supports_chunk_fn = True
 
-    def transpose(self, x, axis_name, chunk_fn=None):
-        return tr._scatter(x, axis_name, chunk_fn)
+    def transpose(self, x, axis_name, chunk_fn=None, *, n_chunks=None):
+        return tr._scatter(x, axis_name, chunk_fn, n_chunks)
 
-    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
-        return cm.t_scatter_ring(m_bytes, p, prm, chunk_compute_s)
+    def stream_reduce(self, x, axis_name, chunk_fn, *, n_chunks=None):
+        return tr._chunked_reduce(x, axis_name, chunk_fn, tr._ring_schedule, n_chunks)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0, *,
+             n_chunks=None, fused=True):
+        if not fused:
+            # streaming transport, but compute serialized after it (the
+            # unfused discipline the pipelined executor replaces)
+            return cm.t_scatter_ring(m_bytes, p, prm, 0.0, n_chunks=n_chunks) + (
+                max(p, 1) * chunk_compute_s
+            )
+        return cm.t_scatter_ring(m_bytes, p, prm, chunk_compute_s, n_chunks=n_chunks)
 
 
 @register
@@ -228,10 +285,11 @@ class BisectionBackend(CollectiveBackend):
 
     name = "bisection"
 
-    def transpose(self, x, axis_name, chunk_fn=None):
+    def transpose(self, x, axis_name, chunk_fn=None, *, n_chunks=None):
         return tr._bisection(x, axis_name)
 
-    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0, *,
+             n_chunks=None, fused=True):
         # monolithic: all p chunk computes serialize after the collective
         return cm.t_bisection(m_bytes, p, prm) + max(p, 1) * chunk_compute_s
 
@@ -248,11 +306,19 @@ class PairwiseXorBackend(CollectiveBackend):
     def supports(self, p: int) -> bool:
         return p >= 1 and (p & (p - 1)) == 0
 
-    def transpose(self, x, axis_name, chunk_fn=None):
-        return tr._pairwise_xor(x, axis_name, chunk_fn)
+    def transpose(self, x, axis_name, chunk_fn=None, *, n_chunks=None):
+        return tr._pairwise_xor(x, axis_name, chunk_fn, n_chunks)
 
-    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
-        return cm.t_pairwise(m_bytes, p, prm, chunk_compute_s)
+    def stream_reduce(self, x, axis_name, chunk_fn, *, n_chunks=None):
+        return tr._chunked_reduce(x, axis_name, chunk_fn, tr._swap_schedule, n_chunks)
+
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0, *,
+             n_chunks=None, fused=True):
+        if not fused:
+            return cm.t_pairwise(m_bytes, p, prm, 0.0, n_chunks=n_chunks) + (
+                max(p, 1) * chunk_compute_s
+            )
+        return cm.t_pairwise(m_bytes, p, prm, chunk_compute_s, n_chunks=n_chunks)
 
 
 @register
@@ -265,6 +331,7 @@ class XlaAutoBackend(CollectiveBackend):
     name = "xla_auto"
     kind = "global"
 
-    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0):
+    def cost(self, m_bytes, p, prm=CommParams(), chunk_compute_s=0.0, *,
+             n_chunks=None, fused=True):
         # monolithic: all p chunk computes serialize after the collective
         return cm.t_alltoall(m_bytes, p, prm) + max(p, 1) * chunk_compute_s

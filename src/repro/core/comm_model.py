@@ -172,17 +172,39 @@ def t_alltoall(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
     return prm.alpha_s + (1 - 1 / p) * m_bytes / prm.beta_bytes_s
 
 
+def effective_chunks(p: int, n_chunks: Optional[int] = None) -> int:
+    """Total chunks of a streaming exchange under an ``n_chunks`` target:
+    ``q * p`` where ``q = ceil(n_chunks / p)`` sub-chunks per peer block
+    (``None``/``<= p`` keeps the classic one-per-peer schedule). The
+    model-side twin of :func:`repro.core.transpose.subchunks_per_peer` --
+    the executed q additionally snaps to a divisor of the peer block's
+    row count, which the byte-level model ignores."""
+    if not n_chunks or n_chunks <= p:
+        return max(p, 1)
+    return max(1, -(-int(n_chunks) // p)) * max(p, 1)
+
+
 def t_scatter_ring(m_bytes: float, p: int, prm: CommParams = CommParams(),
-                   chunk_compute_s: float = 0.0) -> float:
-    """P-1 direct sends of M/P each; per-chunk compute overlaps the next
-    send (fully, if chunk_compute <= chunk_comm). When per-chunk compute
-    exceeds per-chunk comm, the difference is exposed on every step, and
-    the last chunk's compute is always exposed (nothing left to overlap)."""
+                   chunk_compute_s: float = 0.0,
+                   n_chunks: Optional[int] = None) -> float:
+    """Streaming ring: (P-1)*q direct sends of M/(P*q) each (q sub-chunks
+    per peer block, q=1 classically); per-sub-chunk compute overlaps the
+    next send (fully, if sub-chunk compute <= sub-chunk comm). When
+    compute exceeds comm, the difference is exposed on every step, and
+    the last sub-chunk's compute is always exposed (nothing left to
+    overlap). ``chunk_compute_s`` stays *per peer chunk* (there are P),
+    so costs stay comparable across n_chunks: sub-chunking splits the
+    same compute into q finer, better-hiding pieces while paying q-1
+    extra message latencies per peer."""
     if p <= 1:
         return max(chunk_compute_s, 0.0)
-    per_chunk = prm.alpha_s + (m_bytes / p) / prm.beta_bytes_s
-    exposed = max(0.0, chunk_compute_s - per_chunk) * (p - 1)
-    return (p - 1) * per_chunk + chunk_compute_s + exposed
+    n = effective_chunks(p, n_chunks)
+    q = n // p
+    msgs = (p - 1) * q
+    per_msg = prm.alpha_s + (m_bytes / n) / prm.beta_bytes_s
+    sub_compute = chunk_compute_s / q
+    exposed = max(0.0, sub_compute - per_msg) * msgs
+    return msgs * per_msg + sub_compute + exposed
 
 
 def t_bisection(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float:
@@ -197,14 +219,16 @@ def t_bisection(m_bytes: float, p: int, prm: CommParams = CommParams()) -> float
 
 
 def t_pairwise(m_bytes: float, p: int, prm: CommParams = CommParams(),
-               chunk_compute_s: float = 0.0) -> float:
+               chunk_compute_s: float = 0.0,
+               n_chunks: Optional[int] = None) -> float:
     """Pairwise XOR exchange: P-1 rounds, round s swapping the M/P chunk
     with partner (rank XOR s) -- the classic MPI_Alltoall fallback, for
     power-of-two P. Same bytes and chunk streaming as the scatter ring
     (chunks arrive incrementally, so per-chunk compute overlaps the next
-    round identically); it differs in schedule, not overlap: symmetric
-    bidirectional swaps instead of a one-directional ring walk."""
-    return t_scatter_ring(m_bytes, p, prm, chunk_compute_s)
+    round identically, and sub-chunked pipelining applies identically);
+    it differs in schedule, not overlap: symmetric bidirectional swaps
+    instead of a one-directional ring walk."""
+    return t_scatter_ring(m_bytes, p, prm, chunk_compute_s, n_chunks)
 
 
 #: Sub-axis exchanges per pencil transform, (n_row, n_col): fft3 is one
@@ -236,6 +260,8 @@ def t_pencil_axis(
     chunk_compute_s: float = 0.0,
     *,
     first_m_bytes: Optional[float] = None,
+    n_chunks: Optional[int] = None,
+    fused: bool = True,
 ) -> float:
     """Predicted seconds of all of one grid axis's sub-exchanges: the
     axis's backend costed at the axis's own sub-ring size. The single
@@ -245,14 +271,21 @@ def t_pencil_axis(
     ``first_m_bytes`` sizes the axis's *first* exchange separately --
     the real pencil rfft2's first cols exchange ships the untransformed
     real block while every later exchange carries the Hermitian-truncated
-    complex payload (see :mod:`repro.core.real`)."""
+    complex payload (see :mod:`repro.core.real`). ``n_chunks``/``fused``
+    thread the pipelined overlap model through to the backend cost."""
     from repro.core import backends  # late: backends imports this module
 
     b = backends.get(backend)
     if first_m_bytes is None:
-        return n_exchanges * b.cost(m_bytes, p_axis, prm, chunk_compute_s)
-    return b.cost(first_m_bytes, p_axis, prm, chunk_compute_s) + (
-        (n_exchanges - 1) * b.cost(m_bytes, p_axis, prm, chunk_compute_s)
+        return n_exchanges * b.cost(
+            m_bytes, p_axis, prm, chunk_compute_s, n_chunks=n_chunks, fused=fused
+        )
+    return b.cost(
+        first_m_bytes, p_axis, prm, chunk_compute_s, n_chunks=n_chunks, fused=fused
+    ) + (
+        (n_exchanges - 1) * b.cost(
+            m_bytes, p_axis, prm, chunk_compute_s, n_chunks=n_chunks, fused=fused
+        )
     )
 
 
@@ -268,6 +301,8 @@ def t_pencil(
     transpose_back: bool = False,
     chunk_compute_s: float = 0.0,
     first_col_m_bytes: Optional[float] = None,
+    n_chunks: Optional[int] = None,
+    fused: bool = True,
 ) -> float:
     """Predicted seconds of one pencil transform's communication: each
     sub-axis exchange costed by its *own* backend at its *own* sub-ring
@@ -283,10 +318,13 @@ def t_pencil(
     block (the r2c pass needs the axis local first).
     """
     n_row, n_col = pencil_exchanges(ndim, transpose_back)
-    return t_pencil_axis(m_bytes, p_rows, backend_row, n_row, prm, chunk_compute_s) + (
+    return t_pencil_axis(
+        m_bytes, p_rows, backend_row, n_row, prm, chunk_compute_s,
+        n_chunks=n_chunks, fused=fused,
+    ) + (
         t_pencil_axis(
             m_bytes, p_cols, backend_col, n_col, prm, chunk_compute_s,
-            first_m_bytes=first_col_m_bytes,
+            first_m_bytes=first_col_m_bytes, n_chunks=n_chunks, fused=fused,
         )
     )
 

@@ -15,13 +15,17 @@ then the second dimension's local FFT. Output is the transposed spectrum
 F^T (C sharded) by default -- standard for pencil FFT libraries -- or the
 natural layout with ``transpose_back=True`` (one more exchange).
 
-``fuse_dft=True`` (beyond-paper, scatter strategy only) goes further than
-the paper's "transpose chunks on arrival": it folds the *second
-dimension's DFT itself* into the ring via decimation across source ranks
-(R = P*r, DFT_R = DFT_P across ranks x twiddle x DFT_r within chunks).
-Each arriving chunk contributes W_P[:, src] (x) chunk to the accumulator,
-so the post-communication serial FFT_R disappears into the ring. See
-EXPERIMENTS.md §Perf for the roofline accounting.
+``fused=True`` (beyond-paper, any chunk-streaming strategy) goes further
+than the paper's "transpose chunks on arrival": it folds the *next
+dimension's DFT itself* into the exchange via decimation across source
+ranks (R = P*r, DFT_R = DFT_P across ranks x twiddle x DFT_r within
+chunks). Each arriving (sub-)chunk contributes W_P[:, src] (x) chunk to
+the accumulator, so the post-communication serial FFT_R disappears into
+the flight time -- the pipelined overlap executor
+(:func:`repro.core.transpose.transpose_then_fft`), shared by the 3-D
+slab chain, both pencil legs and the r2c subsystem. ``fuse_dft`` is the
+legacy fft2-only spelling and is honoured as an alias; ``n_chunks``
+decouples the streamed chunk count from P (see ``plan_fft(pipeline=)``).
 """
 
 from __future__ import annotations
@@ -39,8 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 import repro.core.fftmath as lf
 import repro.core.transpose as tr
 from repro.core import backends
-from repro.core.compat import axis_size, shard_map
-from repro.core.overlap import ring_scatter_reduce
+from repro.core.compat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -54,44 +57,39 @@ def _fft_local_then_transpose(
     *,
     strategy: tr.Strategy,
     impl: lf.LocalImpl,
+    n_chunks: Optional[int] = None,
 ) -> jax.Array:
     """Steps 1-4 for one dimension: local FFT along the contiguous axis,
     then the strategy-switched pencil exchange."""
     y = lf.local_fft(x, axis=-1, impl=impl)
-    return tr.distributed_transpose(y, axis_name, strategy=strategy)
+    return tr.distributed_transpose(y, axis_name, strategy=strategy, n_chunks=n_chunks)
 
 
-def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> jax.Array:
-    """fft2 second dimension folded into the ring (fuse_dft=True).
+def _fft2_fused_scatter(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    impl: lf.LocalImpl,
+    strategy: tr.Strategy = "scatter",
+    n_chunks: Optional[int] = None,
+) -> jax.Array:
+    """fft2 second dimension folded into the exchange (fused execution).
 
     After the row FFT, the column DFT of length R = P*r decomposes across
     source ranks (decimation in time with n1 = P, n2 = r):
 
         F[k1 + P*k2] = DFT_r over j2 [ T[k1, j2] * sum_src W_P[k1, src] * chunk_src[j2] ]
 
-    The inner sum is exactly a ring_scatter_reduce whose per-chunk compute
-    is a cheap rank-1 outer product -- fully overlapped with the sends.
+    The inner sum streams through the backend's own chunk schedule with a
+    cheap rank-1 outer product per arriving (sub-)chunk -- fully
+    overlapped with the in-flight sends. The shared implementation is
+    :func:`repro.core.transpose.transpose_then_fft`, which the 3-D slab,
+    pencil and r2c chains ride too.
     """
     y = lf.local_fft(x, axis=-1, impl=impl)
-    p = axis_size(axis_name)
-    r = y.shape[-2]
-    w_p = jnp.asarray(lf._dft_matrix_np(p))  # (k1, src)
-
-    def chunk_fn(chunk: jax.Array, src: jax.Array) -> jax.Array:
-        # chunk (..., r, c) = rows [src*r,...) x my column block; transpose
-        # to (..., c, r) then expand across the k1 dimension.
-        ct = jnp.swapaxes(chunk, -1, -2)  # (..., c, j2=r)
-        col = lax.dynamic_slice_in_dim(w_p, src, 1, axis=1)[:, 0]  # (k1=p,)
-        return ct[..., None, :] * col[:, None]  # (..., c, k1=p, j2=r)
-
-    acc = ring_scatter_reduce(y, axis_name, chunk_fn, split_axis=-1)
-    # Twiddle T[k1, j2] = w_n^(k1*j2), then DFT over j2 -> k2.
-    tw = jnp.asarray(lf._twiddle_np(p, r))
-    acc = acc * tw
-    acc = lf.local_fft(acc, axis=-1, impl=impl)  # (..., c, k1=p, k2=r)
-    # F index k = k1 + P*k2 -> order (k2 major, k1 minor).
-    out = jnp.swapaxes(acc, -1, -2)  # (..., c, k2, k1)
-    return out.reshape(out.shape[:-2] + (p * r,))
+    return tr.transpose_then_fft(
+        y, axis_name, strategy=strategy, impl=impl, fused=True, n_chunks=n_chunks
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -101,21 +99,38 @@ def _fft2_fused_scatter(x: jax.Array, axis_name: str, *, impl: lf.LocalImpl) -> 
 
 @dataclasses.dataclass(frozen=True)
 class FFTConfig:
-    """Legacy transform config. New code should use ``plan_fft`` (see
-    :mod:`repro.core.plan`); kept as a thin carrier for one release so
+    """Transform config carrier. New code should use ``plan_fft`` (see
+    :mod:`repro.core.plan`, which resolves ``pipeline=`` into the
+    ``fused``/``n_chunks`` fields here); kept as a thin carrier so
     existing call sites keep working. ``strategy`` names any backend
-    registered in :mod:`repro.core.backends`."""
+    registered in :mod:`repro.core.backends`.
+
+    ``fused`` folds each exchange's following FFT stage into the arriving
+    chunks on streaming backends (the pipelined overlap executor);
+    ``n_chunks`` decouples the streamed chunk count from P (sub-chunked
+    transport + finer compute grain). ``fuse_dft`` is the legacy
+    fft2-only spelling of ``fused`` and is honoured as an alias."""
 
     strategy: str = "alltoall"
     local_impl: lf.LocalImpl = "jnp"
-    fuse_dft: bool = False  # scatter-only: fold 2nd-dim DFT into the ring
+    fuse_dft: bool = False  # legacy alias: fold 2nd-dim DFT into the ring
     transpose_back: bool = False  # return natural (row-sharded) layout
+    fused: bool = False  # streaming backends: fuse the next FFT stage
+    n_chunks: Optional[int] = None  # total-chunk target (None = P)
+
+
+def _wants_fused(cfg: FFTConfig) -> bool:
+    return cfg.fused or cfg.fuse_dft
 
 
 def _check(cfg: FFTConfig) -> backends.CollectiveBackend:
     backend = backends.get(cfg.strategy)  # raises listing the registry
-    if cfg.fuse_dft and cfg.strategy != "scatter":
-        raise ValueError("fuse_dft requires strategy='scatter'")
+    if _wants_fused(cfg) and not (backend.kind == "shard_map" and backend.supports_chunk_fn):
+        raise ValueError(
+            f"fuse_dft/fused requires a chunk-streaming backend "
+            f"(got {cfg.strategy!r}; streaming: "
+            f"{[b for b in backends.available() if backends.get(b).supports_chunk_fn]})"
+        )
     return backend
 
 
@@ -140,13 +155,21 @@ def fft2(
 
     def fn(xl: jax.Array) -> jax.Array:
         v = jnp.conj(xl) if inverse else xl
-        if cfg.fuse_dft:
-            out = _fft2_fused_scatter(v, axis_name, impl=cfg.local_impl)
+        if _wants_fused(cfg):
+            out = _fft2_fused_scatter(
+                v, axis_name, impl=cfg.local_impl, strategy=cfg.strategy,
+                n_chunks=cfg.n_chunks,
+            )
         else:
-            out = _fft_local_then_transpose(v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl)
+            out = _fft_local_then_transpose(
+                v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+                n_chunks=cfg.n_chunks,
+            )
             out = lf.local_fft(out, axis=-1, impl=cfg.local_impl)
         if cfg.transpose_back:
-            out = tr.distributed_transpose(out, axis_name, strategy=cfg.strategy)
+            out = tr.distributed_transpose(
+                out, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+            )
         if inverse:
             out = jnp.conj(out) / (x.shape[-1] * x.shape[-2])
         return out
@@ -205,9 +228,15 @@ def fft3(
         v = jnp.conj(xl) if inverse else xl
         v = lf.local_fft2(v, impl=cfg.local_impl)  # over (D1, D2), both local
         flat = v.reshape(v.shape[:-2] + (d1 * d2,))  # (..., d0_local, D1*D2)
-        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
-        t = lf.local_fft(t, axis=-1, impl=cfg.local_impl)  # along D0
-        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        # D0 pass: exchange + FFT, fused into the arriving chunks on
+        # streaming backends (the pipelined overlap executor)
+        t = tr.transpose_then_fft(
+            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+            fused=_wants_fused(cfg), n_chunks=cfg.n_chunks,
+        )
+        back = tr.distributed_transpose(
+            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+        )
         out = back.reshape(v.shape)
         if inverse:
             out = jnp.conj(out) / (d0 * d1 * d2)
@@ -250,24 +279,31 @@ def fft1d_large(
         me = lax.axis_index(axis_name)
         # local rows block of A = x.reshape(R, C): (..., R/p, C)
         a = xl.reshape(xl.shape[:-1] + (r // p, c))
-        # exchange 1: localize columns j2; FFT_R over j1 -> k1
-        t1 = tr.distributed_transpose(a, axis_name, strategy=cfg.strategy)
-        g = lf.local_fft(t1, axis=-1, impl=cfg.local_impl)  # (..., C/p, R)
+        # exchange 1: localize columns j2; FFT_R over j1 -> k1 -- fused
+        # into the arriving chunks on streaming backends
+        g = tr.transpose_then_fft(
+            a, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+            fused=_wants_fused(cfg), n_chunks=cfg.n_chunks,
+        )  # (..., C/p, R)
 
         # Twiddle w_n^(j2*k1). Under a chunk-streaming backend it is fused
-        # into exchange 2's per-chunk compute (applied to each chunk as it
-        # arrives -- the paper's 'hide computation behind communication');
-        # otherwise applied up-front to the whole block.
+        # into exchange 2's per-chunk compute (applied to each sub-chunk
+        # as it arrives -- the paper's 'hide computation behind
+        # communication'); otherwise applied up-front to the whole block.
         if backend.supports_chunk_fn:
 
-            def tw_chunk(chunk: jax.Array, src: jax.Array) -> jax.Array:
-                # chunk (..., R/p, C/p): my k1 block x src's j2 block.
+            def tw_chunk(chunk: jax.Array, src: jax.Array, offset: int) -> jax.Array:
+                # chunk (..., R/p, rows): my k1 block x src's j2 rows
+                # [offset, offset+rows) of its C/p block.
                 k1 = me * (r // p) + jnp.arange(r // p)
-                j2 = src * (c // p) + jnp.arange(c // p)
+                j2 = src * (c // p) + offset + jnp.arange(chunk.shape[-1])
                 tw = jnp.exp(-2j * jnp.pi * (k1[:, None] * j2[None, :]) / n)
                 return chunk * tw.astype(chunk.dtype)
 
-            t2 = tr.distributed_transpose(g, axis_name, strategy=cfg.strategy, chunk_fn=tw_chunk)
+            t2 = tr.distributed_transpose(
+                g, axis_name, strategy=cfg.strategy, chunk_fn=tw_chunk,
+                n_chunks=cfg.n_chunks,
+            )
         else:
             j2 = me * (c // p) + jnp.arange(c // p)
             k1 = jnp.arange(r)
@@ -276,7 +312,9 @@ def fft1d_large(
         f = lf.local_fft(t2, axis=-1, impl=cfg.local_impl)  # (..., R/p, C): F[k1, k2]
         # X[k2*R + k1] = F[k1, k2]  =>  natural order is F^T flattened; one
         # final exchange re-shards k2 and emits X contiguously.
-        t3 = tr.distributed_transpose(f, axis_name, strategy=cfg.strategy)
+        t3 = tr.distributed_transpose(
+            f, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+        )
         return t3.reshape(xl.shape[:-1] + (c // p * r,))
 
     ndim = x.ndim

@@ -40,26 +40,28 @@ MAX_DFT = 512
 
 
 @functools.lru_cache(maxsize=64)
-def _dft_matrix_np(n: int) -> np.ndarray:
-    """DFT matrix W[k, j] = exp(-2*pi*i*k*j/n), computed in float64."""
+def _dft_matrix_np(n: int, dtype: str = "complex64") -> np.ndarray:
+    """DFT matrix W[k, j] = exp(-2*pi*i*k*j/n), computed in float64 and
+    cast to ``dtype`` (the fused exchange stages keep complex128 tables
+    so c128 transforms stay at double precision)."""
     k = np.arange(n, dtype=np.float64)
-    return np.exp(-2j * np.pi * np.outer(k, k) / n).astype(np.complex64)
+    return np.exp(-2j * np.pi * np.outer(k, k) / n).astype(dtype)
 
 
 @functools.lru_cache(maxsize=64)
-def _twiddle_np(n1: int, n2: int) -> np.ndarray:
+def _twiddle_np(n1: int, n2: int, dtype: str = "complex64") -> np.ndarray:
     """Four-step twiddle T[k1, j2] = exp(-2*pi*i*k1*j2/(n1*n2)), float64."""
     k1 = np.arange(n1, dtype=np.float64)
     j2 = np.arange(n2, dtype=np.float64)
-    return np.exp(-2j * np.pi * np.outer(k1, j2) / (n1 * n2)).astype(np.complex64)
+    return np.exp(-2j * np.pi * np.outer(k1, j2) / (n1 * n2)).astype(dtype)
 
 
-def dft_matrix(n: int) -> jax.Array:
-    return jnp.asarray(_dft_matrix_np(n))
+def dft_matrix(n: int, dtype="complex64") -> jax.Array:
+    return jnp.asarray(_dft_matrix_np(n, np.dtype(dtype).name))
 
 
-def twiddle(n1: int, n2: int) -> jax.Array:
-    return jnp.asarray(_twiddle_np(n1, n2))
+def twiddle(n1: int, n2: int, dtype="complex64") -> jax.Array:
+    return jnp.asarray(_twiddle_np(n1, n2, np.dtype(dtype).name))
 
 
 def split_factor(n: int, max_dft: int = MAX_DFT) -> int:

@@ -58,12 +58,22 @@ class PencilConfig:
     transforms. ``backend_row``/``backend_col`` name registered
     shard_map backends; they are resolved and validated independently
     (the 2-D parcelport switch). ``transpose_back`` applies to
-    ``pencil_fft3`` only -- ``pencil_fft2`` is already natural-layout."""
+    ``pencil_fft3`` only -- ``pencil_fft2`` is already natural-layout.
+
+    ``fused`` folds each sub-exchange's following FFT pass into the
+    arriving chunks *independently per leg*: the row and col exchanges
+    each fuse exactly when their own backend streams, so a mixed pair
+    like ``("scatter", "bisection")`` pipelines the rows leg and runs
+    the cols leg monolithically. ``n_chunks`` is the per-exchange
+    total-chunk target (sub-chunked transport; see
+    :func:`repro.core.transpose.subchunks_per_peer`)."""
 
     backend_row: str = "alltoall"
     backend_col: str = "alltoall"
     local_impl: lf.LocalImpl = "jnp"
     transpose_back: bool = False
+    fused: bool = False
+    n_chunks: "int | None" = None
 
 
 def _check_backends(cfg: PencilConfig, grid: ProcessGrid) -> None:
@@ -138,20 +148,30 @@ def pencil_fft3(
     def fn(xl: jax.Array) -> jax.Array:
         v = jnp.conj(xl) if inverse else xl
         # pass 1: D2 is local -- FFT it, then the cols sub-exchange
-        # swaps (D1, D2): (x_r, y_c, D2) -> (x_r, z_c, D1)
+        # swaps (D1, D2): (x_r, y_c, D2) -> (x_r, z_c, D1) with the D1
+        # FFT (pass 2) fused into the arriving chunks when backend_col
+        # streams -- each leg pipelines independently
         v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
-        # pass 2: D1 now local; the rows sub-exchange needs the
-        # rows-sharded D0 at position -2: (x_r, z_c, D1)->(z_c, x_r, D1)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.transpose_then_fft(
+            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
+            fused=cfg.fused, n_chunks=cfg.n_chunks,
+        )
+        # pass 3 prep: the rows sub-exchange needs the rows-sharded D0
+        # at position -2: (x_r, z_c, D1) -> (z_c, x_r, D1); the D0 FFT
+        # fuses into the rows exchange when backend_row streams
         v = jnp.swapaxes(v, -3, -2)
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
-        # pass 3: D0 local: (z_c, y_r, D0)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        v = tr.transpose_then_fft(
+            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=cfg.fused, n_chunks=cfg.n_chunks,
+        )  # (z_c, y_r, D0), D0 transformed
         if cfg.transpose_back:
-            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+            v = tr.distributed_transpose(
+                v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
+            )
             v = jnp.swapaxes(v, -3, -2)
-            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+            v = tr.distributed_transpose(
+                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+            )
         if inverse:
             v = jnp.conj(v) / (d0 * d1 * d2)
         return v
@@ -193,17 +213,28 @@ def pencil_fft2(
         v = jnp.conj(xl) if inverse else xl
         # pass A -- transform C over the cols sub-ring. The cols
         # exchange wants the cols-sharded dim at -2 and a fully-local
-        # dim at -1: (r_r, c_c) -> (c_c, r_r) -> T_col -> (r_rc, C).
+        # dim at -1: (r_r, c_c) -> (c_c, r_r) -> T_col -> (r_rc, C),
+        # with the C FFT fused into the arriving chunks when
+        # backend_col streams (the transpose-back stays monolithic --
+        # nothing follows it to fuse)
         v = jnp.swapaxes(v, -1, -2)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+        v = tr.transpose_then_fft(
+            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
+            fused=cfg.fused, n_chunks=cfg.n_chunks,
+        )
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )
         v = jnp.swapaxes(v, -1, -2)  # back to (r_r, c_c), C-dim done
         # pass B -- transform R over the rows sub-ring: (r_r, c_c) is
         # already (rows-sharded, local): T_row -> (c_cr, R).
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+        v = tr.transpose_then_fft(
+            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=cfg.fused, n_chunks=cfg.n_chunks,
+        )
+        v = tr.distributed_transpose(
+            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
+        )
         if inverse:
             v = jnp.conj(v) / (r_glob * c_glob)
         return v

@@ -76,6 +76,30 @@ def pair_key(backend_row: str, backend_col: str) -> str:
     return f"{backend_row}{PAIR_SEP}{backend_col}"
 
 
+def pipeline_is_default(pipeline) -> bool:
+    """Whether a ``pipeline=`` value is the default ("auto") setting.
+    Identity-checked for True/None: ``1 == True`` in Python, but
+    ``pipeline=1`` is an explicit one-chunk request, not the default."""
+    return pipeline == "auto" or pipeline is True or pipeline is None
+
+
+def _warn_real_fuse_dft() -> bool:
+    """The old hard error ("real transforms have no fused path") is dead:
+    the pipelined overlap executor IS that path, and it is on by default
+    wherever a streaming backend is selected. One warning, attributed to
+    the caller of whichever entry point (plan_fft / Plan) saw the flag
+    (stacklevel: helper -> entry point -> caller). Returns the
+    replacement fuse_dft value."""
+    warnings.warn(
+        "fuse_dft on real plans is deprecated and ignored: r2c/c2r "
+        "chains fuse streaming exchanges by default -- control it "
+        "with plan_fft(..., pipeline=...)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return False
+
+
 class SpectralAxis(NamedTuple):
     """One output axis of a plan's frequency-domain (spectrum) layout.
 
@@ -145,6 +169,7 @@ class Plan:
         col_axis: Optional[str] = None,
         real: bool = False,
         pad: bool = True,
+        pipeline="auto",
     ):
         from repro.core.sharding import fft_axis
 
@@ -159,9 +184,28 @@ class Plan:
                 "1-D real transform is not implemented: complexify and use ndim=1 c2c"
             )
         if real and fuse_dft:
+            fuse_dft = _warn_real_fuse_dft()
+        if isinstance(backend, str) and "@" in backend:
+            # measured-planner candidate ids ("scatter@u", "scatter@f16",
+            # Plan.backend of a variant winner) are valid backend specs:
+            # the suffix is a pipeline override, so backend=plan.backend
+            # always round-trips
+            from repro.core.planner import parse_variant
+
+            backend, pipe_override = parse_variant(backend)
+            if not pipeline_is_default(pipeline):
+                raise ValueError(
+                    f"backend variant suffix and pipeline={pipeline!r} "
+                    f"both specify the pipeline; pass one or the other"
+                )
+            pipeline = pipe_override
+        if not (
+            pipeline in ("auto", True, False, None)
+            or (isinstance(pipeline, int) and not isinstance(pipeline, bool) and pipeline >= 0)
+        ):
             raise ValueError(
-                "fuse_dft folds a c2c DFT into the scatter ring; real plans "
-                "have no fused path -- use real=False or fuse_dft=False"
+                f"pipeline must be 'auto', True/False, or a chunk-count int "
+                f">= 0, got {pipeline!r}"
             )
         if ndim == 1 and direction == "inverse":
             # fail at plan time, not first execute (validate-once contract)
@@ -198,6 +242,10 @@ class Plan:
         self.transpose_back = transpose_back
         self.params = params or cm.CommParams()
         self.chunk_compute_s = chunk_compute_s
+        self.pipeline = "auto" if (pipeline is True or pipeline is None) else pipeline
+        #: resolved by _resolve_pipeline once the backend(s) are known
+        self.fused: bool = False
+        self.n_chunks: Optional[int] = None
         # set by the measured planner (repro.core.planner.plan_measured)
         self.planner = "estimate"
         self.measured: Optional[Dict[str, float]] = None
@@ -255,7 +303,7 @@ class Plan:
                         backend=backend, axis_name=trial_ax, local_impl=local_impl,
                         fuse_dft=fuse_dft, transpose_back=transpose_back, dtype=dtype,
                         params=params, chunk_compute_s=chunk_compute_s, decomp="slab",
-                        real=real, pad=pad,
+                        real=real, pad=pad, pipeline=self.pipeline,
                     )
                 except (ValueError, NotImplementedError):
                     trial = None
@@ -281,6 +329,66 @@ class Plan:
                     raise
         self._cache: Dict[Tuple[str, str], jax.stages.Wrapped] = {}
         self.compiles = 0  # jit wrappers created (not per-shape recompiles)
+
+    # -- pipelined overlap resolution -------------------------------------------
+    def _pipeline_enabled(self) -> bool:
+        """Whether ``pipeline=`` allows fusing at all (off only when the
+        caller passed False/0)."""
+        return self.pipeline not in (False, 0)
+
+    def _pipeline_n_chunks(self) -> Optional[int]:
+        if isinstance(self.pipeline, int) and not isinstance(self.pipeline, bool):
+            return int(self.pipeline) if self.pipeline > 0 else None
+        return None
+
+    def _resolve_pipeline(self) -> None:
+        """Resolve ``pipeline=`` against the selected backend(s): fused
+        execution wherever a chunk-streaming backend rides a >1-shard
+        ring (pencil legs resolve independently inside the transforms --
+        ``fused`` here records whether ANY leg fuses, which is what the
+        cost model overlaps)."""
+        self.n_chunks = self._pipeline_n_chunks()
+        if not self._pipeline_enabled():
+            # explicit pipeline=False wins over the legacy fuse_dft alias
+            # too (the config layer gets fuse_dft=False below), so one
+            # knob disables fusion everywhere
+            self.fused = False
+            return
+        if self.decomp == "pencil":
+            legs = (
+                (self.backend_row, self.grid.p_rows),
+                (self.backend_col, self.grid.p_cols),
+            )
+            self.fused = any(
+                backends.get(b).supports_chunk_fn and p > 1 for b, p in legs
+            )
+        else:
+            b = self.backend_obj
+            self.fused = bool(
+                b.kind == "shard_map" and b.supports_chunk_fn and self.shards > 1
+            )
+
+    def _auto_chunk_compute_s(self, dtype=None) -> float:
+        """Per-peer-chunk seconds of the fused stage's compute: the
+        caller's ``chunk_compute_s`` when given, else a memory-bound
+        napkin -- each arriving chunk's outer-product contribution
+        writes one local block's worth of accumulator
+        (``_cost_bytes / HBM_BW``). This is what lets ``predict()`` and
+        ``backend='auto'`` price fused (overlapped) against unfused
+        (serialized) stage compute without the user measuring anything.
+        Zero when no exchange ring exceeds one shard -- there is no
+        exchange to fuse into, and charging phantom per-chunk compute
+        would skew degenerate-grid decomp='auto' comparisons."""
+        if self.chunk_compute_s:
+            return self.chunk_compute_s
+        rings = (
+            max(self.grid.p_rows, self.grid.p_cols)
+            if self.decomp == "pencil"
+            else self.shards
+        )
+        if rings <= 1:
+            return 0.0
+        return self._cost_bytes(dtype) / cm.HBM_BW
 
     def _init_slab(self, backend: str) -> None:
         p = self.shards
@@ -326,21 +434,33 @@ class Plan:
             )
         if backend == "auto":
             backend = "scatter" if self.fuse_dft else backends.cheapest(
-                self._cost_bytes(), p, self.params, chunk_compute_s=self.chunk_compute_s
+                self._cost_bytes(), p, self.params,
+                chunk_compute_s=self._auto_chunk_compute_s(),
+                n_chunks=self._pipeline_n_chunks(),
+                fused=self._pipeline_enabled(),
             )
         self.backend_obj = backends.get(backend)  # raises listing the registry
         self.backend = backend
         self.backend_row = self.backend_col = None
         if not self.backend_obj.supports(p):
             raise ValueError(f"backend {backend!r} does not support P={p}")
-        if self.fuse_dft and backend != "scatter":
-            raise ValueError("fuse_dft requires backend='scatter'")
+        if self.fuse_dft and not self.backend_obj.supports_chunk_fn:
+            raise ValueError(
+                f"fuse_dft requires a chunk-streaming backend (got "
+                f"{backend!r}; streaming: "
+                f"{[b for b in backends.available() if backends.get(b).supports_chunk_fn]})"
+            )
+        self._resolve_pipeline()
 
         self._cfg = FFTConfig(
             strategy=backend,
             local_impl=self.local_impl,  # type: ignore[arg-type]
-            fuse_dft=self.fuse_dft,
+            # pipeline=False disables the legacy alias at the config
+            # layer too, so the plan's fused flag IS the execution truth
+            fuse_dft=self.fuse_dft and self._pipeline_enabled(),
             transpose_back=self.transpose_back,
+            fused=self.fused,
+            n_chunks=self.n_chunks,
         )
 
     def _init_pencil(self, backend, row_axis: Optional[str], col_axis: Optional[str]) -> None:
@@ -372,18 +492,23 @@ class Plan:
                 self.grid.p_rows,
                 self.grid.p_cols,
                 self.params,
-                chunk_compute_s=self.chunk_compute_s,
+                chunk_compute_s=self._auto_chunk_compute_s(),
+                n_chunks=self._pipeline_n_chunks(),
+                fused=self._pipeline_enabled(),
             )
         else:
             br, bc = split_pair(backend)
         self.backend_row, self.backend_col = br, bc
         self.backend = pair_key(br, bc)
         self.backend_obj = None  # per-axis backends; see backend_row/col
+        self._resolve_pipeline()
         self._cfg = _pencil.PencilConfig(
             backend_row=br,
             backend_col=bc,
             local_impl=self.local_impl,  # type: ignore[arg-type]
             transpose_back=self.transpose_back,
+            fused=self.fused,
+            n_chunks=self.n_chunks,
         )
         _pencil._check_backends(self._cfg, self.grid)  # raises naming the axis
 
@@ -463,7 +588,14 @@ class Plan:
             col[0] = self.local_bytes(dtype)
         return tuple(row), tuple(col)
 
-    def predict(self, dtype=None, chunk_compute_s: Optional[float] = None) -> Dict[str, float]:
+    def predict(
+        self,
+        dtype=None,
+        chunk_compute_s: Optional[float] = None,
+        *,
+        fused: Optional[bool] = None,
+        n_chunks: Optional[int] = None,
+    ) -> Dict[str, float]:
         """Alpha-beta predicted seconds per backend for this problem.
 
         Slab: ``n_exchanges * backend.cost(local_bytes, P, params,
@@ -472,40 +604,61 @@ class Plan:
         shard_map backends, each axis costed at its own sub-ring size
         (P_row / P_col) by :func:`repro.core.comm_model.t_pencil` --
         see :meth:`predict_axes` for the per-axis decomposition.
-        ``chunk_compute_s`` (default: the plan's own) is per-chunk compute:
-        streaming backends overlap it with later rounds, monolithic ones
-        serialize it, so the overlap advantage shows up in the ranking.
-        Uses the plan's ``params`` -- pass a calibrated
-        :meth:`~repro.core.comm_model.CommParams.calibrate` result at plan
-        time for measured (rather than v5e napkin) constants."""
+
+        ``chunk_compute_s`` (default: the plan's own, else the
+        memory-bound stage estimate) is per-chunk compute;
+        ``fused``/``n_chunks`` (default: the plan's own resolution)
+        report the fused vs unfused variants of the same problem:
+        ``fused=True`` overlaps the stage compute on streaming backends,
+        ``fused=False`` serializes it everywhere (the monolithic
+        discipline), so ``predict(fused=True)`` vs ``predict(fused=False)``
+        is the modeled overlap win. Uses the plan's ``params`` -- pass a
+        calibrated :meth:`~repro.core.comm_model.CommParams.calibrate`
+        result at plan time for measured (rather than v5e napkin)
+        constants."""
+        fused = self.fused if fused is None else fused
+        n_chunks = self.n_chunks if n_chunks is None else n_chunks
         if self.decomp == "pencil":
-            row_costs, col_costs = self.predict_axes(dtype, chunk_compute_s)
+            row_costs, col_costs = self.predict_axes(
+                dtype, chunk_compute_s, fused=fused, n_chunks=n_chunks
+            )
             return {
                 pair_key(r, c): row_costs[r] + col_costs[c]
                 for r in row_costs
                 for c in col_costs
             }
         m = self._cost_bytes(dtype)
-        cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
+        cc = self._auto_chunk_compute_s(dtype) if chunk_compute_s is None else chunk_compute_s
         p = self.shards
         n_ex = self._slab_exchanges()
         out = {}
         for name in backends.available():
             b = backends.get(name)
             if b.supports(p):
-                out[name] = n_ex * b.cost(m, p, self.params, cc)
+                out[name] = n_ex * b.cost(
+                    m, p, self.params, cc, n_chunks=n_chunks, fused=fused
+                )
         return out
 
     def predict_axes(
-        self, dtype=None, chunk_compute_s: Optional[float] = None
+        self,
+        dtype=None,
+        chunk_compute_s: Optional[float] = None,
+        *,
+        fused: Optional[bool] = None,
+        n_chunks: Optional[int] = None,
     ) -> Tuple[Dict[str, float], Dict[str, float]]:
         """Pencil only: (row_costs, col_costs) -- per-backend predicted
         seconds of all of this transform's exchanges over that grid axis,
         each at its own sub-ring size. ``predict()[f"{r}+{c}"] ==
-        row_costs[r] + col_costs[c]`` by construction."""
+        row_costs[r] + col_costs[c]`` by construction. ``fused`` /
+        ``n_chunks`` as in :meth:`predict` (per-leg: a streaming backend
+        overlaps its own axis's stage compute independently)."""
         if self.decomp != "pencil":
             raise ValueError("predict_axes is a pencil-plan method; use predict()")
-        cc = self.chunk_compute_s if chunk_compute_s is None else chunk_compute_s
+        fused = self.fused if fused is None else fused
+        n_chunks = self.n_chunks if n_chunks is None else n_chunks
+        cc = self._auto_chunk_compute_s(dtype) if chunk_compute_s is None else chunk_compute_s
         row_blocks, col_blocks = self._pencil_blocks(dtype)
         out = []
         for p_axis, blocks in (
@@ -518,7 +671,7 @@ class Plan:
             out.append({
                 name: cm.t_pencil_axis(
                     blocks[-1], p_axis, name, len(blocks), self.params, cc,
-                    first_m_bytes=first,
+                    first_m_bytes=first, n_chunks=n_chunks, fused=fused,
                 )
                 for name in backends.supporting(p_axis, kind="shard_map")
             })
@@ -756,8 +909,32 @@ def plan_fft(
     col_axis: Optional[str] = None,
     real: bool = False,
     pad: bool = True,
+    pipeline="auto",
 ) -> Plan:
     """Plan a distributed FFT (the FFTW ``plan`` analogue).
+
+    ``pipeline`` controls the pipelined overlap executor -- whether each
+    exchange streams its chunks and fuses the following FFT stage into
+    their flight time (the paper's HPX-futures overlap, as dataflow):
+
+    ``"auto"`` (default)
+        Chunk-streamed, compute-fused exchanges wherever the selected
+        backend streams (``supports_chunk_fn``) over a >1-shard ring;
+        one chunk per peer. Monolithic backends are unaffected.
+    ``int n``
+        Fused, with the streamed chunk count decoupled from P: each
+        peer block is sub-chunked toward ``n`` total chunks per
+        exchange, so flight time amortizes even at small P (and the
+        per-arrival compute grain shrinks). ``Plan.n_chunks`` records
+        it; the executed sub-chunk count additionally snaps to a
+        divisor of the peer block rows.
+    ``False`` (or ``0``)
+        Disable: plain transpose + whole-axis local FFT, the
+        pre-pipeline behavior (what the ``overlap`` benchmark calls the
+        unfused monolithic run).
+
+    ``Plan.predict(fused=..., n_chunks=...)`` reports the model's fused
+    vs unfused cost for the same problem.
 
     ``real=True`` plans the r2c/c2r pair (:mod:`repro.core.real`):
     ``execute`` computes the distributed ``rfftn`` of a real array (and
@@ -815,6 +992,8 @@ def plan_fft(
     Pass any name from ``repro.core.backends.available()`` as
     ``backend=`` to pin the backend under either planner.
     """
+    if real and fuse_dft:
+        fuse_dft = _warn_real_fuse_dft()
     if planner not in ("estimate", "measure"):
         raise ValueError(f"planner must be 'estimate' or 'measure', got {planner!r}")
     if planner == "estimate" and (timer is not None or use_wisdom is not True):
@@ -844,6 +1023,7 @@ def plan_fft(
             col_axis=col_axis,
             real=real,
             pad=pad,
+            pipeline=pipeline,
         )
     return Plan(
         global_shape,
@@ -863,6 +1043,7 @@ def plan_fft(
         col_axis=col_axis,
         real=real,
         pad=pad,
+        pipeline=pipeline,
     )
 
 

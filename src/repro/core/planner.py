@@ -8,8 +8,11 @@ discipline for the distributed transforms:
 - :func:`plan_fft(..., planner="measure") <repro.core.plan.plan_fft>`
   times every registered backend that supports the shard count **on the
   real mesh** (warmup + median wall-clock, the same ``time_fn`` the
-  benchmarks use) and pins the plan to the measured argmin, recording
-  the full per-backend timing table on ``Plan.measured``;
+  benchmarks use) -- expanded to (backend, n_chunks, fused) variant
+  triples where the pipelined overlap executor applies (see
+  :func:`candidate_variants`) -- and pins the plan to the measured
+  argmin, recording the full per-candidate timing table on
+  ``Plan.measured``;
 - an FFTW-style **wisdom store** -- JSON, keyed by
   (shape, ndim, dtype, P, candidate backend set, device kind, and the
   decomposition: slab axis, or pencil grid shape + axes + per-axis
@@ -163,6 +166,89 @@ def candidate_backends(p: int, *, fuse_dft: bool = False) -> List[str]:
     return list(backends.supporting(p))
 
 
+#: Candidate-variant separator. A plain name is the backend at the
+#: caller's own pipeline setting (fused by default where streaming);
+#: ``name@u`` is the unfused monolithic run of the same backend, and
+#: ``name@f<k>`` the fused run with an n_chunks=k sub-chunked pipeline --
+#: the measured planner races these (backend, n_chunks, fused) triples.
+VARIANT_SEP = "@"
+
+
+def parse_variant(candidate: str):
+    """(base_backend, pipeline_override) of a measured-candidate id;
+    ``None`` override means 'the caller's own pipeline setting'."""
+    if VARIANT_SEP not in candidate:
+        return candidate, None
+    base, _, tag = candidate.rpartition(VARIANT_SEP)
+    if tag == "u":
+        return base, False
+    if tag.startswith("f") and tag[1:].isdigit():
+        return base, int(tag[1:])
+    raise ValueError(
+        f"unknown measured-candidate variant {candidate!r} "
+        f"(expected 'name', 'name@u' or 'name@f<n_chunks>')"
+    )
+
+
+def variant_id(base: str, pipeline_override) -> str:
+    """Inverse of :func:`parse_variant`: re-attach a pipeline override to
+    a (possibly pair-key) base backend name."""
+    if pipeline_override is None:
+        return base
+    if pipeline_override in (False, 0):
+        return f"{base}{VARIANT_SEP}u"
+    return f"{base}{VARIANT_SEP}f{int(pipeline_override)}"
+
+
+def predict_candidate(plan, candidate: str, pipeline="auto") -> float:
+    """Model prediction matching one measured candidate id: ``@u`` is
+    unfused, ``@f<k>`` fused with n_chunks=k, and a plain name resolves
+    to ``pipeline`` -- the setting the candidates were raced under
+    (default "auto" = fused wherever the backend streams) -- so benches
+    can print measured and model columns for the same
+    (backend, n_chunks, fused) triple."""
+    from repro.core.plan import pipeline_is_default
+
+    base, pipe = parse_variant(candidate)
+    if pipe is None and not pipeline_is_default(pipeline):
+        pipe = pipeline  # plain candidates ran at the race's own pipeline
+    fused = True if pipe is None else pipe not in (False, 0)
+    n_chunks = (
+        pipe if isinstance(pipe, int) and not isinstance(pipe, bool) and pipe > 0 else None
+    )
+    return plan.predict(fused=fused, n_chunks=n_chunks)[base]
+
+
+def candidate_variants(
+    names: List[str], *, decomp: str, p: int, p_rows: int = 1, p_cols: int = 1
+) -> List[str]:
+    """Expand plain backend candidates into (backend, n_chunks, fused)
+    triples: every streaming candidate additionally races its unfused
+    monolithic twin (``@u``) and -- slab only, to keep the pencil pair
+    field bounded -- a 2P-chunk sub-chunked pipeline (``@f2P``). Plain
+    names keep their default (fused) resolution, so an all-monolithic
+    field is byte-identical to the pre-pipeline candidate set (and its
+    wisdom keys): old wisdom never aliases a fused entry because any
+    field containing one has variant ids in its key."""
+    from repro.core import backends
+    from repro.core.plan import split_pair
+
+    out = list(names)
+    for nm in names:
+        if decomp == "pencil":
+            br, bc = split_pair(nm)
+            streams = (backends.get(br).supports_chunk_fn and p_rows > 1) or (
+                backends.get(bc).supports_chunk_fn and p_cols > 1
+            )
+        else:
+            streams = backends.get(nm).supports_chunk_fn and p > 1
+        if streams:
+            out.append(f"{nm}{VARIANT_SEP}u")
+            if decomp != "pencil":
+                out.append(f"{nm}{VARIANT_SEP}f{2 * p}")
+    return out
+
+
 def candidate_pairs(p_rows: int, p_cols: int) -> List[str]:
     """Every measurable ``"row+col"`` pair for a pencil grid: the cross
     product of shard_map backends supporting each sub-ring size (the
@@ -198,18 +284,26 @@ def plan_measured(
     col_axis: Optional[str] = None,
     real: bool = False,
     pad: bool = True,
+    pipeline="auto",
 ):
     """FFTW_MEASURE: time every candidate backend on the real mesh, pin
     the plan to the measured argmin, and remember the answer as wisdom.
 
     ``backend="auto"`` measures every registered backend supporting P --
     under ``decomp="pencil"``, every ``"row+col"`` pair of shard_map
-    backends supporting the sub-ring sizes. A pinned ``backend=`` name
-    (or pair) restricts the field to that one (the timing still lands on
-    ``Plan.measured``). ``timer(plan) -> seconds`` replaces the real
-    measurement when injected. Wisdom keys carry the decomposition and,
-    for pencil, the grid shape and axes, so slab and pencil winners (and
-    different grid shapes) never alias.
+    backends supporting the sub-ring sizes. With the default
+    ``pipeline="auto"`` the field expands to (backend, n_chunks, fused)
+    triples (see :func:`candidate_variants`): each streaming candidate
+    additionally races its unfused monolithic twin and -- slab -- a
+    sub-chunked pipeline, so the measured winner settles the overlap
+    question per problem, not per model. A pinned ``backend=`` name
+    (or pair) restricts the base field to that one (its variants still
+    race; the timings land on ``Plan.measured``). ``timer(plan) ->
+    seconds`` replaces the real measurement when injected. Wisdom keys
+    carry the decomposition, grid shape/axes, and the candidate-variant
+    set -- pre-pipeline wisdom (plain-name fields) imports cleanly and
+    can never alias a fused entry, whose field necessarily contains
+    variant ids.
     """
     import jax.numpy as jnp
 
@@ -218,13 +312,16 @@ def plan_measured(
     if dtype is None:
         dtype = jnp.float32 if real else jnp.complex64
 
-    def build(name: str) -> Plan:
-        return Plan(
+    def build(candidate: str) -> Plan:
+        base, pipe_override = parse_variant(candidate) if isinstance(
+            candidate, str
+        ) else (candidate, None)
+        plan = Plan(
             global_shape,
             mesh,
             ndim=ndim,
             direction=direction,
-            backend=name,
+            backend=base,
             axis_name=axis_name,
             local_impl=local_impl,
             fuse_dft=fuse_dft,
@@ -237,7 +334,11 @@ def plan_measured(
             col_axis=col_axis,
             real=real,
             pad=pad,
+            pipeline=pipeline if pipe_override is None else pipe_override,
         )
+        if pipe_override is not None:
+            plan.backend = candidate  # report the variant it actually is
+        return plan
 
     from repro.core.sharding import fft_axis
 
@@ -247,12 +348,29 @@ def plan_measured(
     # works under one decomposition steers auto the same way estimate does
     probe = build(backend)
     p = probe.shards
+    # a variant-suffixed pinned backend ("scatter@u", Plan.backend of a
+    # measured winner) pins the pipeline too: race that one candidate
+    from repro.core.plan import pipeline_is_default
+
+    pinned_pipe = None
+    if isinstance(backend, str) and backend != "auto":
+        backend, pinned_pipe = parse_variant(backend)
+    if pinned_pipe is not None and not pipeline_is_default(pipeline):
+        raise ValueError(
+            f"backend variant suffix and pipeline={pipeline!r} both specify "
+            f"the pipeline; pass one or the other"
+        )
+    race_variants = pipeline_is_default(pipeline) and pinned_pipe is None
     if probe.decomp == "pencil":
         grid = probe.grid
         if backend == "auto":
             names = candidate_pairs(grid.p_rows, grid.p_cols)
         else:
-            names = [pair_key(*split_pair(backend))]
+            names = [variant_id(pair_key(*split_pair(backend)), pinned_pipe)]
+        if race_variants:
+            names = candidate_variants(
+                names, decomp="pencil", p=p, p_rows=grid.p_rows, p_cols=grid.p_cols
+            )
         placement = (
             f"decomp=pencil,grid={grid.p_rows}x{grid.p_cols},"
             f"axes={grid.row_axis}+{grid.col_axis}"
@@ -262,7 +380,9 @@ def plan_measured(
         if backend == "auto":
             names = candidate_backends(p, fuse_dft=fuse_dft)
         else:
-            names = [backend]
+            names = [variant_id(backend, pinned_pipe)]
+        if race_variants:
+            names = candidate_variants(names, decomp="slab", p=p)
         placement = f"decomp=slab,ax={ax}"
     if not names:
         raise ValueError(f"no measurable backend supports P={p}")
@@ -287,6 +407,12 @@ def plan_measured(
             # both re-measure on a spurious pad= argument and orphan
             # every previously exported c2c wisdom entry
             + (f",real=1,pad={int(pad)}" if real else "")
+            # a pinned pipeline changes every candidate's execution, so
+            # it keys separately; the default ("auto") keeps the
+            # pre-pipeline byte format -- any field that can fuse
+            # already carries variant ids in its candidate set, so old
+            # wisdom can never alias a fused entry
+            + ("" if race_variants else f",pipe={pipeline}")
         ),
     )
     if use_wisdom and key in _WISDOM:

@@ -222,14 +222,29 @@ def _pad_last(v: jax.Array, count: int) -> jax.Array:
     return jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, count)])
 
 
-def _check_real_cfg(cfg) -> backends.CollectiveBackend:
-    backend = backends.get(cfg.strategy)
-    if cfg.fuse_dft:
-        raise ValueError(
-            "fuse_dft folds a c2c DFT into the scatter ring; the real "
-            "transforms have no fused path -- use fuse_dft=False"
+def _real_fused(cfg) -> bool:
+    """Whether this config asks for fused (chunk-streamed) exchanges.
+
+    ``fuse_dft`` used to hard-error here ("the real transforms have no
+    fused path"); the pipelined overlap executor IS that path now, so
+    the flag is honoured as a deprecated alias of ``fused`` -- new code
+    spells it ``plan_fft(..., pipeline=...)``."""
+    if getattr(cfg, "fuse_dft", False):
+        import warnings
+
+        warnings.warn(
+            "fuse_dft on real transforms is deprecated; the r2c/c2r chains "
+            "fuse streaming exchanges via the fused/n_chunks fields (or "
+            "plan_fft(..., pipeline=...)) -- treating it as fused=True",
+            DeprecationWarning,
+            stacklevel=3,
         )
-    return backend
+        return True
+    return cfg.fused
+
+
+def _check_real_cfg(cfg) -> backends.CollectiveBackend:
+    return backends.get(cfg.strategy)
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +269,7 @@ def rfft2(
     ``(..., R, H)`` layout with a second (equally truncated) exchange.
     """
     backend = _check_real_cfg(cfg)
+    fused = _real_fused(cfg)
     p = mesh.shape[axis_name]
     h, hp = check_divisible_slab(x.shape, p, 2, axis_name, pad=pad)
     if backend.kind == "global":
@@ -262,10 +278,16 @@ def rfft2(
     def fn(xl: jax.Array) -> jax.Array:
         v = _local_rfft(xl, cfg.local_impl)  # (..., r, H)
         v = _pad_last(v, hp - h)
-        v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)  # (..., hp/P, R)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        # exchange + R-axis FFT, fused into the Hermitian-truncated
+        # chunks in flight when the backend streams: (..., hp/P, R)
+        v = tr.transpose_then_fft(
+            v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks,
+        )
         if cfg.transpose_back:
-            v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)
+            v = tr.distributed_transpose(
+                v, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+            )
             v = v[..., :h]  # (..., r, H) exact
         return v
 
@@ -305,13 +327,23 @@ def irfft2(
             y, mesh, axis_name, n_last=n_last, h=h, transpose_back=cfg.transpose_back
         )
 
+    fused = _real_fused(cfg)
+
     def fn(yl: jax.Array) -> jax.Array:
         v = yl
         if cfg.transpose_back:  # natural (..., r, H): re-enter the spectral layout
             v = _pad_last(v, hp - h)
-            v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)
-        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
-        v = tr.distributed_transpose(v, axis_name, strategy=cfg.strategy)  # (..., r, Hp)
+            # the re-entry exchange + inverse R FFT fuse (conjugated
+            # decimation; the trailing transpose stays monolithic)
+            v = tr.transpose_then_fft(
+                v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+                fused=fused, n_chunks=cfg.n_chunks, inverse=True,
+            )
+        else:
+            v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
+        v = tr.distributed_transpose(
+            v, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+        )  # (..., r, Hp)
         return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (..., r, C), 1/C
 
     spec = P(*([None] * (y.ndim - 2)), axis_name, None)
@@ -345,14 +377,21 @@ def rfft3(
             in_shardings=sh, out_shardings=out_sh,
         )(x)
 
+    fused = _real_fused(cfg)
+
     def fn(xl: jax.Array) -> jax.Array:
         v = _local_rfft(xl, cfg.local_impl)  # (..., d0, D1, H)
         v = _pad_last(v, hp - h)
         v = lf.local_fft(v, axis=-2, impl=cfg.local_impl)  # c2c along D1
         flat = v.reshape(v.shape[:-2] + (d1 * hp,))
-        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
-        t = lf.local_fft(t, axis=-1, impl=cfg.local_impl)  # along D0
-        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        # exchange + D0 FFT fused into the truncated chunks in flight
+        t = tr.transpose_then_fft(
+            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks,
+        )
+        back = tr.distributed_transpose(
+            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+        )
         return back.reshape(v.shape)[..., :h]
 
     return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
@@ -388,12 +427,19 @@ def irfft3(
             in_shardings=sh, out_shardings=sh,
         )(y)
 
+    fused = _real_fused(cfg)
+
     def fn(yl: jax.Array) -> jax.Array:
         v = _pad_last(yl, hp - h)
         flat = v.reshape(v.shape[:-2] + (d1 * hp,))
-        t = tr.distributed_transpose(flat, axis_name, strategy=cfg.strategy)
-        t = lf.local_fft(t, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
-        back = tr.distributed_transpose(t, axis_name, strategy=cfg.strategy)
+        # exchange + inverse D0 FFT fused (conjugated decimation): 1/D0
+        t = tr.transpose_then_fft(
+            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
+        )
+        back = tr.distributed_transpose(
+            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
+        )
         v = back.reshape(v.shape)
         v = lf.local_fft(v, axis=-2, inverse=True, impl=cfg.local_impl)  # 1/D1
         return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
@@ -452,22 +498,33 @@ def pencil_rfft3(
     the exact natural ``(..., D0, D1, H)`` with two more sub-exchanges.
     """
     _check_backends(cfg, grid)
+    fused = _real_fused(cfg)
     h, hp = check_divisible_pencil(x.shape, grid, 3, pad=pad)
     row, col = grid.row_axis, grid.col_axis
 
     def fn(xl: jax.Array) -> jax.Array:
         v = _local_rfft(xl, cfg.local_impl)  # (..., d0r, d1c, H)
         v = _pad_last(v, hp - h)
-        # cols sub-exchange swaps (D1, Hp): (d0r, d1c, Hp) -> (d0r, hp_c, D1)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        # cols sub-exchange swaps (D1, Hp) with the D1 FFT fused into
+        # the truncated chunks: (d0r, d1c, Hp) -> (d0r, hp_c, D1)
+        v = tr.transpose_then_fft(
+            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks,
+        )
         v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d1r, D0)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
+        # rows sub-exchange + D0 FFT, fused independently per leg
+        v = tr.transpose_then_fft(
+            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks,
+        )  # (hp_c, d1r, D0)
         if cfg.transpose_back:
-            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)
+            v = tr.distributed_transpose(
+                v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
+            )
             v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
-            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)
+            v = tr.distributed_transpose(
+                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+            )
             v = v[..., :h]  # (d0r, d1c, H) exact
         return v
 
@@ -505,19 +562,32 @@ def pencil_irfft3(
             f"(transpose_back={cfg.transpose_back}, pad={pad})"
         )
     row, col = grid.row_axis, grid.col_axis
+    fused = _real_fused(cfg)
 
     def fn(yl: jax.Array) -> jax.Array:
         v = yl
         if cfg.transpose_back:  # natural (d0r, d1c, H): re-enter the spectral layout
             v = _pad_last(v, hp - h)
-            v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (d0r, hp_c, D1)
+            v = tr.distributed_transpose(
+                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+            )  # (d0r, hp_c, D1)
             v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
-            v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d1r, D0)
-        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_c, d0r, D1)
-        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D1
+            # re-entry rows exchange + inverse D0 FFT fuse: (hp_c, d1r, D0)
+            v = tr.transpose_then_fft(
+                v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+                fused=fused, n_chunks=cfg.n_chunks, inverse=True,
+            )  # 1/D0
+        else:
+            v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
+        # rows exchange + inverse D1 FFT fuse: (hp_c, d0r, D1), 1/D1
+        v = tr.transpose_then_fft(
+            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
+        )
         v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (d0r, d1c, Hp)
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )  # (d0r, d1c, Hp)
         return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
 
     lead = [None] * (y.ndim - 3)
@@ -551,19 +621,31 @@ def pencil_rfft2(
     h, hp = check_divisible_pencil(x.shape, grid, 2, pad=pad)
     row, col = grid.row_axis, grid.col_axis
 
+    fused = _real_fused(cfg)
+
     def fn(xl: jax.Array) -> jax.Array:
         # pass A -- localize C over the cols sub-ring (real payload),
-        # r2c it, and re-shard the truncated half spectrum back
+        # r2c it, and re-shard the truncated half spectrum back (the r2c
+        # pass itself stays local -- its input is real, not a c2c stage)
         v = jnp.swapaxes(xl, -1, -2)  # (c_c, r_r)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (r_rc, C)
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )  # (r_rc, C)
         v = _local_rfft(v, cfg.local_impl)  # (r_rc, H)
         v = _pad_last(v, hp - h)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (hp_c, r_r)
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )  # (hp_c, r_r)
         v = jnp.swapaxes(v, -1, -2)  # (r_r, hp_c)
-        # pass B -- c2c transform R over the rows sub-ring (half payload)
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (hp_rc, R)
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (r_r, hp_c)
+        # pass B -- c2c transform R over the rows sub-ring (half
+        # payload), the R FFT fused into the arriving chunks
+        v = tr.transpose_then_fft(
+            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks,
+        )  # (hp_rc, R)
+        v = tr.distributed_transpose(
+            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
+        )  # (r_r, hp_c)
         return v
 
     spec = P(*([None] * (x.ndim - 2)), row, col)
@@ -598,14 +680,25 @@ def pencil_irfft2(
         )
     row, col = grid.row_axis, grid.col_axis
 
+    fused = _real_fused(cfg)
+
     def fn(yl: jax.Array) -> jax.Array:
-        v = tr.distributed_transpose(yl, row, strategy=cfg.backend_row)  # (hp_rc, R)
-        v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
-        v = tr.distributed_transpose(v, row, strategy=cfg.backend_row)  # (r_r, hp_c)
+        # rows exchange + inverse R FFT fuse: (hp_rc, R), 1/R
+        v = tr.transpose_then_fft(
+            yl, row, strategy=cfg.backend_row, impl=cfg.local_impl,
+            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
+        )
+        v = tr.distributed_transpose(
+            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
+        )  # (r_r, hp_c)
         v = jnp.swapaxes(v, -1, -2)  # (hp_c, r_r)
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (r_rc, Hp)
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )  # (r_rc, Hp)
         v = _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (r_rc, C), 1/C
-        v = tr.distributed_transpose(v, col, strategy=cfg.backend_col)  # (c_c, r_r)
+        v = tr.distributed_transpose(
+            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
+        )  # (c_c, r_r)
         return jnp.swapaxes(v, -1, -2)  # (r_r, c_c)
 
     spec = P(*([None] * (y.ndim - 2)), row, col)

@@ -21,6 +21,21 @@ switchable *collective lowering strategy* over the fixed ICI fabric:
     messages. Fewer, larger messages -- wins when per-message latency
     (the paper's TCP-overhead regime, Fig. 3) dominates. Beyond-paper.
 
+**Pipelining (``n_chunks``).** The streaming exchanges decouple the chunk
+count from P: each peer block can be sub-chunked into ``q`` pieces so the
+exchange ships ``(P-1)*q`` smaller messages. Every send still uses a
+pre-existing slice of the input (double buffering as dataflow: no send
+depends on any chunk_fn result), so sub-chunk t's compute hides behind
+sub-chunk t+1's flight -- even at P=2, where the classic per-peer
+streaming has a single round and nothing to overlap.
+
+**Compute fusion.** :func:`transpose_then_fft` folds the *next FFT
+pass* into the exchange on streaming backends: the length-R DFT after a
+transpose decomposes over source ranks (decimation in time, j = src*r +
+j2), so each arriving chunk contributes a rank-1 outer product with one
+DFT-matrix column -- cheap, and fully overlapped with the remaining
+sends. Monolithic backends fall back to transpose + local FFT.
+
 All strategies are SPMD-uniform (masks/permutations do not branch on the
 device id except through ``lax.axis_index`` arithmetic) and are validated
 against each other and a numpy routing simulation in tests.
@@ -32,6 +47,7 @@ rows ``R = P*r`` are sharded over ``axis_name``; the transposed result is
 
 from __future__ import annotations
 
+import inspect
 from typing import Callable, Optional
 
 import jax
@@ -45,10 +61,16 @@ from repro.core.compat import axis_size as _axis_size
 #: defines the valid set.
 Strategy = str
 
-#: chunk_fn(chunk, src_index) -> processed chunk. ``chunk`` is the
+#: chunk_fn(chunk, src) -> processed chunk. ``chunk`` is the
 #: (..., r, c) block received from shard ``src_index``, already transposed
-#: to (..., c, r) when ``pre_transposed`` -- see _scatter below.
-ChunkFn = Callable[[jax.Array, jax.Array], jax.Array]
+#: to (..., c, r) when ``pre_transposed`` -- see _scatter below. A
+#: chunk_fn may instead take (chunk, src, offset): under sub-chunked
+#: pipelining it then receives each (..., c, r/q) piece as it arrives,
+#: with ``offset`` the (static) starting index within the source block's
+#: r rows -- position-dependent fusions (twiddles, DFT columns) stay
+#: correct per sub-chunk. Two-argument chunk_fns are only ever handed
+#: whole peer blocks (sub-chunking then pipelines the transport alone).
+ChunkFn = Callable[..., jax.Array]
 
 
 def _split_chunks(x: jax.Array, p: int) -> jax.Array:
@@ -72,6 +94,51 @@ def _transpose_local(x: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Pipelining helpers
+# ---------------------------------------------------------------------------
+
+
+def subchunks_per_peer(r: int, p: int, n_chunks: Optional[int]) -> int:
+    """Sub-chunks q per peer block for an ``n_chunks`` total-chunk target:
+    the largest divisor of ``r`` (the peer block's row count) not above
+    ceil(n_chunks / p). ``None`` or ``n_chunks <= p`` keeps the classic
+    one-chunk-per-peer schedule. Shared by the exchanges and the cost
+    model (:func:`repro.core.comm_model.effective_chunks`) so the modeled
+    message count is the executed one."""
+    if not n_chunks or n_chunks <= p:
+        return 1
+    q = min(max(1, -(-int(n_chunks) // p)), r)
+    while r % q:
+        q -= 1
+    return q
+
+
+def _chunk_fn_arity(fn: ChunkFn) -> int:
+    """2 when ``fn`` takes (chunk, src), 3 when it also takes the
+    sub-chunk row offset (see :data:`ChunkFn`)."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # builtins / exotic callables
+        return 2
+    n = 0
+    for prm in sig.parameters.values():
+        if prm.kind == inspect.Parameter.VAR_POSITIONAL:
+            return 3
+        if prm.kind in (
+            inspect.Parameter.POSITIONAL_ONLY,
+            inspect.Parameter.POSITIONAL_OR_KEYWORD,
+        ):
+            n += 1
+    return 3 if n >= 3 else 2
+
+
+def _call_chunk_fn(fn: ChunkFn, arity: int, chunk, src, offset: int):
+    if arity >= 3:
+        return fn(chunk, src, offset)
+    return fn(chunk, src)
+
+
+# ---------------------------------------------------------------------------
 # Strategy: fused all-to-all (the paper's synchronized collective)
 # ---------------------------------------------------------------------------
 
@@ -92,61 +159,139 @@ def _chunked_exchange(
     axis_name: str,
     chunk_fn: Optional[ChunkFn],
     schedule,
+    n_chunks: Optional[int] = None,
 ) -> jax.Array:
-    """Shared P-1-round chunk-streaming exchange.
+    """Shared chunk-streaming exchange: P-1 peer rounds, each shipped as
+    ``q`` sub-chunk messages (``q`` from :func:`subchunks_per_peer`).
 
     ``schedule(me, s, p)`` defines round s: the static ppermute ``perm``,
     the chunk slot this rank ships, and the source rank of the chunk it
-    receives. Each received chunk is transposed (and optionally further
+    receives. Each received piece is transposed (and optionally further
     processed by ``chunk_fn``) immediately -- 'the arriving data chunks
     can be transposed as soon as they are received' (paper, §3).
 
-    Dataflow note: every send uses a *pre-existing* chunk of the input, so
-    no ppermute depends on any chunk_fn result. XLA is free to issue the
-    next round while the previous chunk's transpose/compute runs; on TPU
-    the sends lower to async collective-permute-start/done pairs.
+    Dataflow note (the double buffer): every send uses a *pre-existing*
+    slice of the input, so no ppermute depends on any chunk_fn result.
+    XLA is free to issue the next message while the previous piece's
+    transpose/compute runs; on TPU the sends lower to async
+    collective-permute-start/done pairs, giving the overlapped pipeline
+    without explicit buffer management.
     """
     p = _axis_size(axis_name)
     me = lax.axis_index(axis_name)
     chunks = _split_chunks(x, p)  # (p, ..., r, c)
     r, c = x.shape[-2], x.shape[-1] // p
+    q = subchunks_per_peer(r, p, n_chunks)
+    rq = r // q
+    arity = _chunk_fn_arity(chunk_fn) if chunk_fn is not None else 3
+    per_sub = chunk_fn is None or arity >= 3
 
-    def process(chunk: jax.Array, src: jax.Array) -> jax.Array:
-        out = _transpose_local(chunk)  # (..., c, r)
+    def sub(block: jax.Array, t: int) -> jax.Array:
+        return lax.slice_in_dim(block, t * rq, (t + 1) * rq, axis=-2)
+
+    def process(piece: jax.Array, src: jax.Array, offset: int) -> jax.Array:
+        out = _transpose_local(piece)  # (..., c, rows)
         if chunk_fn is not None:
-            out = chunk_fn(out, src)
+            out = _call_chunk_fn(chunk_fn, arity, out, src, offset)
         return out
 
+    # parts: (src, col_offset, processed (..., c, rows)) in arrival order.
+    parts = []
+
+    def rounds(block: jax.Array, src, perm=None):
+        if per_sub:
+            for t in range(q):
+                piece = sub(block, t)
+                if perm is not None:
+                    piece = lax.ppermute(piece, axis_name, perm)
+                parts.append((src, t * rq, process(piece, src, t * rq)))
+        else:
+            # 2-arg chunk_fn: stream the transport, process the whole
+            # reassembled peer block (position-blind fusions only)
+            pieces = []
+            for t in range(q):
+                piece = sub(block, t)
+                if perm is not None:
+                    piece = lax.ppermute(piece, axis_name, perm)
+                pieces.append(_transpose_local(piece))
+            whole = pieces[0] if q == 1 else jnp.concatenate(pieces, axis=-1)
+            parts.append((src, 0, chunk_fn(whole, src)))
+
     # Own chunk (round 0) -- compute immediately, no communication.
+    rounds(jnp.take(chunks, me, axis=0), me)
+    for s in range(1, p):
+        perm, send_slot, src = schedule(me, s, p)
+        rounds(jnp.take(chunks, send_slot, axis=0), src, perm)
+
+    # Assemble (..., c, R): the piece from src j at row offset o supplies
+    # columns [j*r + o, j*r + o + rows).
+    out_shape = x.shape[:-2] + (c, p * r)
+    out = jnp.zeros(out_shape, parts[0][2].dtype)
+    for src, off, part in parts:
+        out = lax.dynamic_update_slice_in_dim(out, part, src * r + off, axis=out.ndim - 1)
+    return out
+
+
+def _chunked_reduce(
+    x: jax.Array,
+    axis_name: str,
+    chunk_fn: ChunkFn,
+    schedule,
+    n_chunks: Optional[int] = None,
+) -> jax.Array:
+    """Streaming exchange-and-accumulate: like :func:`_chunked_exchange`
+    but the per-source results are *summed*, not concatenated -- the
+    shape the fused DFT stage needs (each arriving chunk contributes to
+    every output frequency of the cross-rank dimension).
+
+    ``chunk_fn(chunk, src, offset)`` receives the RAW (untransposed)
+    received piece (..., rows, c) -- rows ``[offset, offset + rows)`` of
+    source ``src``'s block -- and returns an array whose LAST axis is
+    that source-row axis. Results sum over sources at equal offsets and
+    concatenate along the last axis across offsets. Sub-chunking via
+    ``n_chunks`` splits each peer block so compute streams into flight
+    time even at small P.
+    """
+    p = _axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    chunks = _split_chunks(x, p)  # (p, ..., r, c)
+    r = x.shape[-2]
+    q = subchunks_per_peer(r, p, n_chunks)
+    rq = r // q
+
+    def sub(block: jax.Array, t: int) -> jax.Array:
+        return lax.slice_in_dim(block, t * rq, (t + 1) * rq, axis=-2)
+
     own = jnp.take(chunks, me, axis=0)
-    parts = [(me, process(own, me))]
+    parts = [chunk_fn(sub(own, t), me, t * rq) for t in range(q)]
     for s in range(1, p):
         perm, send_slot, src = schedule(me, s, p)
         send = jnp.take(chunks, send_slot, axis=0)
-        recv = lax.ppermute(send, axis_name, perm)
-        parts.append((src, process(recv, src)))
+        for t in range(q):
+            recv = lax.ppermute(sub(send, t), axis_name, perm)
+            parts[t] = parts[t] + chunk_fn(recv, src, t * rq)
+    return parts[0] if q == 1 else jnp.concatenate(parts, axis=-1)
 
-    # Assemble (..., c, R): chunk from src j supplies columns [j*r, (j+1)*r).
-    out_shape = x.shape[:-2] + (c, p * r)
-    out = jnp.zeros(out_shape, x.dtype)
-    for src, part in parts:
-        out = lax.dynamic_update_slice_in_dim(out, part, src * r, axis=out.ndim - 1)
-    return out
+
+def _ring_schedule(me, s, p):
+    # round s: ship the chunk destined to me+s; receive from me-s
+    return [(i, (i + s) % p) for i in range(p)], (me + s) % p, (me - s) % p
+
+
+def _swap_schedule(me, s, p):
+    # round s: both ship to and receive from the same partner me^s
+    return [(i, i ^ s) for i in range(p)], me ^ s, me ^ s
 
 
 def _scatter(
     x: jax.Array,
     axis_name: str,
     chunk_fn: Optional[ChunkFn] = None,
+    n_chunks: Optional[int] = None,
 ) -> jax.Array:
     """P-1 direct sends, a one-directional ring walk over distances
     1..P-1 -- the paper's N-scatter decomposition."""
-
-    def ring(me, s, p):
-        # round s: ship the chunk destined to me+s; receive from me-s
-        return [(i, (i + s) % p) for i in range(p)], (me + s) % p, (me - s) % p
-
-    return _chunked_exchange(x, axis_name, chunk_fn, ring)
+    return _chunked_exchange(x, axis_name, chunk_fn, _ring_schedule, n_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +345,7 @@ def _pairwise_xor(
     x: jax.Array,
     axis_name: str,
     chunk_fn: Optional[ChunkFn] = None,
+    n_chunks: Optional[int] = None,
 ) -> jax.Array:
     """Pairwise exchange: round s swaps one chunk with partner (me XOR s).
 
@@ -210,16 +356,11 @@ def _pairwise_xor(
     ``chunk_fn`` processing overlaps the next round exactly as in
     ``scatter``.
     """
-
-    def swap(me, s, p):
-        # round s: both ship to and receive from the same partner me^s
-        return [(i, i ^ s) for i in range(p)], me ^ s, me ^ s
-
-    return _chunked_exchange(x, axis_name, chunk_fn, swap)
+    return _chunked_exchange(x, axis_name, chunk_fn, _swap_schedule, n_chunks)
 
 
 # ---------------------------------------------------------------------------
-# Public entry point
+# Public entry points
 # ---------------------------------------------------------------------------
 
 
@@ -229,6 +370,7 @@ def distributed_transpose(
     *,
     strategy: str = "alltoall",
     chunk_fn: Optional[ChunkFn] = None,
+    n_chunks: Optional[int] = None,
 ) -> jax.Array:
     """Transpose a (..., R, C) array whose R axis is sharded over
     ``axis_name`` into a (..., C, R) array with C sharded. Must be called
@@ -237,7 +379,11 @@ def distributed_transpose(
     ``strategy`` names a registered :mod:`repro.core.backends` backend;
     ``chunk_fn`` is only honoured by chunk-streaming backends
     (``backend.supports_chunk_fn`` -- the monolithic collectives have
-    nothing to interleave, exactly the paper's point).
+    nothing to interleave, exactly the paper's point). ``n_chunks``
+    (streaming backends, a performance hint elsewhere ignored) decouples
+    the message count from P: each peer block is shipped as
+    ~``n_chunks/P`` sub-messages so per-chunk compute pipelines into
+    flight time even on short rings.
     """
     from repro.core import backends  # late import: backends registers over us
 
@@ -263,8 +409,91 @@ def distributed_transpose(
     if p == 1:
         y = _transpose_local(x)
         if chunk_fn is not None:
-            y = chunk_fn(y, jnp.asarray(0))
+            y = _call_chunk_fn(chunk_fn, _chunk_fn_arity(chunk_fn), y, jnp.asarray(0), 0)
         return y
     if not backend.supports(p):
         raise ValueError(f"backend {strategy!r} does not support P={p}")
-    return backend.transpose(x, axis_name, chunk_fn)
+    return backend.transpose(x, axis_name, chunk_fn, n_chunks=n_chunks)
+
+
+def transpose_then_fft(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    strategy: str,
+    impl: str = "jnp",
+    fused: bool = False,
+    n_chunks: Optional[int] = None,
+    inverse: bool = False,
+) -> jax.Array:
+    """The pipelined overlap executor's unit step: transpose
+    (..., r, C) -> (..., c, R) and FFT the result along its last (R)
+    axis -- with the cross-rank stage of that FFT folded into the
+    arriving chunks when ``fused`` and the backend streams.
+
+    Decimation in time over source ranks (global row j = src*r + j2,
+    output frequency k = k1 + P*k2):
+
+        F[k1 + P*k2] = DFT_r over j2 [ T[k1, j2] * sum_src W_P[k1, src] * chunk_src[j2] ]
+
+    The inner sum streams through :func:`_chunked_reduce`: each arriving
+    chunk's contribution is a rank-1 outer product with one W_P column
+    (times the elementwise twiddle) -- cheap VPU work hidden behind the
+    remaining sends. After the exchange only a *local* length-r FFT and
+    the k-order relayout remain. The same identity conjugated gives the
+    inverse transform (tables conjugate; the trailing local FFT carries
+    1/r and the stage adds the remaining 1/P).
+
+    Unfused (or monolithic-backend, or P=1) calls lower to the plain
+    transpose followed by a whole-axis local FFT -- numerically the same
+    transform, nothing overlapped.
+    """
+    import repro.core.fftmath as lf
+    from repro.core import backends  # late import: backends registers over us
+
+    backend = backends.get(strategy)
+    p = _axis_size(axis_name)
+    if not (fused and backend.supports_chunk_fn and p > 1):
+        y = distributed_transpose(x, axis_name, strategy=strategy, n_chunks=n_chunks)
+        return lf.local_fft(y, axis=-1, inverse=inverse, impl=impl)
+    # same guards the plain transpose enforces -- the fused path must not
+    # trade its friendly errors for a reshape blow-up in _split_chunks
+    if x.shape[-1] % p:
+        raise ValueError(
+            f"column count {x.shape[-1]} not divisible by the {p} shards of "
+            f"mesh axis {axis_name!r} (plan-level shapes are validated by "
+            f"plan_fft; direct callers must pre-chunk)"
+        )
+    if not backend.supports(p):
+        raise ValueError(f"backend {strategy!r} does not support P={p}")
+
+    r = x.shape[-2]
+    cdtype = jnp.result_type(x.dtype, jnp.complex64)
+    w_p = jnp.asarray(lf.dft_matrix(p, cdtype))  # (k1, src)
+    tw = jnp.asarray(lf.twiddle(p, r, cdtype))  # (k1, j2)
+    if inverse:
+        w_p, tw = jnp.conj(w_p), jnp.conj(tw)
+
+    use_pallas = impl == "pallas" and jnp.dtype(cdtype) == jnp.complex64
+
+    def chunk_fn(chunk: jax.Array, src: jax.Array, offset: int) -> jax.Array:
+        # chunk (..., rows, c) = rows [offset, offset+rows) of src's block.
+        rows = chunk.shape[-2]
+        col = lax.dynamic_slice_in_dim(w_p, src, 1, axis=1)[:, 0]  # (k1=p,)
+        tws = lax.slice_in_dim(tw, offset, offset + rows, axis=1)  # (p, rows)
+        m = col[:, None] * tws  # (k1, j2) for this piece
+        if use_pallas:
+            from repro.kernels import fft_stage
+
+            return fft_stage.chunk_twiddle_pack_c64(chunk, m)
+        ct = _transpose_local(chunk)  # (..., c, rows)
+        return ct[..., None, :] * m  # (..., c, k1=p, j2=rows)
+
+    acc = backend.stream_reduce(x.astype(cdtype), axis_name, chunk_fn, n_chunks=n_chunks)
+    acc = lf.local_fft(acc, axis=-1, inverse=inverse, impl=impl)  # j2 -> k2 (1/r if inverse)
+    # F index k = k1 + P*k2 -> order (k2 major, k1 minor).
+    out = _transpose_local(acc)  # (..., c, k2=r, k1=p)
+    out = out.reshape(out.shape[:-2] + (p * r,))
+    if inverse:
+        out = out / p  # completes the 1/(p*r) = 1/R factor
+    return out

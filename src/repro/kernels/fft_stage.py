@@ -124,6 +124,71 @@ def stage_left(
     return tuple(fn(wr, wi, ar, ai, tr, ti))
 
 
+def _chunk_twiddle_pack_kernel(cr_ref, ci_ref, mr_ref, mi_ref, or_ref, oi_ref):
+    """out[b, j, k, t] = chunk[b, t, j] * m[k, t] (complex, planar).
+
+    One launch fuses the per-arrival work of the pipelined overlap
+    executor's chunk callback: the (rows, c) -> (c, rows) relayout of the
+    received chunk AND the W_P-column x twiddle broadcast multiply that
+    spreads it across the k1 dimension -- previously a transpose copy
+    plus a separate elementwise multiply, each round-tripping the chunk
+    through memory."""
+    cr, ci = cr_ref[0], ci_ref[0]  # (rows, c)
+    mr, mi = mr_ref[...], mi_ref[...]  # (p, rows)
+    ctr, cti = cr.T, ci.T  # (c, rows) -- the pack, in-register
+    a = ctr[:, None, :]  # (c, 1, rows)
+    b = cti[:, None, :]
+    or_ref[0] = a * mr[None] - b * mi[None]  # (c, p, rows)
+    oi_ref[0] = a * mi[None] + b * mr[None]
+
+
+def chunk_twiddle_pack_c64(chunk: jax.Array, m: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Fused twiddle+pack for one arriving exchange chunk (complex64).
+
+    ``chunk``: (..., rows, c) -- the raw received piece (rows of the
+    source block x my column block); ``m``: (p, rows) -- the W_P column
+    for this source times the four-step twiddle slice for these rows.
+    Returns (..., c, p, rows): the chunk's contribution to the fused
+    DFT stage's accumulator (see
+    :func:`repro.core.transpose.transpose_then_fft`), computed in a
+    single kernel launch instead of a relayout copy + twiddle multiply.
+    """
+    if chunk.dtype != jnp.complex64 or m.dtype != jnp.complex64:
+        raise ValueError(
+            f"chunk_twiddle_pack_c64 is a planar-f32 kernel; got "
+            f"{chunk.dtype}/{m.dtype} (c128 callers use the jnp path)"
+        )
+    lead = chunk.shape[:-2]
+    rows, c = chunk.shape[-2:]
+    p = m.shape[0]
+    if m.shape != (p, rows):
+        raise ValueError(f"m must be (p, rows)=({p}, {rows}), got {m.shape}")
+    flat = chunk.reshape((-1, rows, c))
+    B = flat.shape[0]
+    cr, ci = jnp.real(flat), jnp.imag(flat)
+    mr, mi = jnp.real(m), jnp.imag(m)
+    out_shape = [jax.ShapeDtypeStruct((B, c, p, rows), jnp.float32)] * 2
+    fn = pl.pallas_call(
+        _chunk_twiddle_pack_kernel,
+        grid=(B,),
+        in_specs=[
+            _bs((1, rows, c), lambda b: (b, 0, 0)),
+            _bs((1, rows, c), lambda b: (b, 0, 0)),
+            _bs((p, rows), lambda b: (0, 0)),
+            _bs((p, rows), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            _bs((1, c, p, rows), lambda b: (b, 0, 0, 0)),
+            _bs((1, c, p, rows), lambda b: (b, 0, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    o_re, o_im = fn(cr, ci, mr, mi)
+    out = jax.lax.complex(o_re, o_im)  # complex64 even under x64
+    return out.reshape(lead + (c, p, rows))
+
+
 def stage_right(
     a: Tuple[jax.Array, jax.Array],
     w: Tuple[jax.Array, jax.Array],

@@ -13,14 +13,20 @@ from __future__ import annotations
 
 from hypothesis import given, settings, strategies as st
 
-#: odd leading batch sizes -- regression territory for chunking bugs
-BATCHES = st.sampled_from([1, 3, 5, 7])
-DECOMPS = st.sampled_from(["slab", "pencil"])
-NDIMS = st.sampled_from([2, 3])
+#: The single value field both transform families (and the fused-vs-
+#: unfused overlap sweep in tests/test_pipeline.py) draw from -- plain
+#: tuples so subprocess suites can reuse the exact parametrization.
+BATCH_VALUES = (1, 3, 5, 7)  # odd batches: regression territory for chunking bugs
+DECOMP_VALUES = ("slab", "pencil")
+NDIM_VALUES = (2, 3)
+LAST_N_VALUES = (6, 7, 8)  # even and odd Hermitian cases for r2c
+
+BATCHES = st.sampled_from(list(BATCH_VALUES))
+DECOMPS = st.sampled_from(list(DECOMP_VALUES))
+NDIMS = st.sampled_from(list(NDIM_VALUES))
 #: False -> 32-bit pair (complex64 / float32), True -> 64-bit pair
 WIDE = st.booleans()
-#: trailing-axis length: even and odd Hermitian cases for r2c
-LAST_N = st.sampled_from([6, 7, 8])
+LAST_N = st.sampled_from(list(LAST_N_VALUES))
 
 
 def roundtrip_given(fn):

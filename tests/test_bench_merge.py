@@ -23,15 +23,38 @@ def test_partial_run_keeps_other_sections(tmp_path):
         {"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 1.0},
         {"bench": "fft3_decomp", "p": 8, "grid": "2x4", "measured_us": 2.0},
         {"bench": "real", "p": 8, "transform": "r2c", "measured_us": 3.0},
+        {"bench": "overlap", "p": 8, "backend": "scatter", "fused": True,
+         "n_chunks": 16, "measured_us": 4.0},
     ]
     _write(path, baseline)
     new = [{"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 9.0}]
     merged = _merge_json(str(path), new)
     benches = sorted(r["bench"] for r in merged)
-    assert benches == ["fft2", "fft3_decomp", "real"]
+    assert benches == ["fft2", "fft3_decomp", "overlap", "real"]
     (fft2_row,) = [r for r in merged if r["bench"] == "fft2"]
     assert fft2_row["measured_us"] == 9.0  # ran section replaced...
     assert any(r["bench"] == "real" and r["measured_us"] == 3.0 for r in merged)
+    # ...and the overlap section survives a run that did not select it
+    assert any(r["bench"] == "overlap" and r["n_chunks"] == 16 for r in merged)
+
+
+def test_overlap_section_replaced_as_a_unit(tmp_path):
+    """An overlap re-run replaces every old overlap row (fused and
+    unfused variants alike) while other sections survive."""
+    path = tmp_path / "b.json"
+    _write(path, [
+        {"bench": "overlap", "p": 8, "fused": False, "measured_us": 5.0},
+        {"bench": "overlap", "p": 8, "fused": True, "measured_us": 4.0},
+        {"bench": "real", "p": 8, "measured_us": 3.0},
+    ])
+    merged = _merge_json(str(path), [
+        {"bench": "overlap", "p": 8, "fused": True, "n_chunks": 32, "measured_us": 2.0},
+    ])
+    overlap = [r for r in merged if r["bench"] == "overlap"]
+    assert overlap == [
+        {"bench": "overlap", "p": 8, "fused": True, "n_chunks": 32, "measured_us": 2.0}
+    ]
+    assert any(r["bench"] == "real" for r in merged)
 
 
 def test_ran_section_fully_replaced_not_appended(tmp_path):

@@ -52,6 +52,36 @@ def test_stage_left_block_sweep(rng):
                 np.testing.assert_allclose(np.asarray(g), np.asarray(e), rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("lead,rows,c,p", [((3,), 4, 6, 8), ((2, 5), 8, 4, 2), ((1,), 1, 3, 4)])
+def test_chunk_twiddle_pack_matches_jnp(rng, lead, rows, c, p):
+    """The pipelined overlap executor's one-launch per-chunk callback:
+    relayout + W_P-column x twiddle multiply == the two-op jnp path."""
+    from repro.kernels import fft_stage
+
+    chunk = (rng.standard_normal(lead + (rows, c)) + 1j * rng.standard_normal(
+        lead + (rows, c))).astype(np.complex64)
+    m = (rng.standard_normal((p, rows)) + 1j * rng.standard_normal((p, rows))).astype(
+        np.complex64)
+    got = np.asarray(fft_stage.chunk_twiddle_pack_c64(jnp.asarray(chunk), jnp.asarray(m)))
+    ct = np.swapaxes(chunk, -1, -2)  # (..., c, rows)
+    exp = ct[..., None, :] * m  # (..., c, p, rows)
+    assert got.shape == lead + (c, p, rows)
+    assert got.dtype == np.complex64
+    np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_twiddle_pack_rejects_wrong_dtype_and_shape(rng):
+    from repro.kernels import fft_stage
+
+    chunk = jnp.zeros((2, 4, 6), jnp.complex64)
+    # a non-c64 chunk (x64 may be disabled, so use the real dtype)
+    with pytest.raises(ValueError, match="planar-f32"):
+        fft_stage.chunk_twiddle_pack_c64(jnp.zeros((2, 4, 6), jnp.float32),
+                                         jnp.zeros((8, 4), jnp.complex64))
+    with pytest.raises(ValueError, match=r"\(p, rows\)"):
+        fft_stage.chunk_twiddle_pack_c64(chunk, jnp.zeros((8, 5), jnp.complex64))
+
+
 @pytest.mark.parametrize("n", [1024, 4096, 16384])
 @pytest.mark.parametrize("inverse", [False, True])
 def test_fft_last_axis_vs_oracle(rng, n, inverse):

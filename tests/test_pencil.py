@@ -186,7 +186,12 @@ mesh = make_mesh((2, 4), ("rows", "cols"))
 mp = plan_fft((16, 8, 8), mesh, ndim=3, decomp="pencil", planner="measure")
 assert mp.backend in mp.measured
 assert mp.measured[mp.backend] == min(mp.measured.values())
-assert set(mp.measured) == {f"{r}+{c}" for r, c in pairs(2, 4)}
+# candidate field = every plain pair PLUS the unfused (@u) twin of each
+# pair with a streaming member (the (backend, n_chunks, fused) triples)
+plain = {f"{r}+{c}" for r, c in pairs(2, 4)}
+assert plain <= set(mp.measured), sorted(mp.measured)
+extras = set(mp.measured) - plain
+assert extras and all(k.endswith("@u") and k[:-2] in plain for k in extras), sorted(extras)
 mp2 = plan_fft((16, 8, 8), mesh, ndim=3, decomp="pencil", planner="measure")
 assert mp2.wisdom_hit and mp2.backend == mp.backend
 print("PASS measured pencil")

@@ -1,0 +1,432 @@
+"""Pipelined overlap executor: fused (chunk-streamed, compute-in-flight)
+exchanges must match their unfused monolithic twins to tight tolerance
+for every streaming backend across slab/pencil x c2c/r2c x fwd/inv --
+the 8-device subprocess sweep draws its batch/last-axis field from
+tests/roundtrip_common.py. Plus: the chunk_fn-on-monolithic-backend
+error regression, sub-chunking arithmetic, the overlap-aware cost model
+(fused vs unfused, n_chunks), and measured-planner variant plumbing
+(old-format wisdom can never alias a fused entry).
+"""
+
+import pytest
+
+from conftest import run_subprocess
+from roundtrip_common import BATCH_VALUES
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import CommParams, backends, comm_model, plan_fft, planner  # noqa: E402
+from repro.core import transpose as tr  # noqa: E402
+from repro.core.compat import make_mesh, make_mesh_1d, shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# 8-device sweep: fused == unfused for every streaming backend across
+# slab/pencil x c2c/r2c x fwd/inv (tolerance: the fused cross-rank DFT
+# uses tabulated matrices -- a few ulps of the c64 transform, orders
+# below the oracle tolerances the numerics suites use)
+# ---------------------------------------------------------------------------
+
+FUSED_SWEEP_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import backends, plan_fft
+from repro.core.compat import make_mesh
+
+rng = np.random.default_rng(0)
+BATCHES = __BATCHES__
+STREAMING = [n for n in backends.available(kind="shard_map")
+             if backends.get(n).supports_chunk_fn]
+assert STREAMING, "no streaming backends registered?"
+
+mesh = make_mesh((8,), ("model",))
+gmesh = make_mesh((2, 4), ("rows", "cols"))
+
+
+def compare(tag, plan_kw, backend, pipelines=("auto", 24), inv=True):
+    batch = BATCHES[hash(tag) % len(BATCHES)]
+    dims = plan_kw.pop("dims")
+    shape = ((batch,) + dims) if plan_kw.get("ndim", 2) > 1 else dims
+    kw = dict(plan_kw, global_shape=shape)
+    base = plan_fft(backend=backend, pipeline=False, **kw)
+    assert not base.fused
+    if base.real:
+        x = rng.standard_normal(shape).astype(np.float32)
+    else:
+        x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    y_ref = np.asarray(base.execute(jnp.asarray(x)))
+    scale = max(np.abs(y_ref).max(), 1.0)
+    for pipe in pipelines:
+        fused = plan_fft(backend=backend, pipeline=pipe, **kw)
+        assert fused.fused, (tag, backend, pipe)
+        y = np.asarray(fused.execute(jnp.asarray(x)))
+        err = np.abs(y - y_ref).max() / scale
+        assert err < 5e-5, (tag, backend, pipe, "fwd", err)
+        if inv:
+            z = np.asarray(fused.inverse(jnp.asarray(y)))
+            z_ref = np.asarray(base.inverse(jnp.asarray(y_ref)))
+            zerr = np.abs(z - z_ref).max() / max(np.abs(x).max(), 1.0)
+            assert zerr < 5e-5, (tag, backend, pipe, "inv", zerr)
+        # the model half of the acceptance check: the fused variant of
+        # this exact problem predicts cheaper than its unfused twin
+        nc = fused.n_chunks
+        pf = fused.predict(fused=True, n_chunks=nc)[fused.backend]
+        pu = fused.predict(fused=False, n_chunks=nc)[fused.backend]
+        assert pf < pu, (tag, backend, pipe, pf, pu)
+    print(f"PASS {tag}")
+
+
+for b in STREAMING:
+    compare(f"slab-fft2-{b}", dict(dims=(16, 16), mesh=mesh), b)
+    compare(f"slab-rfft2-{b}", dict(dims=(24, 17), mesh=mesh, real=True), b)
+compare("slab-fft3", dict(dims=(16, 8, 8), mesh=mesh, ndim=3), "scatter")
+compare("slab-fft1d", dict(dims=(4096,), mesh=mesh, ndim=1), "scatter", inv=False)
+compare("slab-rfft2-tb", dict(dims=(16, 16), mesh=mesh, real=True, transpose_back=True),
+        "pairwise_xor")
+compare("slab-rfft3", dict(dims=(16, 8, 8), mesh=mesh, ndim=3, real=True), "scatter")
+for b in STREAMING:
+    compare(f"pencil-fft3-{b}", dict(dims=(16, 8, 8), mesh=gmesh, ndim=3, decomp="pencil"),
+            (b, b))
+compare("pencil-fft3-mixed", dict(dims=(16, 8, 8), mesh=gmesh, ndim=3, decomp="pencil"),
+        ("scatter", "bisection"))
+compare("pencil-fft2", dict(dims=(16, 16), mesh=gmesh, ndim=2, decomp="pencil"),
+        ("scatter", "scatter"))
+compare("pencil-rfft3", dict(dims=(16, 8, 8), mesh=gmesh, ndim=3, decomp="pencil", real=True),
+        ("scatter", "scatter"))
+compare("pencil-rfft3-tb", dict(dims=(16, 8, 8), mesh=gmesh, ndim=3, decomp="pencil",
+        real=True, transpose_back=True), ("pairwise_xor", "scatter"))
+compare("pencil-rfft2", dict(dims=(16, 16), mesh=gmesh, ndim=2, decomp="pencil", real=True),
+        ("scatter", "pairwise_xor"))
+# the Pallas fused twiddle+pack kernel rides the per-chunk callback
+compare("slab-fft2-pallas", dict(dims=(16, 16), mesh=mesh, local_impl="pallas"),
+        "scatter", pipelines=("auto",))
+"""
+
+def test_fused_matches_unfused_8dev():
+    """CI fast job runs this under the forced-8-device harness."""
+    code = FUSED_SWEEP_CODE.replace("__BATCHES__", repr(tuple(BATCH_VALUES)))
+    out = run_subprocess(code, devices=8, timeout=1800)
+    n_streaming = len(
+        [n for n in backends.available(kind="shard_map")
+         if backends.get(n).supports_chunk_fn]
+    )
+    # 2 slab tags per streaming backend + 1 pencil tag each + 10 fixed tags
+    expected = 3 * n_streaming + 10
+    assert out.count("PASS") == expected, out
+
+
+MEASURED_VARIANTS_CODE = r"""
+import json
+from repro.core import plan_fft, planner
+from repro.core.compat import make_mesh
+
+mesh = make_mesh((8,), ("model",))
+planner.forget_wisdom()
+mp = plan_fft((16, 16), mesh, planner="measure", timer=lambda plan: 1.0)
+# the field includes (backend, n_chunks, fused) triples
+assert any(k.endswith("@u") for k in mp.measured), sorted(mp.measured)
+assert any("@f16" in k for k in mp.measured), sorted(mp.measured)
+assert "scatter" in mp.measured  # plain = default fused resolution
+(key,) = json.loads(planner.export_wisdom())["entries"]
+assert "@u" in key  # variant ids reach the wisdom key
+
+# an old-format (pre-pipeline) wisdom entry -- plain candidate names --
+# keys differently, so it can never be replayed as (alias) a fused plan
+old_names = tuple(planner.candidate_backends(8))
+old_key = planner.wisdom_key(
+    (16, 16), 2, "complex64", 8, old_names, planner.device_kind(mesh),
+    opts="mesh=model8,decomp=slab,ax=model,dir=forward,impl=jnp,fuse=0,tb=0",
+)
+assert old_key != key
+planner._WISDOM[old_key] = {"backend": "alltoall",
+                            "timings": {n: 0.5 for n in old_names}}
+again = plan_fft((16, 16), mesh, planner="measure", timer=lambda plan: 2.0)
+assert again.wisdom_hit  # hits ITS OWN (variant) entry...
+assert set(again.measured) == set(mp.measured)  # ...never the old one
+
+# a variant winner is buildable from wisdom (replay path parses the id)
+vid = sorted(k for k in mp.measured if k.endswith("@u"))[0]
+planner._WISDOM[key]["backend"] = vid
+replay = plan_fft((16, 16), mesh, planner="measure", timer=lambda plan: 3.0)
+assert replay.wisdom_hit and replay.backend == vid and not replay.fused
+
+# pinned pipeline=False: plain candidates, distinct wisdom key
+planner.forget_wisdom()
+off = plan_fft((16, 16), mesh, planner="measure", pipeline=False,
+               timer=lambda plan: 1.0)
+assert set(off.measured) == set(old_names), sorted(off.measured)
+(key_off,) = json.loads(planner.export_wisdom())["entries"]
+assert "pipe=False" in key_off
+print("PASS measured variants")
+"""
+
+
+def test_measured_planner_races_variants_8dev():
+    out = run_subprocess(MEASURED_VARIANTS_CODE, devices=8)
+    assert out.count("PASS") == 1, out
+
+
+SUBCHUNK_TRANSPOSE_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import repro.core.transpose as tr
+from repro.core.compat import make_mesh, shard_map
+
+mesh = make_mesh((8,), ("model",))
+p, r, C = 8, 4, 64
+rng = np.random.default_rng(3)
+x = (rng.standard_normal((p * r, C)) + 1j * rng.standard_normal((p * r, C))).astype(np.complex64)
+
+
+def run(strategy, chunk_fn=None, n_chunks=None):
+    def fn(xl):
+        return tr.distributed_transpose(
+            xl, "model", strategy=strategy, chunk_fn=chunk_fn, n_chunks=n_chunks
+        )
+    return np.asarray(
+        shard_map(fn, mesh=mesh, in_specs=P("model", None), out_specs=P("model", None))(
+            jnp.asarray(x)
+        )
+    )
+
+ref = run("alltoall")
+assert np.abs(ref - x.T).max() == 0.0
+
+# sub-chunked transport alone must be exact (pure data movement)
+for strategy in ("scatter", "pairwise_xor"):
+    for nc in (None, 16, 32, 64):
+        got = run(strategy, n_chunks=nc)
+        assert np.abs(got - ref).max() == 0.0, (strategy, nc)
+print("PASS subchunk transport")
+
+# 2-arg chunk_fn under sub-chunking: applied to the REASSEMBLED peer
+# block (transport-only pipelining), so any per-peer function matches
+got = run("scatter", chunk_fn=lambda c, s: c * (s.astype(np.complex64) + 1), n_chunks=32)
+scale = np.repeat(np.arange(p) + 1, r)[None, :]  # per source block of output cols
+exp_local = ref.reshape(p, C // p, p * r) * scale[None, ...]
+assert np.abs(got - exp_local.reshape(got.shape)).max() < 1e-6
+print("PASS 2-arg chunk_fn")
+
+# 3-arg chunk_fn: per-sub-chunk offsets land where they should
+q = tr.subchunks_per_peer(r, p, 16)
+assert q == 2
+rq = r // q
+got = run("scatter", chunk_fn=lambda c, s, off: c + off, n_chunks=16)
+off_row = np.concatenate([np.full(rq, t * rq) for t in range(q)])  # within one peer block
+exp = ref + np.tile(off_row, p)[None, :]
+assert np.abs(got - exp).max() < 1e-6
+print("PASS 3-arg chunk_fn offsets")
+
+# the fused path keeps the plain transpose's friendly divisibility error
+# (not a reshape blow-up inside _split_chunks)
+bad = jnp.zeros((32, 60), jnp.complex64)  # 60 % 8 != 0
+def bad_fn(xl):
+    return tr.transpose_then_fft(xl, "model", strategy="scatter", fused=True)
+try:
+    shard_map(bad_fn, mesh=mesh, in_specs=P("model", None), out_specs=P("model", None))(bad)
+    raise SystemExit("expected ValueError")
+except ValueError as e:
+    assert "not divisible" in str(e), e
+print("PASS fused divisibility error")
+"""
+
+
+def test_subchunked_transpose_semantics_8dev():
+    out = run_subprocess(SUBCHUNK_TRANSPOSE_CODE, devices=8)
+    assert out.count("PASS") == 4, out
+
+
+# ---------------------------------------------------------------------------
+# In-process regressions
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_fn_on_monolithic_backend_still_raises_naming_streaming():
+    """The transpose.py guard: chunk_fn on a non-streaming backend must
+    fail loudly, listing the backends that CAN stream."""
+    mesh = make_mesh_1d(1)
+
+    def fn(xl):
+        return tr.distributed_transpose(
+            xl, "model", strategy="alltoall", chunk_fn=lambda c, s: c
+        )
+
+    with pytest.raises(ValueError) as ei:
+        shard_map(fn, mesh=mesh, in_specs=P("model"), out_specs=P("model"))(
+            jnp.zeros((4, 4), jnp.complex64)
+        )
+    msg = str(ei.value)
+    assert "chunk-streaming" in msg
+    for name in backends.available():
+        if backends.get(name).supports_chunk_fn:
+            assert name in msg, (name, msg)
+
+
+def test_subchunks_per_peer_divides_rows():
+    assert tr.subchunks_per_peer(8, 4, None) == 1
+    assert tr.subchunks_per_peer(8, 4, 4) == 1  # n_chunks <= p: classic
+    assert tr.subchunks_per_peer(8, 4, 8) == 2
+    assert tr.subchunks_per_peer(8, 4, 16) == 4
+    assert tr.subchunks_per_peer(6, 4, 16) == 3  # snaps to a divisor of r
+    assert tr.subchunks_per_peer(7, 4, 16) == 1  # prime rows: no split <= target
+    assert tr.subchunks_per_peer(4, 4, 10 ** 9) == 4  # capped at r
+
+
+def test_chunk_fn_arity_detection():
+    assert tr._chunk_fn_arity(lambda c, s: c) == 2
+    assert tr._chunk_fn_arity(lambda c, s, off: c) == 3
+    assert tr._chunk_fn_arity(lambda *a: a[0]) == 3
+
+    def kw_only(c, s, *, off=0):
+        return c
+
+    assert tr._chunk_fn_arity(kw_only) == 2
+
+
+def test_cost_model_overlap_and_n_chunks():
+    m, p = 8 * 2**20, 8
+    prm = CommParams()
+    # n_chunks=None/p reduces to the classic formula
+    assert comm_model.t_scatter_ring(m, p, prm, 1e-4) == comm_model.t_scatter_ring(
+        m, p, prm, 1e-4, n_chunks=p
+    )
+    # sub-chunking pays (q-1)(p-1) extra alphas when compute is free...
+    base = comm_model.t_scatter_ring(m, p, prm)
+    sub = comm_model.t_scatter_ring(m, p, prm, n_chunks=2 * p)
+    assert abs(sub - (base + (p - 1) * prm.alpha_s)) < 1e-12
+    # ...but hides compute at finer grain when compute dominates
+    per_msg = prm.alpha_s + (m / p) / prm.beta_bytes_s
+    heavy = 10 * per_msg
+    assert comm_model.t_scatter_ring(m, p, prm, heavy, n_chunks=8 * p) < (
+        comm_model.t_scatter_ring(m, p, prm, heavy)
+    )
+    # fused=False serializes the stage compute on streaming backends too
+    b = backends.get("scatter")
+    assert b.cost(m, p, prm, heavy, fused=False) > b.cost(m, p, prm, heavy, fused=True)
+    assert b.cost(m, p, prm, heavy, fused=False) == pytest.approx(
+        comm_model.t_scatter_ring(m, p, prm) + p * heavy
+    )
+    # monolithic backends are indifferent to the flag
+    a = backends.get("alltoall")
+    assert a.cost(m, p, prm, heavy, fused=False) == a.cost(m, p, prm, heavy, fused=True)
+    # model-side twin of the executed sub-chunk count
+    assert comm_model.effective_chunks(8, None) == 8
+    assert comm_model.effective_chunks(8, 24) == 24
+    assert comm_model.effective_chunks(8, 20) == 24  # ceil to whole sub-chunks
+
+
+def test_plan_predict_reports_fused_vs_unfused():
+    """P=1 plan, but the report path exercises the full plumbing: the
+    fused variant must never predict costlier than the unfused one, and
+    explicit n_chunks must reach the model."""
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((32, 32), mesh, backend="scatter")
+    cc = 1e-4
+    f = plan.predict(chunk_compute_s=cc, fused=True)
+    u = plan.predict(chunk_compute_s=cc, fused=False)
+    assert set(f) == set(u)
+    assert all(f[k] <= u[k] for k in f)
+    n = plan.predict(chunk_compute_s=cc, fused=True, n_chunks=64)
+    assert set(n) == set(f)
+
+
+def test_pipeline_argument_validation_and_resolution():
+    mesh = make_mesh_1d(1)
+    with pytest.raises(ValueError, match="pipeline"):
+        plan_fft((16, 16), mesh, pipeline="eager")
+    with pytest.raises(ValueError, match="pipeline"):
+        plan_fft((16, 16), mesh, pipeline=-3)
+    p16 = plan_fft((16, 16), mesh, backend="scatter", pipeline=16)
+    assert p16.n_chunks == 16 and p16.fused is False  # P=1: nothing to stream
+    off = plan_fft((16, 16), mesh, backend="scatter", pipeline=0)
+    assert off.fused is False and off.n_chunks is None
+    auto = plan_fft((16, 16), mesh, backend="scatter", pipeline=True)
+    assert auto.pipeline == "auto"
+    # 1 == True in Python: an explicit one-chunk pipeline must NOT alias
+    # to "auto" (and must still conflict with a variant suffix)
+    one = plan_fft((16, 16), mesh, backend="scatter", pipeline=1)
+    assert one.pipeline == 1 and one.pipeline is not True and one.n_chunks == 1
+    with pytest.raises(ValueError, match="both specify"):
+        plan_fft((16, 16), mesh, backend="scatter@u", pipeline=1)
+
+
+def test_backend_variant_id_round_trips_through_plan_fft():
+    """A measured variant winner's Plan.backend (e.g. 'scatter@u') must
+    be re-plannable: the suffix is parsed as a pipeline override."""
+    mesh = make_mesh_1d(1)
+    p = plan_fft((16, 16), mesh, backend="scatter@u")
+    assert p.backend == "scatter" and p.pipeline is False and not p.fused
+    p2 = plan_fft((16, 16), mesh, backend="scatter@f16")
+    assert p2.backend == "scatter" and p2.n_chunks == 16
+    gmesh = make_mesh((1, 1), ("rows", "cols"))
+    pp = plan_fft((8, 8), gmesh, decomp="pencil", backend="scatter+bisection@u")
+    assert pp.backend == "scatter+bisection" and pp.pipeline is False
+    with pytest.raises(ValueError, match="both specify"):
+        plan_fft((16, 16), mesh, backend="scatter@u", pipeline=16)
+
+
+def test_backend_variant_id_round_trips_through_measured_planner():
+    """planner='measure' with a pinned variant id races exactly that
+    candidate (the re-plan path for a measured winner's Plan.backend)."""
+    mesh = make_mesh_1d(1)
+    planner.forget_wisdom()
+    calls = []
+
+    def timer(plan):
+        calls.append(plan.backend)
+        return 1.0
+
+    mp = plan_fft((16, 16), mesh, planner="measure", backend="scatter@u", timer=timer)
+    assert calls == ["scatter@u"] and mp.backend == "scatter@u"
+    assert mp.pipeline is False and not mp.fused
+    gmesh = make_mesh((1, 1), ("rows", "cols"))
+    mpp = plan_fft((8, 8), gmesh, decomp="pencil", planner="measure",
+                   backend="scatter+bisection@f8", timer=timer)
+    assert mpp.backend == "scatter+bisection@f8" and mpp.n_chunks == 8
+    with pytest.raises(ValueError, match="both specify"):
+        plan_fft((16, 16), mesh, planner="measure", backend="scatter@u",
+                 pipeline=16, timer=timer)
+
+
+def test_fuse_dft_disabled_by_explicit_pipeline_off():
+    """One knob disables fusion everywhere: pipeline=False wins over the
+    legacy fuse_dft alias at both the plan and the config layer."""
+    mesh = make_mesh_1d(1)
+    on = plan_fft((16, 16), mesh, backend="scatter", fuse_dft=True)
+    assert on._cfg.fuse_dft is True  # legacy alias flows through by default
+    off = plan_fft((16, 16), mesh, backend="scatter", fuse_dft=True, pipeline=False)
+    assert off.fused is False and off._cfg.fuse_dft is False
+    assert off._cfg.fused is False
+
+
+def test_predict_candidate_honours_race_pipeline():
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((32, 32), mesh, backend="scatter", pipeline=False)
+    # plain candidate measured under pipeline=False models unfused
+    assert planner.predict_candidate(plan, "scatter", pipeline=False) == pytest.approx(
+        plan.predict(fused=False)["scatter"]
+    )
+    # explicit variant suffix still wins over the race context
+    assert planner.predict_candidate(plan, "scatter@f16", pipeline=False) == pytest.approx(
+        plan.predict(fused=True, n_chunks=16)["scatter"]
+    )
+    assert planner.variant_id("scatter", None) == "scatter"
+    assert planner.variant_id("scatter", False) == "scatter@u"
+    assert planner.variant_id("a+b", 8) == "a+b@f8"
+
+
+def test_predict_candidate_matches_variant_resolution():
+    mesh = make_mesh_1d(1)
+    plan = plan_fft((32, 32), mesh, backend="scatter")
+    assert planner.predict_candidate(plan, "scatter") == pytest.approx(
+        plan.predict(fused=True)["scatter"]
+    )
+    assert planner.predict_candidate(plan, "scatter@u") == pytest.approx(
+        plan.predict(fused=False)["scatter"]
+    )
+    assert planner.predict_candidate(plan, "scatter@f16") == pytest.approx(
+        plan.predict(fused=True, n_chunks=16)["scatter"]
+    )
+    with pytest.raises(ValueError, match="variant"):
+        planner.parse_variant("scatter@turbo")

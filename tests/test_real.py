@@ -168,12 +168,17 @@ pa = plan_fft((16, 8, 8), gmesh, ndim=3, real=True, decomp="auto")
 assert pa.decomp == "pencil" and pa.real
 pb = plan_fft((64, 64), mesh, real=True, decomp="auto")
 assert pb.decomp == "slab"
-# fuse_dft is a c2c-only feature
-try:
-    plan_fft((64, 64), mesh, real=True, fuse_dft=True, backend="scatter")
-    raise SystemExit("expected ValueError")
-except ValueError as e:
-    assert "fuse_dft" in str(e)
+# fuse_dft on real plans: deprecated alias, not an error -- the pipelined
+# overlap executor IS the fused real path now (single stacklevel=2 warning)
+import warnings
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    dep_plan = plan_fft((64, 64), mesh, real=True, fuse_dft=True, backend="scatter")
+deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+assert len(deps) == 1 and "pipeline" in str(deps[0].message), [str(w.message) for w in rec]
+assert dep_plan.fused and not dep_plan.fuse_dft  # alias resolved to the fused default
+yd = np.asarray(dep_plan.execute(jnp.asarray(x)))
+assert np.abs(yd[:33] - ref.T).max() < tol
 print("PASS real auto")
 """
 
