@@ -7,11 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fft_measure/*    measured planner vs alpha-beta model per backend
   pencil_sweep/*   slab vs pencil decomposition per grid shape
   real_sweep/*     c2c vs r2c (Hermitian payload) per backend per P
+  serve_sweep/*    spectral serving: p50/p99 latency + transforms/sec vs
+                   offered load, coalescing on vs off, warm plan pool
   moe_dispatch/*   paper technique on the LM stack (MoE a2a strategies)
   local_fft/*      local FFT impls (XLA vs MXU-matmul vs Pallas)
 
 Run: PYTHONPATH=src python -m benchmarks.run
-         [--only overlap,fig45,moe,kernel,fft,pencil,real]
+         [--only overlap,fig45,moe,kernel,fft,pencil,real,serve]
      [--json BENCH_fft.json] [--force]
 
 ``--json PATH`` additionally writes the fft_measure + pencil_sweep +
@@ -34,7 +36,7 @@ BENCH_SCHEMA = 2
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="overlap,fig45,moe,kernel,fft,pencil,real")
+    ap.add_argument("--only", default="overlap,fig45,moe,kernel,fft,pencil,real,serve")
     ap.add_argument(
         "--json",
         default=None,
@@ -91,6 +93,13 @@ def main() -> None:
         rrows = real_sweep.run_json()
         jrows += rrows
         rows += real_sweep.to_csv(rrows)
+        _flush(rows)
+    if "serve" in wanted:
+        from benchmarks import serve_sweep
+
+        srows = serve_sweep.run_json()
+        jrows += srows
+        rows += serve_sweep.to_csv(srows)
         _flush(rows)
     if args.json:
         merged = _merge_json(args.json, jrows, force=args.force)

@@ -1,0 +1,164 @@
+"""Spectral serving sweep -- p50/p99 latency and throughput vs offered load.
+
+The paper (and every other section of this harness) measures one big
+transform at a time; this section measures the serving workload the
+ROADMAP's north star describes: many small transforms arriving
+concurrently. Two arms per offered load:
+
+- ``coalesce=True``: same-shape requests batch into one stacked plan
+  execution (power-of-two buckets) behind the max-batch/max-wait
+  admission policy;
+- ``coalesce=False``: every request dispatches alone -- the control.
+
+Each row carries the request-latency p50/p99 (from the engine's
+telemetry window), transforms/sec, the realized mean batch size, and
+queue-depth stats. A separate ``warm_start`` row demonstrates the warm
+plan-cache pool: first-request latency on a cold engine (``plan_fft`` +
+jit compile in the latency path) vs a wisdom-warmed engine (plan pool
+misses == 0) vs the steady-state p50.
+
+``run_json()`` rows merge into ``BENCH_fft.json`` as the ``serve``
+section via ``benchmarks/run.py --json``; ``to_csv()`` renders the
+harness's ``name,us_per_call,derived`` format.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, List
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+import json, time
+import numpy as np, jax
+from repro.core import plan_fft, planner
+from repro.core.compat import make_mesh
+from repro.serve import SpectralEngine
+
+n, p = __N__, __P__
+mesh = make_mesh((p,), ("model",))
+dev = planner.device_kind(mesh)
+rng = np.random.default_rng(0)
+MAX_BATCH = 8
+
+def mk():
+    return (rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+            ).astype(np.complex64)
+
+inputs = [mk() for _ in range(MAX_BATCH)]
+
+# ---- load sweep: coalescing on vs off --------------------------------
+for coalesce in (True, False):
+    eng = SpectralEngine(mesh, max_batch=MAX_BATCH, max_wait_s=0.005,
+                         coalesce=coalesce)
+    # warm every batch bucket so the timed windows never compile
+    for b in (1, 2, 4, MAX_BATCH):
+        for i in range(b):
+            eng.submit("fft", inputs[i])
+        eng.drain()
+    for load in (1, 4, 16, 32):
+        waves = max(2, 128 // load)
+        # one untimed wave absorbs residual allocation/dispatch jitter
+        for i in range(load):
+            eng.submit("fft", inputs[i % MAX_BATCH])
+        eng.drain()
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        for _ in range(waves):
+            futs = [eng.submit("fft", inputs[i % MAX_BATCH]) for i in range(load)]
+            eng.flush()
+            for f in futs:
+                f.block()
+        elapsed = time.perf_counter() - t0
+        s = eng.stats()
+        print("ROW " + json.dumps({
+            "bench": "serve", "row": "load_sweep", "n": n, "p": p, "op": "fft",
+            "coalesce": coalesce, "load": load, "requests": s["requests"],
+            "p50_us": round(s["latency_s"]["p50"] * 1e6, 1),
+            "p99_us": round(s["latency_s"]["p99"] * 1e6, 1),
+            "tps": round(s["requests"] / elapsed, 1),
+            "mean_batch": round(s["mean_batch"], 2),
+            "queue_depth_p99": s["queue_depth"]["p99"],
+            "pool_misses_timed": s["pool"]["misses"],
+            "device_kind": dev,
+        }))
+
+# ---- warm plan-cache pool: cold vs wisdom-warmed first request -------
+x = inputs[0]
+cold = SpectralEngine(mesh, max_batch=MAX_BATCH)
+t0 = time.perf_counter()
+cold.submit("fft", x).block()
+cold_first = time.perf_counter() - t0
+
+# steady state on the now-hot engine
+steady = []
+for _ in range(32):
+    t0 = time.perf_counter()
+    cold.submit("fft", x).block()
+    steady.append(time.perf_counter() - t0)
+steady.sort()
+steady_p50 = steady[len(steady) // 2]
+
+# measure once (writes wisdom), export atomically, warm a fresh engine
+planner.forget_wisdom()
+plan_fft((1, n, n), mesh, planner="measure")
+wisdom_path = "/tmp/serve_wisdom.json"
+planner.export_wisdom(wisdom_path)
+warm = SpectralEngine(mesh, max_batch=MAX_BATCH, wisdom=wisdom_path)
+t0 = time.perf_counter()
+fut = warm.submit("fft", x)
+fut.block()
+warm_first = time.perf_counter() - t0
+print("ROW " + json.dumps({
+    "bench": "serve", "row": "warm_start", "n": n, "p": p, "op": "fft",
+    "cold_first_us": round(cold_first * 1e6, 1),
+    "steady_p50_us": round(steady_p50 * 1e6, 1),
+    "warm_first_us": round(warm_first * 1e6, 1),
+    "warm_pool_misses": warm.pool.misses,  # 0 == no plan_fft in the path
+    "warm_pool_plans": len(warm.pool),
+    "picked": fut.backend,
+    "device_kind": dev,
+}))
+"""
+
+
+def run_json(n: int = 64, device_counts: Iterable[int] = (8,)) -> List[dict]:
+    """Serving rows (load sweep + warm-start) per device count."""
+    rows: List[dict] = []
+    for p in device_counts:
+        out = run_devices_subprocess(
+            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        )
+        for line in out.splitlines():
+            if line.startswith("ROW "):
+                rows.append(json.loads(line[4:]))
+    return rows
+
+
+def to_csv(rows: List[dict]) -> List[str]:
+    out = []
+    for r in rows:
+        if r.get("row") == "warm_start":
+            out.append(
+                f"serve_sweep/warm_start/p{r['p']},{r['warm_first_us']},"
+                f"cold_first_us={r['cold_first_us']};"
+                f"steady_p50_us={r['steady_p50_us']};"
+                f"pool_misses={r['warm_pool_misses']}"
+            )
+        else:
+            arm = "coalesce" if r["coalesce"] else "solo"
+            out.append(
+                f"serve_sweep/{arm}/load{r['load']}/p{r['p']},{r['p50_us']},"
+                f"p99_us={r['p99_us']};tps={r['tps']};"
+                f"mean_batch={r['mean_batch']}"
+            )
+    return out
+
+
+def run(n: int = 64) -> List[str]:
+    return to_csv(run_json(n))
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

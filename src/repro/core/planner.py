@@ -32,6 +32,8 @@ selection logic is testable without a fabric.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -110,22 +112,85 @@ def wisdom_key(
     return key
 
 
-def export_wisdom(path: Optional[str] = None) -> str:
+def merge_wisdom_entry(old, new) -> dict:
+    """Combine two wisdom entries for the same key: the per-candidate
+    timing tables union (both measurements were real; a candidate timed
+    by either run stays known) and the pinned backend becomes the argmin
+    of the combined table. A malformed side loses to a well-formed one
+    outright -- wisdom is advisory, so the merge can never raise."""
+    old_t = old.get("timings") if isinstance(old, dict) else None
+    new_t = new.get("timings") if isinstance(new, dict) else None
+    if not isinstance(new_t, dict) or not new_t:
+        return old if isinstance(old_t, dict) and old_t else new
+    if not isinstance(old_t, dict) or not old_t:
+        return new
+    timings = dict(old_t)
+    timings.update(new_t)
+    merged = dict(new)
+    merged["timings"] = timings
+    merged["backend"] = min(sorted(timings), key=timings.__getitem__)
+    return merged
+
+
+def _atomic_write(path: str, text: str) -> None:
+    """Write ``text`` to ``path`` via a same-directory temp file +
+    ``os.replace``, so a concurrent reader (another serving pool, a
+    benchmark run) never sees a half-written wisdom file."""
+    directory = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=".wisdom.", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def export_wisdom(path: Optional[str] = None, *, merge: bool = True) -> str:
     """Serialize accumulated wisdom to JSON; write it to ``path`` when
-    given. Returns the JSON text either way."""
+    given. Returns the JSON text either way.
+
+    The write is atomic (temp file + ``os.replace``) and, with ``merge``
+    (default), folds any wisdom already at ``path`` into the output via
+    :func:`merge_wisdom_entry` -- so two concurrent writers (a serving
+    pool exporting its warm pool, a benchmark run exporting its sweep)
+    interleave instead of clobbering each other's entries.
+    ``merge=False`` writes exactly this process's wisdom."""
+    entries: Dict[str, dict] = dict(_WISDOM)
+    if path is not None and merge and os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = None  # unreadable existing file: overwrite it
+        if isinstance(data, dict) and data.get("version") == WISDOM_VERSION:
+            disk = data.get("entries")
+            if isinstance(disk, dict):
+                for key, entry in disk.items():
+                    if key in entries:
+                        entries[key] = merge_wisdom_entry(entry, entries[key])
+                    else:
+                        entries[key] = entry
     text = json.dumps(
-        {"version": WISDOM_VERSION, "entries": _WISDOM}, indent=2, sort_keys=True
+        {"version": WISDOM_VERSION, "entries": entries}, indent=2, sort_keys=True
     )
     if path is not None:
-        with open(path, "w") as f:
-            f.write(text)
+        _atomic_write(path, text)
     return text
 
 
 def import_wisdom(source: str) -> int:
     """Merge wisdom from a JSON string or a path to a JSON file.
     Returns the number of entries merged; wrong-version files merge 0
-    (wisdom is advisory -- stale formats are dropped, never an error)."""
+    (wisdom is advisory -- stale formats are dropped, never an error).
+    Keys already known in-process merge via :func:`merge_wisdom_entry`
+    (timing tables union, backend re-argmins) rather than being
+    overwritten, so importing an older file can't undo newer
+    measurements of candidates it never timed."""
     text = source
     if not source.lstrip().startswith(("{", "[")):
         # not JSON text -> must be a path; surface a missing file as such
@@ -138,8 +203,74 @@ def import_wisdom(source: str) -> int:
     entries = data.get("entries")
     if not isinstance(entries, dict):
         return 0
-    _WISDOM.update(entries)
+    for key, entry in entries.items():
+        if key in _WISDOM:
+            _WISDOM[key] = merge_wisdom_entry(_WISDOM[key], entry)
+        else:
+            _WISDOM[key] = entry
     return len(entries)
+
+
+def parse_wisdom_key(key: str) -> Optional[dict]:
+    """Decode a wisdom key back into the problem it describes, or None
+    when the key is unparseable (foreign/stale formats are skipped, not
+    errors -- same advisory contract as :func:`import_wisdom`).
+
+    Returns a dict with ``shape`` (tuple), ``ndim``, ``dtype``, ``p``,
+    ``dev``, ``decomp``, ``direction``, ``real``, ``pad``,
+    ``transpose_back``, ``local_impl`` and -- pencil keys -- ``grid``
+    ((rows, cols)) and ``axes`` ((row_axis, col_axis)). The serving
+    plan pool uses this to pre-plan every shape a wisdom file knows."""
+    fields: Dict[str, str] = {}
+    parts = key.split("|")
+    if not parts or parts[0] != f"v{WISDOM_VERSION}":
+        return None
+    for part in parts[1:]:
+        name, sep, value = part.partition("=")
+        if sep and name not in fields:  # opts fields never shadow base ones
+            fields[name] = value
+    try:
+        shape = tuple(int(d) for d in fields["shape"].split("x"))
+        out = {
+            "shape": shape,
+            "ndim": int(fields["ndim"]),
+            "dtype": fields["dtype"],
+            "p": int(fields["P"]),
+            "dev": fields["dev"],
+        }
+    except (KeyError, ValueError):
+        return None
+    # the last |-field is the opts blob: comma-separated name=value pairs
+    # (see plan_measured's wisdom_key call); on an opts-less key it is
+    # the dev field, which parses to nothing relevant and defaults apply
+    opts: Dict[str, str] = {}
+    for part in parts[-1].split(","):
+        name, sep, value = part.partition("=")
+        if sep:
+            opts[name] = value
+    out["decomp"] = opts.get("decomp", "slab")
+    out["direction"] = opts.get("dir", "forward")
+    out["local_impl"] = opts.get("impl", "jnp")
+    out["real"] = opts.get("real") == "1"
+    out["pad"] = opts.get("pad", "1") == "1"
+    out["transpose_back"] = opts.get("tb") == "1"
+    out["fuse_dft"] = opts.get("fuse") == "1"
+    out["pipeline"] = opts.get("pipe")  # None unless pinned at measure time
+    if out["decomp"] == "pencil":
+        try:
+            rows, _, cols = opts["grid"].partition("x")
+            row_ax, _, col_ax = opts["axes"].partition("+")
+            out["grid"] = (int(rows), int(cols))
+            out["axes"] = (row_ax, col_ax)
+        except (KeyError, ValueError):
+            return None
+    return out
+
+
+def wisdom_items():
+    """Snapshot of the in-process wisdom store as (key, entry) pairs --
+    the read-only view the serving pool's warm start iterates."""
+    return list(_WISDOM.items())
 
 
 def forget_wisdom() -> None:

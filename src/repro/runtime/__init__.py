@@ -1,7 +1,7 @@
 from repro.runtime.elastic import FailureInjector, SimulatedFailure, elastic_mesh, run_with_recovery
-from repro.runtime.monitor import StepMonitor, StepStats
+from repro.runtime.monitor import LatencyWindow, StepMonitor, StepStats, percentiles
 
 __all__ = [
-    "FailureInjector", "SimulatedFailure", "StepMonitor", "StepStats",
-    "elastic_mesh", "run_with_recovery",
+    "FailureInjector", "LatencyWindow", "SimulatedFailure", "StepMonitor",
+    "StepStats", "elastic_mesh", "percentiles", "run_with_recovery",
 ]

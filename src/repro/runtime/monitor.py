@@ -11,9 +11,11 @@ detection half; launch/train.py wires it to logging + the recovery loop.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
-from typing import List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -22,6 +24,56 @@ class StepStats:
     seconds: float
     tokens: int
     flagged: bool
+
+
+def percentiles(
+    samples: Iterable[float], qs: Sequence[float] = (50, 90, 99)
+) -> Dict[str, float]:
+    """Nearest-rank percentiles of ``samples``: ``{"p50": ..., ...}``.
+    Empty input returns 0.0 for every quantile (a serving dashboard
+    wants numbers, not exceptions, before traffic arrives)."""
+    data = sorted(samples)
+    out = {}
+    for q in qs:
+        if not 0 <= q <= 100:
+            raise ValueError(f"percentile must be in [0, 100], got {q}")
+        label = f"{q:g}".replace(".", "_")
+        if not data:
+            out[f"p{label}"] = 0.0
+            continue
+        # nearest-rank: ceil(q/100 * n), 1-indexed; p0 -> first sample
+        rank = max(1, math.ceil(q / 100 * len(data)))
+        out[f"p{label}"] = float(data[min(rank, len(data)) - 1])
+    return out
+
+
+class LatencyWindow:
+    """Rolling window of recent scalar samples (latencies, queue depths)
+    with O(1) record and on-demand percentile summaries -- the telemetry
+    primitive behind the spectral serving engine's p50/p99 stats."""
+
+    def __init__(self, maxlen: int = 2048):
+        self._window: collections.deque = collections.deque(maxlen=maxlen)
+        self.count = 0  # lifetime samples, not just the retained window
+        self.total = 0.0
+
+    def record(self, value: float) -> None:
+        self._window.append(float(value))
+        self.count += 1
+        self.total += float(value)
+
+    def __len__(self) -> int:
+        return len(self._window)
+
+    def percentiles(self, qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+        return percentiles(self._window, qs)
+
+    def summary(self, qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+        out = self.percentiles(qs)
+        out["count"] = self.count
+        out["mean"] = (self.total / self.count) if self.count else 0.0
+        out["max"] = max(self._window) if self._window else 0.0
+        return out
 
 
 class StepMonitor:
@@ -50,6 +102,15 @@ class StepMonitor:
         self.history.append(st)
         self._step += 1
         return st
+
+    def percentiles(
+        self, qs: Sequence[float] = (50, 90, 99), window: Optional[int] = None
+    ) -> Dict[str, float]:
+        """Step-time percentiles over the most recent ``window`` steps
+        (default: all history) -- the p50/p99 view of the same samples
+        the EMA smooths."""
+        recent = self.history if window is None else self.history[-window:]
+        return percentiles((s.seconds for s in recent), qs)
 
     @property
     def tokens_per_sec(self) -> float:

@@ -1,3 +1,22 @@
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.queue import Admission, CoalescingQueue, PendingQueue
+from repro.serve.spectral import (
+    PlanPool,
+    SpectralEngine,
+    SpectralFuture,
+    SpectralRequest,
+    plan_key,
+)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "Admission",
+    "CoalescingQueue",
+    "PendingQueue",
+    "PlanPool",
+    "Request",
+    "ServeEngine",
+    "SpectralEngine",
+    "SpectralFuture",
+    "SpectralRequest",
+    "plan_key",
+]

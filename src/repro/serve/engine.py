@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models.model import Model
+from repro.serve.queue import PendingQueue
 
 
 @dataclasses.dataclass
@@ -114,15 +115,17 @@ class ServeEngine:
     def run(self, prompts: List[np.ndarray], max_new: int = 32) -> Dict[int, List[int]]:
         """Convenience driver: serve all prompts to completion."""
         results: Dict[int, List[int]] = {}
-        pending = list(prompts)
+        # deque-backed FIFO (shared with the spectral serving queue):
+        # the old list.pop(0) was O(n) per admit, O(n^2) per drain
+        pending = PendingQueue(prompts)
         submitted = {}
         while pending or any(s is not None for s in self.slots):
             while pending:
-                slot = self.add_request(pending[0], max_new)
+                slot = self.add_request(pending.peek(), max_new)
                 if slot is None:
                     break
                 submitted[self.slots[slot].uid] = True
-                pending.pop(0)
+                pending.pop()
             for r in self.step():
                 results[r.uid] = r.out
         return results

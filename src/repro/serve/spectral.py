@@ -1,0 +1,640 @@
+"""Spectral serving engine: many concurrent FFT-family requests, one mesh.
+
+The benchmark stack runs one large transform at a time; serving traffic
+is the opposite shape -- many small-to-medium fft/rfft/poisson/convolve/
+gradient requests arriving concurrently. This module is the slot-based
+:class:`~repro.serve.engine.ServeEngine` idea rebuilt for the spectral
+workload, on top of the plan front-end:
+
+- **Warm plan-cache pool** (:class:`PlanPool`): plans keyed like planner
+  wisdom (shape / ndim / dtype / P / decomp / real), LRU-evicted beyond
+  ``capacity``. :meth:`PlanPool.warm_from_wisdom` parses an imported
+  wisdom file and pre-plans (and pre-compiles) every entry matching this
+  mesh, so a warmed engine's request latency path contains **no**
+  ``plan_fft`` call and no jit compile.
+- **Request coalescing** (:class:`repro.serve.queue.CoalescingQueue`):
+  same-key requests (same op + shape + dtype + real + lengths) batch
+  into ONE stacked execution -- the batch axis is a leading dim of the
+  plan's ``global_shape``, riding the existing odd-batch support. Batch
+  sizes round up to power-of-two buckets (zero-padded, outputs sliced
+  back per request) so the compile cache stays O(log max_batch) per
+  shape. Admission is max-batch / max-wait.
+- **Async dispatch**: a dispatched batch is never blocked on --
+  ``jax``'s async dispatch keeps exchanges from different in-flight
+  batches overlapping on device; callers get a :class:`SpectralFuture`
+  and block only when (and if) they need the value.
+- **Telemetry**: p50/p99 request latency, queue-wait and queue-depth
+  windows (:class:`repro.runtime.monitor.LatencyWindow`), coalescing
+  factor, and plan-pool hit/miss/eviction counters -- the numbers
+  ``benchmarks/serve_sweep.py`` turns into the serve section of
+  ``BENCH_fft.json``.
+
+Request ops (all flow through any :class:`repro.core.Plan`): ``fft``,
+``rfft``, ``ifft`` (c2c spectrum in the plan's own layout), ``poisson``,
+``convolve``, ``correlate``, ``gradient``, ``laplacian``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import convolve as _convolve
+from repro.apps import derivatives as _derivatives
+from repro.apps import poisson as _poisson
+from repro.core import planner as _planner
+from repro.core.plan import plan_fft
+from repro.runtime.monitor import LatencyWindow
+from repro.serve.queue import Admission, CoalescingQueue
+
+
+# ---------------------------------------------------------------------------
+# Request ops -- every op takes (plan, stacked operands, lengths)
+# ---------------------------------------------------------------------------
+
+
+def _op_fft(plan, ops, lengths):
+    return plan.execute(ops[0])
+
+
+def _op_ifft(plan, ops, lengths):
+    return plan.inverse(ops[0])
+
+
+def _op_poisson(plan, ops, lengths):
+    return _poisson.solve_poisson(ops[0], plan, lengths)
+
+
+def _op_convolve(plan, ops, lengths):
+    return _convolve.fft_convolve(ops[0], ops[1], plan)
+
+
+def _op_correlate(plan, ops, lengths):
+    return _convolve.fft_correlate(ops[0], ops[1], plan)
+
+
+def _op_gradient(plan, ops, lengths):
+    return _derivatives.gradient(ops[0], plan, lengths)
+
+
+def _op_laplacian(plan, ops, lengths):
+    return _derivatives.laplacian(ops[0], plan, lengths)
+
+
+#: op name -> (fn, arity). "rfft" is "fft" with a real-input check;
+#: "ifft" consumes the spectrum in the plan's own forward-output layout
+#: (c2c only -- a real plan's spectrum shape is not the request shape).
+_OPS: Dict[str, Tuple[Callable, int]] = {
+    "fft": (_op_fft, 1),
+    "rfft": (_op_fft, 1),
+    "ifft": (_op_ifft, 1),
+    "poisson": (_op_poisson, 1),
+    "convolve": (_op_convolve, 2),
+    "correlate": (_op_correlate, 2),
+    "gradient": (_op_gradient, 1),
+    "laplacian": (_op_laplacian, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Plan pool
+# ---------------------------------------------------------------------------
+
+
+def plan_key(shape, ndim: int, dtype, p: int, decomp: str, real: bool) -> str:
+    """Pool key, the same identity the planner's wisdom keys carry:
+    shape (batch bucket included) / ndim / dtype / P / decomp / real."""
+    dims = "x".join(str(d) for d in shape)
+    return (
+        f"shape={dims}|ndim={ndim}|dtype={jnp.dtype(dtype).name}|P={p}"
+        f"|decomp={decomp}|real={int(real)}"
+    )
+
+
+class PlanPool:
+    """LRU cache of warm (validated, backend-resolved, compiled) plans.
+
+    ``get`` returns a cached plan or builds one through
+    :func:`repro.core.plan_fft` (``planner="measure"`` consults/extends
+    wisdom); beyond ``capacity`` the least-recently-used plan is evicted
+    with its compiled executables. ``warm_from_wisdom`` pre-populates
+    the pool from a wisdom file so serving starts hot."""
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        capacity: int = 32,
+        planner: str = "estimate",
+        plan_kwargs: Optional[dict] = None,
+    ):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.mesh = mesh
+        self.capacity = capacity
+        self.planner = planner
+        self.plan_kwargs = dict(plan_kwargs or {})
+        self.decomp = self.plan_kwargs.get("decomp", "slab")
+        self._plans: "collections.OrderedDict[str, object]" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.plan_seconds = 0.0  # time spent planning on the request path
+        self.warm_seconds = 0.0  # time spent planning/compiling at warm start
+
+    # -- identity ---------------------------------------------------------
+    def shards(self) -> int:
+        """Shard count plans from this pool run over (P of the key)."""
+        from repro.core.grid import grid_from_mesh
+        from repro.core.sharding import fft_axis
+
+        if self.decomp == "pencil":
+            grid = grid_from_mesh(
+                self.mesh,
+                self.plan_kwargs.get("row_axis"),
+                self.plan_kwargs.get("col_axis"),
+            )
+            return grid.size
+        ax = self.plan_kwargs.get("axis_name") or fft_axis(self.mesh)
+        return self.mesh.shape[ax]
+
+    def key(self, shape, ndim: int, dtype, real: bool) -> str:
+        return plan_key(shape, ndim, dtype, self.shards(), self.decomp, real)
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._plans
+
+    def keys(self):
+        return list(self._plans)
+
+    # -- core -------------------------------------------------------------
+    def _build(self, shape, ndim, dtype, real, backend: Optional[str] = None):
+        kwargs = dict(self.plan_kwargs)
+        if backend is not None:
+            kwargs["backend"] = backend
+            kwargs.pop("planner", None)
+        else:
+            kwargs.setdefault("planner", self.planner)
+        return plan_fft(
+            tuple(shape), self.mesh, ndim=ndim, dtype=dtype, real=real, **kwargs
+        )
+
+    def _insert(self, key: str, plan) -> None:
+        self._plans[key] = plan
+        self._plans.move_to_end(key)
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+
+    def get(self, shape, ndim: int, dtype, real: bool):
+        """(plan, hit): the cached plan for this problem, planning (and
+        counting a miss) when cold."""
+        key = self.key(shape, ndim, dtype, real)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.hits += 1
+            return plan, True
+        self.misses += 1
+        t0 = time.perf_counter()
+        plan = self._build(shape, ndim, dtype, real)
+        self.plan_seconds += time.perf_counter() - t0
+        self._insert(key, plan)
+        return plan, False
+
+    # -- warm start -------------------------------------------------------
+    def warm(
+        self,
+        shape,
+        ndim: int,
+        dtype,
+        real: bool,
+        *,
+        backend: Optional[str] = None,
+        compile: bool = True,
+    ):
+        """Pre-plan one problem into the pool (pinning ``backend`` when
+        given -- e.g. a wisdom entry's recorded winner, variant id
+        included) and, with ``compile``, run zeros through both cached
+        executables so the first real request pays neither ``plan_fft``
+        nor jit."""
+        key = self.key(shape, ndim, dtype, real)
+        plan = self._plans.get(key)
+        t0 = time.perf_counter()
+        if plan is None:
+            plan = self._build(shape, ndim, dtype, real, backend=backend)
+            self._insert(key, plan)
+        if compile:
+            spec = plan.input_spec()
+            x = jax.device_put(jnp.zeros(spec.shape, spec.dtype), spec.sharding)
+            y = plan.execute(x)
+            if plan.ndim > 1:  # 1-D large has no inverse
+                y = plan.inverse(y)
+            jax.block_until_ready(y)
+        self.warm_seconds += time.perf_counter() - t0
+        return plan
+
+    def warm_from_wisdom(
+        self, source: Optional[str] = None, *, compile: bool = True
+    ) -> int:
+        """Import ``source`` (path or JSON text; None = use wisdom
+        already in process) and pre-plan every entry matching this
+        pool's mesh, decomposition and device kind, pinned to the
+        recorded winning backend. Returns the number of plans warmed;
+        unparseable or mismatched entries are skipped (wisdom stays
+        advisory)."""
+        if source is not None:
+            _planner.import_wisdom(source)
+        dev = _planner.device_kind(self.mesh)
+        p = self.shards()
+        warmed = 0
+        for key, entry in _planner.wisdom_items():
+            info = _planner.parse_wisdom_key(key)
+            if info is None or info["dev"] != dev or info["p"] != p:
+                continue
+            if info["decomp"] != self.decomp or info["direction"] != "forward":
+                continue
+            if info["local_impl"] != self.plan_kwargs.get("local_impl", "jnp"):
+                continue
+            if info["fuse_dft"] or info["transpose_back"] or info["pipeline"]:
+                continue
+            if self.key(info["shape"], info["ndim"], info["dtype"], info["real"]) in self:
+                continue
+            backend = entry.get("backend") if isinstance(entry, dict) else None
+            try:
+                self.warm(
+                    info["shape"],
+                    info["ndim"],
+                    jnp.dtype(info["dtype"]),
+                    info["real"],
+                    backend=backend,
+                    compile=compile,
+                )
+            except (ValueError, NotImplementedError, TypeError):
+                continue  # foreign entry (other mesh axes, stale backend)
+            warmed += 1
+        return warmed
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "plans": len(self._plans),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "plan_seconds": self.plan_seconds,
+            "warm_seconds": self.warm_seconds,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Requests / futures
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpectralRequest:
+    op: str
+    operands: Tuple
+    ndim: int
+    real: bool
+    lengths: Optional[Tuple[float, ...]]
+    submit_t: float
+
+    @property
+    def shape(self):
+        return tuple(self.operands[0].shape)
+
+
+class SpectralFuture:
+    """Per-request handle. ``result()`` returns the (possibly still
+    in-flight) output, forcing dispatch of a still-queued request by
+    polling the engine at its admission deadline -- it never waits
+    longer than the queue's max-wait. ``block()`` additionally waits for
+    the device and records the request's end-to-end latency into the
+    engine's telemetry window."""
+
+    def __init__(self, engine: "SpectralEngine", request: SpectralRequest):
+        self._engine = engine
+        self.request = request
+        self._value = None
+        self._dispatched = False
+        self._recorded = False
+        self.dispatch_t: Optional[float] = None
+        self.batch_size: Optional[int] = None
+        self.pool_hit: Optional[bool] = None
+        self.backend: Optional[str] = None
+
+    def _resolve(self, value, *, dispatch_t, batch_size, pool_hit, backend) -> None:
+        self._value = value
+        self._dispatched = True
+        self.dispatch_t = dispatch_t
+        self.batch_size = batch_size
+        self.pool_hit = pool_hit
+        self.backend = backend
+
+    def done(self) -> bool:
+        """Dispatched (output possibly still in flight on device)."""
+        return self._dispatched
+
+    def result(self):
+        while not self._dispatched:
+            self._engine._force_dispatch()
+        return self._value
+
+    def block(self):
+        value = self.result()
+        jax.block_until_ready(value)
+        if not self._recorded:
+            self._recorded = True
+            self._engine._record_completion(self)
+        return value
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class SpectralEngine:
+    """Queue -> coalescer -> plan pool -> async dispatch.
+
+    Single-threaded and cooperative, like :class:`ServeEngine`: callers
+    ``submit`` (full batches dispatch inline), a driver loop ``poll``\\ s
+    to flush partially-filled batches past their max-wait, and
+    ``drain()`` flushes + blocks everything. The device-side overlap
+    between in-flight batches comes from jax's async dispatch -- the
+    engine never blocks on a batch it launched.
+    """
+
+    def __init__(
+        self,
+        mesh,
+        *,
+        max_batch: int = 8,
+        max_wait_s: float = 0.002,
+        coalesce: bool = True,
+        capacity: int = 32,
+        planner: str = "estimate",
+        plan_kwargs: Optional[dict] = None,
+        wisdom: Optional[str] = None,
+        warm_compile: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+        window: int = 2048,
+    ):
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.coalesce = coalesce
+        self._clock = clock
+        self.pool = PlanPool(
+            mesh, capacity=capacity, planner=planner, plan_kwargs=plan_kwargs
+        )
+        self.queue = CoalescingQueue(
+            Admission(max_batch=max_batch, max_wait_s=max_wait_s),
+            coalesce=coalesce,
+            clock=clock,
+        )
+        self._window_len = window
+        self.reset_stats()
+        self._outstanding: List[SpectralFuture] = []
+        if wisdom is not None:
+            self.warm_start(wisdom, compile=warm_compile)
+
+    def reset_stats(self) -> None:
+        """Zero the telemetry windows and counters (the plan pool and
+        its hit/miss history are kept) -- e.g. between benchmark
+        measurement windows."""
+        w = self._window_len
+        self.latency = LatencyWindow(w)  # submit -> device-done (blocked)
+        self.queue_wait = LatencyWindow(w)  # submit -> dispatch
+        self.queue_depth = LatencyWindow(w)  # sampled at each submit
+        self.batch_sizes = LatencyWindow(w)
+        self.requests = 0
+        self.batches = 0
+        self.padded = 0  # zero-pad rows added to fill buckets
+
+    # -- warm start -------------------------------------------------------
+    def warm_start(self, source: Optional[str] = None, *, compile: bool = True) -> int:
+        """Pre-plan every wisdom entry matching this mesh (see
+        :meth:`PlanPool.warm_from_wisdom`), for each hot shape warming
+        all power-of-two batch buckets the coalescer can produce --
+        a steady-state request then never sees ``plan_fft`` or jit."""
+        warmed = self.pool.warm_from_wisdom(source, compile=compile)
+        # wisdom shapes are batched global shapes; extend each to the
+        # full bucket ladder so partial batches of the same shape are
+        # warm too (a (8, n, n) entry warms (1|2|4, n, n) as well)
+        for key in self.pool.keys():
+            plan = self.pool._plans[key]
+            shape = plan.global_shape
+            if len(shape) <= plan.ndim or shape[0] not in self._buckets():
+                continue
+            for bucket in self._buckets():
+                if bucket == shape[0]:
+                    continue
+                try:
+                    self.pool.warm(
+                        (bucket,) + shape[1:], plan.ndim, plan.dtype, plan.real,
+                        backend=plan.backend, compile=compile,
+                    )
+                    warmed += 1
+                except (ValueError, NotImplementedError):
+                    continue
+        return warmed
+
+    def _buckets(self) -> List[int]:
+        out, b = [], 1
+        while b < self.max_batch:
+            out.append(b)
+            b <<= 1
+        out.append(self.max_batch)
+        return out
+
+    def _bucket(self, k: int) -> int:
+        b = 1
+        while b < k:
+            b <<= 1
+        return min(b, self.max_batch)
+
+    # -- submission -------------------------------------------------------
+    def submit(
+        self,
+        op: str,
+        x,
+        y=None,
+        *,
+        ndim: int = 2,
+        lengths: Optional[Sequence[float]] = None,
+    ) -> SpectralFuture:
+        """Enqueue one request; returns its future immediately. Any
+        coalesced batch the submission completes dispatches inline (no
+        blocking); partially-filled batches wait for more same-key
+        requests or the admission max-wait (see :meth:`poll`)."""
+        if op not in _OPS:
+            raise ValueError(f"unknown op {op!r}; serving ops: {sorted(_OPS)}")
+        fn, arity = _OPS[op]
+        if ndim not in (2, 3):
+            raise ValueError(f"serving covers ndim 2 or 3, got {ndim}")
+        x = jnp.asarray(x)
+        if x.ndim < ndim:
+            raise ValueError(f"op {op!r} input rank {x.ndim} < ndim={ndim}")
+        real = x.dtype.kind == "f"
+        if op == "rfft" and not real:
+            raise ValueError(
+                f"rfft takes a real input, got dtype {x.dtype.name} (use op='fft')"
+            )
+        if op == "ifft" and real:
+            raise ValueError(
+                "ifft consumes a c2c spectrum (complex); real inverse "
+                "transforms round-trip through the same future's plan"
+            )
+        operands = (x,)
+        if arity == 2:
+            if y is None:
+                raise ValueError(f"op {op!r} takes two operands (pass y=)")
+            y = jnp.asarray(y)
+            if y.shape != x.shape or y.dtype != x.dtype:
+                raise ValueError(
+                    f"op {op!r} operands must match: {x.shape}/{x.dtype.name} "
+                    f"vs {y.shape}/{y.dtype.name}"
+                )
+            operands = (x, y)
+        elif y is not None:
+            raise ValueError(f"op {op!r} takes one operand")
+        lengths = None if lengths is None else tuple(float(v) for v in lengths)
+        now = self._clock()
+        req = SpectralRequest(op, operands, ndim, real, lengths, now)
+        fut = SpectralFuture(self, req)
+        key = (op, tuple(x.shape), x.dtype.name, ndim, real, lengths)
+        self.queue.push(key, fut, now=now)
+        self.requests += 1
+        self._outstanding.append(fut)
+        self.queue_depth.record(self.queue.depth())
+        self._dispatch_batches(self.queue.ready(now))  # full batches only
+        return fut
+
+    # -- pumping ----------------------------------------------------------
+    def poll(self, now: Optional[float] = None) -> int:
+        """Dispatch every batch the admission policy has made ready
+        (full batches plus max-wait-expired partials); returns the
+        number of batches dispatched."""
+        return self._dispatch_batches(self.queue.ready(now))
+
+    def flush(self) -> int:
+        """Dispatch everything queued, policy or not."""
+        return self._dispatch_batches(self.queue.flush())
+
+    def drain(self) -> None:
+        """Flush the queue and block until every outstanding request's
+        output is on device (recording latencies, in submission order)."""
+        self.flush()
+        for fut in list(self._outstanding):
+            fut.block()
+
+    def _force_dispatch(self) -> None:
+        """A caller is blocked on a queued future: advance the clock to
+        the queue's admission deadline (the max-wait flush that would
+        happen anyway) instead of sleeping for it."""
+        now = self._clock()
+        deadline = self.queue.next_deadline(now)
+        if deadline is None or not self._dispatch_batches(
+            self.queue.ready(max(now, deadline))
+        ):
+            self.flush()  # defensive: never spin on a stuck queue
+
+    # -- dispatch ---------------------------------------------------------
+    def _plan_shape(self, op: str, shape: Tuple[int, ...], ndim: int) -> Tuple[int, ...]:
+        """The *planned* (data-side) shape behind a request: identical to
+        the request shape except for ``ifft``, whose input is a spectrum
+        in the plan's own forward-output layout -- slab fft2 without
+        transpose_back is transposed, pencil fft3 without transpose_back
+        is axis-reversed -- so the trailing dims map back accordingly.
+        (``decomp="auto"`` pools are treated as slab here; pin the
+        decomposition when serving non-square inverse traffic.)"""
+        if op != "ifft":
+            return shape
+        trail = shape[-ndim:]
+        tb = self.pool.plan_kwargs.get("transpose_back", False)
+        if self.pool.decomp == "pencil":
+            if ndim == 3 and not tb:
+                trail = trail[::-1]
+        elif ndim == 2 and not tb:
+            trail = (trail[1], trail[0])
+        return shape[:-ndim] + trail
+
+    def _dispatch_batches(self, batches) -> int:
+        for key, futs in batches:
+            self._dispatch(key, futs)
+        return len(batches)
+
+    def _dispatch(self, key, futs: List[SpectralFuture]) -> None:
+        op = key[0]
+        fn, arity = _OPS[op]
+        req0 = futs[0].request
+        shape, ndim, real, lengths = req0.shape, req0.ndim, req0.real, req0.lengths
+        k = len(futs)
+        bucket = self._bucket(k)
+        plan, hit = self.pool.get(
+            (bucket,) + self._plan_shape(op, shape, ndim),
+            ndim,
+            req0.operands[0].dtype,
+            real,
+        )
+        sharding = plan.input_sharding(opposite=(op == "ifft"))
+        stacked = []
+        for j in range(arity):
+            block = jnp.stack([f.request.operands[j] for f in futs])
+            if bucket > k:
+                block = jnp.concatenate(
+                    [block, jnp.zeros((bucket - k,) + shape, block.dtype)]
+                )
+            stacked.append(jax.device_put(block, sharding))
+        self.padded += bucket - k
+        out = fn(plan, tuple(stacked), lengths)
+        now = self._clock()
+        self.batches += 1
+        self.batch_sizes.record(k)
+        for i, fut in enumerate(futs):
+            value = (
+                tuple(o[i] for o in out) if isinstance(out, tuple) else out[i]
+            )
+            fut._resolve(
+                value,
+                dispatch_t=now,
+                batch_size=k,
+                pool_hit=hit,
+                backend=plan.backend,
+            )
+            self.queue_wait.record(now - fut.request.submit_t)
+
+    # -- telemetry --------------------------------------------------------
+    def _record_completion(self, fut: SpectralFuture) -> None:
+        self.latency.record(self._clock() - fut.request.submit_t)
+        try:
+            self._outstanding.remove(fut)
+        except ValueError:
+            pass
+
+    def stats(self) -> dict:
+        """Serving telemetry snapshot: request latency percentiles (over
+        blocked completions), queue wait/depth, coalescing factor, and
+        plan-pool counters."""
+        dispatched = int(self.batch_sizes.total)
+        return {
+            "requests": self.requests,
+            "completed": self.latency.count,
+            "batches": self.batches,
+            "mean_batch": (dispatched / self.batches) if self.batches else 0.0,
+            "padded": self.padded,
+            "latency_s": self.latency.summary((50, 90, 99)),
+            "queue_wait_s": self.queue_wait.summary((50, 90, 99)),
+            "queue_depth": self.queue_depth.summary((50, 99)),
+            "pool": self.pool.stats(),
+        }

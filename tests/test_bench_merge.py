@@ -64,6 +64,31 @@ def test_ran_section_fully_replaced_not_appended(tmp_path):
     assert merged == [{"bench": "real", "p": 8}]
 
 
+def test_serve_section_merges_like_the_rest(tmp_path):
+    """A --only serve re-run replaces the serve rows (both the load-sweep
+    and warm_start kinds) and leaves the transform sections alone."""
+    path = tmp_path / "BENCH_fft.json"
+    _write(path, [
+        {"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 1.0},
+        {"bench": "serve", "row": "load_sweep", "p": 8, "coalesce": True,
+         "load": 16, "tps": 100.0},
+        {"bench": "serve", "row": "warm_start", "p": 8, "cold_first_us": 9e4},
+    ])
+    merged = _merge_json(str(path), [
+        {"bench": "serve", "row": "load_sweep", "p": 8, "coalesce": True,
+         "load": 16, "tps": 250.0},
+        {"bench": "serve", "row": "load_sweep", "p": 8, "coalesce": False,
+         "load": 16, "tps": 150.0},
+        {"bench": "serve", "row": "warm_start", "p": 8, "cold_first_us": 8e4,
+         "warm_first_us": 7e3},
+    ])
+    serve = [r for r in merged if r["bench"] == "serve"]
+    assert len(serve) == 3
+    assert all(r.get("tps") != 100.0 for r in serve)  # old rows replaced
+    assert any(r.get("warm_first_us") == 7e3 for r in serve)
+    assert any(r["bench"] == "fft2" and r["measured_us"] == 1.0 for r in merged)
+
+
 def test_force_overwrites(tmp_path):
     path = tmp_path / "b.json"
     _write(path, [{"bench": "fft3_decomp", "p": 8}])

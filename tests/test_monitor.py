@@ -1,0 +1,133 @@
+"""Telemetry unit tests: nearest-rank percentiles, the LatencyWindow
+rolling buffer, and StepMonitor's straggler-EMA edge cases (warmup
+boundary, outliers never poisoning the baseline)."""
+
+import math
+
+import pytest
+
+from repro.runtime.monitor import LatencyWindow, StepMonitor, percentiles
+
+
+# ------------------------------------------------------------ percentiles
+class TestPercentiles:
+    def test_nearest_rank_basic(self):
+        # 1..100: nearest-rank pQ of n=100 is exactly the Qth value
+        data = list(range(1, 101))
+        out = percentiles(data, qs=(50, 90, 99))
+        assert out == {"p50": 50.0, "p90": 90.0, "p99": 99.0}
+
+    def test_small_sample(self):
+        # n=4: rank(50) = ceil(2) = 2, rank(99) = ceil(3.96) = 4
+        out = percentiles([10.0, 20.0, 30.0, 40.0], qs=(50, 99))
+        assert out["p50"] == 20.0
+        assert out["p99"] == 40.0
+
+    def test_single_sample_all_quantiles(self):
+        out = percentiles([7.0], qs=(0, 50, 100))
+        assert out == {"p0": 7.0, "p50": 7.0, "p100": 7.0}
+
+    def test_unsorted_input(self):
+        assert percentiles([3.0, 1.0, 2.0], qs=(100,))["p100"] == 3.0
+
+    def test_empty_returns_zero(self):
+        assert percentiles([], qs=(50, 99)) == {"p50": 0.0, "p99": 0.0}
+
+    def test_fractional_quantile_label(self):
+        out = percentiles(list(range(1, 1001)), qs=(99.9,))
+        assert list(out) == ["p99_9"]
+        assert out["p99_9"] == math.ceil(99.9 / 100 * 1000)
+
+    def test_out_of_range_raises(self):
+        with pytest.raises(ValueError):
+            percentiles([1.0], qs=(101,))
+        with pytest.raises(ValueError):
+            percentiles([1.0], qs=(-1,))
+
+
+# ---------------------------------------------------------- LatencyWindow
+class TestLatencyWindow:
+    def test_rolling_trim_keeps_recent(self):
+        w = LatencyWindow(maxlen=4)
+        for v in [100.0, 100.0, 1.0, 2.0, 3.0, 4.0]:
+            w.record(v)
+        # the two 100s fell off the window: percentiles see only 1..4
+        assert len(w) == 4
+        assert w.percentiles(qs=(100,))["p100"] == 4.0
+        # but count/total are lifetime
+        assert w.count == 6
+        assert w.summary()["count"] == 6
+        assert w.summary()["mean"] == pytest.approx(210.0 / 6)
+
+    def test_summary_fields(self):
+        w = LatencyWindow()
+        s = w.summary()
+        assert s["count"] == 0 and s["mean"] == 0.0 and s["max"] == 0.0
+        w.record(2.0)
+        w.record(4.0)
+        s = w.summary(qs=(50,))
+        assert s["p50"] == 2.0 and s["max"] == 4.0 and s["mean"] == 3.0
+
+
+# ------------------------------------------------------------ StepMonitor
+def _feed(mon, seconds):
+    """Drive StepMonitor with synthetic durations via a patched clock."""
+    t = [0.0]
+    real = __import__("time").perf_counter
+    try:
+        for dt in seconds:
+            mon._t0 = t[0]
+            t[0] += dt
+            import repro.runtime.monitor as m
+
+            orig = m.time.perf_counter
+            m.time.perf_counter = lambda: t[0]
+            try:
+                yield mon.stop()
+            finally:
+                m.time.perf_counter = orig
+    finally:
+        assert __import__("time").perf_counter is real
+
+
+class TestStepMonitorEMA:
+    def test_no_flag_during_warmup(self):
+        mon = StepMonitor(warmup=3, straggler_factor=2.0)
+        # a huge step inside warmup must not be flagged
+        stats = list(_feed(mon, [1.0, 50.0, 1.0]))
+        assert [s.flagged for s in stats] == [False, False, False]
+
+    def test_flag_after_warmup_and_baseline_survives(self):
+        mon = StepMonitor(ema_alpha=0.5, warmup=3, straggler_factor=2.0)
+        stats = list(_feed(mon, [1.0, 1.0, 1.0, 10.0, 1.0]))
+        assert stats[3].flagged  # 10s > 2 * ~1s EMA
+        # the outlier did NOT update the EMA: baseline stays ~1s, so a
+        # normal step right after is not flagged against a poisoned mean
+        assert mon.ema == pytest.approx(1.0)
+        assert not stats[4].flagged
+
+    def test_warmup_boundary_exact(self):
+        # warmup=2: first flag-eligible step is the third (index 2)
+        mon = StepMonitor(ema_alpha=0.0, warmup=2, straggler_factor=2.0)
+        stats = list(_feed(mon, [1.0, 10.0, 10.0]))
+        assert not stats[1].flagged  # len(history)==1 < warmup
+        assert stats[2].flagged  # len(history)==2 >= warmup
+
+    def test_unflagged_steps_update_ema(self):
+        mon = StepMonitor(ema_alpha=1.0, warmup=100)
+        list(_feed(mon, [1.0, 3.0]))
+        assert mon.ema == pytest.approx(3.0)  # alpha=1 -> tracks last
+
+    def test_percentiles_over_history_and_window(self):
+        mon = StepMonitor(warmup=1000)
+        list(_feed(mon, [float(i) for i in range(1, 11)]))
+        assert mon.percentiles(qs=(50,))["p50"] == 5.0
+        assert mon.percentiles(qs=(50,), window=2)["p50"] == 9.0
+
+    def test_straggler_report_counts(self):
+        mon = StepMonitor(ema_alpha=0.5, warmup=1, straggler_factor=2.0)
+        list(_feed(mon, [1.0, 1.0, 8.0, 1.0]))
+        rep = mon.straggler_report()
+        assert rep["steps"] == 4
+        assert rep["flagged"] == 1
+        assert rep["worst"] == 8.0

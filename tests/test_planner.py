@@ -431,3 +431,98 @@ def test_measure_planner_and_calibrate_4dev():
 
     out = run_subprocess(MEASURE_4DEV_CODE, devices=4)
     assert out.count("PASS") == 2, out
+
+
+# ------------------------------------------------- wisdom merge + atomic I/O
+def test_merge_wisdom_entry_unions_timings_and_reargmins():
+    old = {"backend": "scatter", "timings": {"scatter": 2.0, "bisection": 5.0}}
+    new = {"backend": "pairwise", "timings": {"pairwise": 1.0, "scatter": 3.0}}
+    merged = planner.merge_wisdom_entry(old, new)
+    # union keeps candidates only one side timed; overlaps take the newer
+    assert merged["timings"] == {"scatter": 3.0, "bisection": 5.0, "pairwise": 1.0}
+    assert merged["backend"] == "pairwise"  # argmin of the combined table
+    # malformed sides lose outright, never raise
+    assert planner.merge_wisdom_entry(old, {"backend": "x"}) == old
+    assert planner.merge_wisdom_entry("junk", new) == new
+    assert planner.merge_wisdom_entry(None, {}) == {}
+
+
+def test_export_wisdom_merges_existing_file(tmp_path):
+    """Two processes exporting to the same wisdom path interleave their
+    entries instead of the second clobbering the first."""
+    mesh = make_mesh_1d(1)
+    table = {n: float(i + 1) for i, n in enumerate(_supported(1))}
+    path = tmp_path / "wisdom.json"
+
+    plan_fft((32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    planner.export_wisdom(str(path))
+    planner.forget_wisdom()
+    plan_fft((64, 64), mesh, planner="measure", timer=_fake_timer(table))
+    planner.export_wisdom(str(path))  # a different process's sweep
+
+    data = json.loads(path.read_text())
+    shapes = {k.split("|")[1] for k in data["entries"]}
+    assert shapes == {"shape=32x32", "shape=64x64"}
+    # merge=False writes exactly this process's store
+    planner.export_wisdom(str(path), merge=False)
+    assert len(json.loads(path.read_text())["entries"]) == 1
+
+
+def test_export_wisdom_same_key_merge_prefers_in_memory(tmp_path):
+    """Same-key conflict on export: the in-memory (newer) entry's
+    overlapping timings win, disk-only candidates survive."""
+    path = tmp_path / "wisdom.json"
+    k = "v1|shape=8x8|ndim=2|dtype=complex64|P=1|backends=x|dev=cpu|mesh=m1"
+    path.write_text(json.dumps({
+        "version": planner.WISDOM_VERSION,
+        "entries": {k: {"backend": "old", "timings": {"old": 0.1, "other": 9.0}}},
+    }))
+    planner._WISDOM[k] = {"backend": "new", "timings": {"new": 0.5, "old": 7.0}}
+    data = json.loads(planner.export_wisdom(str(path)))
+    assert data["entries"][k]["timings"] == {"old": 7.0, "other": 9.0, "new": 0.5}
+    assert data["entries"][k]["backend"] == "new"
+
+
+def test_export_wisdom_atomic_leaves_no_temp_files(tmp_path):
+    path = tmp_path / "w.json"
+    planner._WISDOM["k"] = {"backend": "b", "timings": {"b": 1.0}}
+    planner.export_wisdom(str(path))
+    planner.export_wisdom(str(path))  # replace an existing file
+    assert [p.name for p in tmp_path.iterdir()] == ["w.json"]
+    # corrupt existing files are overwritten, not fatal
+    path.write_text("{broken")
+    planner.export_wisdom(str(path))
+    assert json.loads(path.read_text())["entries"]
+
+
+def test_import_wisdom_merges_instead_of_overwriting():
+    """Importing an older file can't undo newer in-process measurements
+    of candidates the file never timed."""
+    k = "v1|shape=8x8|ndim=2|dtype=complex64|P=1|backends=x|dev=cpu|mesh=m1"
+    planner._WISDOM[k] = {"backend": "fast", "timings": {"fast": 0.1}}
+    n = planner.import_wisdom(json.dumps({
+        "version": planner.WISDOM_VERSION,
+        "entries": {k: {"backend": "slow", "timings": {"slow": 5.0}}},
+    }))
+    assert n == 1
+    assert planner._WISDOM[k]["backend"] == "fast"
+    assert planner._WISDOM[k]["timings"] == {"fast": 0.1, "slow": 5.0}
+
+
+def test_parse_wisdom_key_roundtrip():
+    """Keys written by a real measure run decode back to the problem --
+    the serving pool's warm start depends on this."""
+    mesh = make_mesh_1d(1)
+    table = {n: 1.0 for n in _supported(1)}
+    plan_fft((2, 32, 32), mesh, planner="measure", timer=_fake_timer(table))
+    (key,) = planner._WISDOM
+    info = planner.parse_wisdom_key(key)
+    assert info is not None
+    assert info["shape"] == (2, 32, 32) and info["ndim"] == 2
+    assert info["dtype"] == "complex64" and info["p"] == 1
+    assert info["decomp"] == "slab" and info["direction"] == "forward"
+    assert not info["real"] and not info["transpose_back"]
+    # foreign keys decode to None, not exceptions
+    assert planner.parse_wisdom_key("v999|shape=8x8") is None
+    assert planner.parse_wisdom_key("garbage") is None
+    assert planner.parse_wisdom_key("v1|shape=axb|ndim=2") is None

@@ -1,0 +1,412 @@
+"""Spectral serving engine: coalesced == sequential across decompositions
+and transform kinds, LRU plan eviction, admission max-wait with an
+injected clock, power-of-two bucket padding, warm start from wisdom.
+
+Queue/pool/admission mechanics run in-process on a P=1 mesh (plan
+correctness there is covered by the distributed suites); the
+end-to-end numerical equivalences run in an 8-device subprocess."""
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+jax = pytest.importorskip("jax")
+jnp = jax.numpy
+
+from repro.core.compat import make_mesh  # noqa: E402
+from repro.serve import (  # noqa: E402
+    Admission,
+    CoalescingQueue,
+    PendingQueue,
+    PlanPool,
+    SpectralEngine,
+    plan_key,
+)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture
+def mesh1():
+    return make_mesh((1,), ("model",))
+
+
+# ------------------------------------------------------------ queue units
+class TestPendingQueue:
+    def test_fifo_order(self):
+        q = PendingQueue([1, 2])
+        q.push(3)
+        assert len(q) == 3 and q.peek() == 1
+        assert [q.pop(), q.pop(), q.pop()] == [1, 2, 3]
+        assert not q
+
+    def test_pop_empty_raises(self):
+        with pytest.raises(IndexError):
+            PendingQueue().pop()
+
+
+class TestCoalescingQueue:
+    def test_full_batch_ready_immediately(self):
+        clk = FakeClock()
+        q = CoalescingQueue(Admission(max_batch=2, max_wait_s=10.0), clock=clk)
+        q.push("k", "a")
+        assert q.ready() == []  # partial, deadline far away
+        q.push("k", "b")
+        assert q.ready() == [("k", ["a", "b"])]
+        assert q.depth() == 0
+
+    def test_partial_flushes_only_after_max_wait(self):
+        clk = FakeClock()
+        q = CoalescingQueue(Admission(max_batch=4, max_wait_s=1.0), clock=clk)
+        q.push("k", "a")
+        clk.advance(0.5)
+        assert q.ready() == []
+        assert q.next_deadline() == pytest.approx(1.0)
+        clk.advance(0.5)
+        assert q.ready() == [("k", ["a"])]
+
+    def test_keys_do_not_mix(self):
+        clk = FakeClock()
+        q = CoalescingQueue(Admission(max_batch=2, max_wait_s=0.0), clock=clk)
+        q.push("k1", "a")
+        q.push("k2", "b")
+        assert sorted(q.ready()) == [("k1", ["a"]), ("k2", ["b"])]
+
+    def test_coalesce_off_batches_of_one(self):
+        clk = FakeClock()
+        q = CoalescingQueue(
+            Admission(max_batch=8, max_wait_s=10.0), coalesce=False, clock=clk
+        )
+        for v in "abc":
+            q.push("k", v)
+        assert q.ready() == [("k", ["a"]), ("k", ["b"]), ("k", ["c"])]
+
+    def test_flush_chunks_at_max_batch(self):
+        q = CoalescingQueue(Admission(max_batch=2, max_wait_s=10.0), clock=FakeClock())
+        for v in "abcde":
+            q.push("k", v)
+        # 4 popped inline as full batches would need ready(); flush pops all
+        assert q.flush() == [("k", ["a", "b"]), ("k", ["c", "d"]), ("k", ["e"])]
+
+    def test_bad_admission(self):
+        with pytest.raises(ValueError):
+            Admission(max_batch=0)
+        with pytest.raises(ValueError):
+            Admission(max_wait_s=-1.0)
+
+
+# -------------------------------------------------------------- plan pool
+class TestPlanPool:
+    def test_lru_eviction(self, mesh1):
+        pool = PlanPool(mesh1, capacity=2)
+        k16 = pool.key((1, 16, 16), 2, jnp.complex64, False)
+        pool.get((1, 16, 16), 2, jnp.complex64, False)
+        pool.get((1, 8, 8), 2, jnp.complex64, False)
+        pool.get((1, 16, 16), 2, jnp.complex64, False)  # refresh 16 -> MRU
+        pool.get((1, 4, 4), 2, jnp.complex64, False)  # evicts the 8x8 plan
+        assert pool.evictions == 1
+        assert len(pool) == 2
+        assert k16 in pool
+        assert pool.key((1, 8, 8), 2, jnp.complex64, False) not in pool
+        # re-requesting the evicted shape re-plans (a miss, not an error)
+        misses = pool.misses
+        pool.get((1, 8, 8), 2, jnp.complex64, False)
+        assert pool.misses == misses + 1
+
+    def test_hit_vs_miss_counters(self, mesh1):
+        pool = PlanPool(mesh1)
+        _, hit = pool.get((1, 8, 8), 2, jnp.complex64, False)
+        assert not hit and pool.misses == 1 and pool.plan_seconds > 0
+        _, hit = pool.get((1, 8, 8), 2, jnp.complex64, False)
+        assert hit and pool.hits == 1
+
+    def test_key_separates_real_and_dtype(self, mesh1):
+        pool = PlanPool(mesh1)
+        a = pool.key((1, 8, 8), 2, jnp.complex64, False)
+        b = pool.key((1, 8, 8), 2, jnp.complex64, True)
+        c = pool.key((1, 8, 8), 2, jnp.complex128, False)
+        assert len({a, b, c}) == 3
+        assert plan_key((1, 8, 8), 2, jnp.complex64, 1, "slab", False) == a
+
+    def test_capacity_validates(self, mesh1):
+        with pytest.raises(ValueError):
+            PlanPool(mesh1, capacity=0)
+
+
+# ----------------------------------------------------- engine (in-process)
+class TestEngineAdmission:
+    def test_full_batch_dispatches_inline(self, mesh1):
+        eng = SpectralEngine(mesh1, max_batch=2, max_wait_s=100.0, clock=FakeClock())
+        x = np.ones((8, 8), np.complex64)
+        f1 = eng.submit("fft", x)
+        assert not f1.done()  # partial batch queued
+        f2 = eng.submit("fft", x)
+        assert f1.done() and f2.done()  # completing the batch dispatched it
+        assert f1.batch_size == 2 and eng.batches == 1
+
+    def test_max_wait_flush_via_poll(self, mesh1):
+        clk = FakeClock()
+        eng = SpectralEngine(mesh1, max_batch=8, max_wait_s=1.0, clock=clk)
+        fut = eng.submit("fft", np.ones((8, 8), np.complex64))
+        assert eng.poll() == 0  # before the deadline: stays queued
+        clk.advance(1.5)
+        assert eng.poll() == 1
+        assert fut.done() and fut.batch_size == 1
+
+    def test_result_forces_dispatch_without_sleeping(self, mesh1):
+        clk = FakeClock()
+        eng = SpectralEngine(mesh1, max_batch=8, max_wait_s=50.0, clock=clk)
+        fut = eng.submit("fft", np.ones((8, 8), np.complex64))
+        out = fut.result()  # jumps the clock to the admission deadline
+        assert out.shape == (8, 8)
+        assert clk.t < 100.0  # no real sleeping involved
+
+    def test_bucket_padding_pow2(self, mesh1):
+        eng = SpectralEngine(mesh1, max_batch=8, max_wait_s=100.0, clock=FakeClock())
+        x = np.random.default_rng(0).standard_normal((8, 8)).astype(np.complex64)
+        futs = [eng.submit("fft", x) for _ in range(3)]
+        eng.flush()
+        assert all(f.batch_size == 3 for f in futs)
+        assert eng.padded == 1  # 3 -> bucket 4
+        # the pooled plan is the bucket-4 plan
+        assert eng.pool.key((4, 8, 8), 2, jnp.complex64, False) in eng.pool
+
+    def test_coalesce_off_is_solo(self, mesh1):
+        eng = SpectralEngine(
+            mesh1, max_batch=8, max_wait_s=0.0, coalesce=False, clock=FakeClock()
+        )
+        x = np.ones((8, 8), np.complex64)
+        for _ in range(4):
+            eng.submit("fft", x)
+        eng.flush()
+        s = eng.stats()
+        assert s["batches"] == 4 and s["mean_batch"] == 1.0 and s["padded"] == 0
+
+    def test_distinct_shapes_never_coalesce(self, mesh1):
+        eng = SpectralEngine(mesh1, max_batch=8, max_wait_s=0.0, clock=FakeClock())
+        eng.submit("fft", np.ones((8, 8), np.complex64))
+        eng.submit("fft", np.ones((16, 16), np.complex64))
+        eng.flush()
+        assert eng.batches == 2
+
+    def test_drain_blocks_everything(self, mesh1):
+        eng = SpectralEngine(mesh1, max_batch=8, max_wait_s=100.0, clock=FakeClock())
+        futs = [eng.submit("fft", np.ones((8, 8), np.complex64)) for _ in range(3)]
+        eng.drain()
+        assert all(f.done() for f in futs)
+        assert eng.stats()["completed"] == 3
+        assert not eng._outstanding
+
+    def test_submit_validation(self, mesh1):
+        eng = SpectralEngine(mesh1, clock=FakeClock())
+        with pytest.raises(ValueError, match="unknown op"):
+            eng.submit("dct", np.ones((8, 8), np.complex64))
+        with pytest.raises(ValueError, match="real input"):
+            eng.submit("rfft", np.ones((8, 8), np.complex64))
+        with pytest.raises(ValueError, match="complex"):
+            eng.submit("ifft", np.ones((8, 8), np.float32))
+        with pytest.raises(ValueError, match="two operands"):
+            eng.submit("convolve", np.ones((8, 8), np.float32))
+        with pytest.raises(ValueError, match="must match"):
+            eng.submit(
+                "convolve",
+                np.ones((8, 8), np.float32),
+                np.ones((4, 4), np.float32),
+            )
+        with pytest.raises(ValueError, match="ndim"):
+            eng.submit("fft", np.ones((8,), np.complex64), ndim=1)
+
+    def test_reset_stats_keeps_pool(self, mesh1):
+        eng = SpectralEngine(mesh1, max_batch=2, max_wait_s=0.0, clock=FakeClock())
+        eng.submit("fft", np.ones((8, 8), np.complex64))
+        eng.drain()
+        eng.reset_stats()
+        s = eng.stats()
+        assert s["requests"] == 0 and s["batches"] == 0
+        assert s["pool"]["plans"] == 1  # warm plans survive the reset
+
+
+class TestWarmStart:
+    def test_warm_from_wisdom_in_process(self, mesh1, tmp_path):
+        from repro.core import planner
+        from repro.core.plan import plan_fft
+
+        planner.forget_wisdom()
+        try:
+            # measure with a fake timer (no real racing), batched shape
+            plan_fft((2, 16, 16), mesh1, planner="measure", timer=lambda p: 1.0)
+            path = str(tmp_path / "wisdom.json")
+            planner.export_wisdom(path)
+            planner.forget_wisdom()
+            eng = SpectralEngine(
+                mesh1, max_batch=4, max_wait_s=0.0, wisdom=path,
+                warm_compile=False, clock=FakeClock(),
+            )
+            # the (2, n, n) entry warmed the whole bucket ladder 1|2|4
+            assert len(eng.pool) == 3
+            for b in (1, 2, 4):
+                assert eng.pool.key((b, 16, 16), 2, jnp.complex64, False) in eng.pool
+            # a request for that shape never plans
+            fut = eng.submit("fft", np.ones((16, 16), np.complex64))
+            eng.flush()
+            assert fut.pool_hit and eng.pool.misses == 0
+        finally:
+            planner.forget_wisdom()
+
+    def test_foreign_wisdom_skipped(self, mesh1, tmp_path):
+        import json
+
+        from repro.core import planner
+
+        path = tmp_path / "wisdom.json"
+        path.write_text(json.dumps({"wisdom": {"v1|garbage": {"backend": "x"}}}))
+        planner.forget_wisdom()
+        try:
+            eng = SpectralEngine(mesh1, wisdom=str(path), clock=FakeClock())
+            assert len(eng.pool) == 0  # unparseable entries are skipped
+        finally:
+            planner.forget_wisdom()
+
+
+# ------------------------------------------------- 8-device end-to-end
+FAST_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import plan_fft, planner
+from repro.core.compat import make_mesh
+from repro.serve import SpectralEngine
+
+mesh = make_mesh((8,), ("model",))
+rng = np.random.default_rng(7)
+n = 32
+
+def check(tag, got, want, tol=1e-4):
+    got = np.asarray(got); want = np.asarray(want)
+    assert got.shape == want.shape, (tag, got.shape, want.shape)
+    err = np.max(np.abs(got - want)) / max(np.max(np.abs(want)), 1e-30)
+    assert err < tol, (tag, err)
+    print("PASS", tag)
+
+# -- coalesced == sequential, slab c2c ---------------------------------
+xs = [(rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+       ).astype(np.complex64) for _ in range(5)]
+co = SpectralEngine(mesh, max_batch=8, max_wait_s=100.0)
+futs = [co.submit("fft", x) for x in xs]
+co.flush()
+solo = SpectralEngine(mesh, max_batch=8, coalesce=False, max_wait_s=0.0)
+sfuts = [solo.submit("fft", x) for x in xs]
+solo.flush()
+assert all(f.batch_size == 5 for f in futs)
+assert all(f.batch_size == 1 for f in sfuts)
+for i, (f, s) in enumerate(zip(futs, sfuts)):
+    check(f"slab_c2c_{i}", f.block(), s.block())
+# against the plan front-end directly
+ref = plan_fft((1, n, n), mesh)
+for i, f in enumerate(futs):
+    want = ref.execute(jnp.asarray(xs[i])[None])[0]
+    check(f"slab_vs_plan_{i}", f.result(), want)
+
+# coalesced forward -> coalesced inverse round-trips (spectrum layout)
+inv = [co.submit("ifft", f.result()) for f in futs]
+co.flush()
+for i, fi in enumerate(inv):
+    check(f"slab_roundtrip_{i}", fi.block(), xs[i])
+
+# -- r2c (rfft requests, real inputs, Hermitian payload) ---------------
+rs = [rng.standard_normal((n, n)).astype(np.float32) for _ in range(3)]
+rf = [co.submit("rfft", r) for r in rs]
+co.flush()
+srf = [solo.submit("rfft", r) for r in rs]
+solo.flush()
+for i, (f, s) in enumerate(zip(rf, srf)):
+    check(f"slab_r2c_{i}", f.block(), s.block())
+assert rf[0].batch_size == 3 and srf[0].batch_size == 1
+
+# -- pencil decomposition ----------------------------------------------
+pmesh = make_mesh((2, 4), ("rows", "cols"))
+ys = [(rng.standard_normal((4, n, n)) + 1j * rng.standard_normal((4, n, n))
+      ).astype(np.complex64) for _ in range(3)]
+pco = SpectralEngine(pmesh, max_batch=4, max_wait_s=100.0,
+                     plan_kwargs={"decomp": "pencil"})
+pfuts = [pco.submit("fft", y, ndim=3) for y in ys]
+pco.flush()
+psolo = SpectralEngine(pmesh, max_batch=4, coalesce=False, max_wait_s=0.0,
+                       plan_kwargs={"decomp": "pencil"})
+psfuts = [psolo.submit("fft", y, ndim=3) for y in ys]
+psolo.flush()
+for i, (f, s) in enumerate(zip(pfuts, psfuts)):
+    check(f"pencil_c2c_{i}", f.block(), s.block())
+
+# -- mixed ops coalesce per-key, poisson correctness -------------------
+from repro.apps import poisson as P
+k = 2 * np.pi
+xg = np.linspace(0, 1, n, endpoint=False)
+f2 = np.sin(k * xg)[:, None] * np.cos(k * xg)[None, :]
+rhs = (-2 * k * k * f2).astype(np.float32)
+mixed = SpectralEngine(mesh, max_batch=8, max_wait_s=100.0)
+pf = mixed.submit("poisson", rhs, lengths=(1.0, 1.0))
+gf = mixed.submit("rfft", rs[0])
+pf2 = mixed.submit("poisson", rhs, lengths=(1.0, 1.0))
+mixed.flush()
+assert pf.batch_size == 2 and gf.batch_size == 1  # per-key coalescing
+got = np.array(pf.block())  # copy: jax outputs view as read-only
+got -= got.mean()
+check("poisson", got, f2 - f2.mean(), tol=1e-3)
+check("poisson_pair", pf2.block(), pf.result())
+
+# -- async dispatch: submission does not block -------------------------
+a = SpectralEngine(mesh, max_batch=1)
+t_fut = a.submit("fft", xs[0])
+assert t_fut.done()  # max_batch=1: dispatched inline, not blocked on
+check("async_value", t_fut.block(), sfuts[0].result())
+print("PASS all")
+"""
+
+WARM_CODE = r"""
+import os, tempfile
+import numpy as np, jax.numpy as jnp
+from repro.core import plan_fft, planner
+from repro.core.compat import make_mesh
+from repro.serve import SpectralEngine
+
+mesh = make_mesh((8,), ("model",))
+n = 32
+x = (np.random.default_rng(7).standard_normal((n, n))
+     + 1j * np.random.default_rng(8).standard_normal((n, n))).astype(np.complex64)
+want = np.asarray(plan_fft((1, n, n), mesh).execute(jnp.asarray(x)[None])[0])
+
+# measure (real racing at P=8) -> export -> warm a fresh engine
+planner.forget_wisdom()
+plan_fft((2, n, n), mesh, planner="measure")
+wpath = os.path.join(tempfile.mkdtemp(), "w.json")
+planner.export_wisdom(wpath)
+planner.forget_wisdom()
+warm = SpectralEngine(mesh, max_batch=4, max_wait_s=0.0, wisdom=wpath)
+assert len(warm.pool) == 3, warm.pool.keys()  # bucket ladder 1|2|4
+wf = warm.submit("fft", x)
+warm.flush()
+assert wf.pool_hit and warm.pool.misses == 0  # no plan_fft in the path
+err = np.max(np.abs(np.asarray(wf.block()) - want))
+assert err < 1e-4 * np.max(np.abs(want)), err
+print("PASS warm")
+"""
+
+
+def test_spectral_serving_8dev():
+    out = run_subprocess(FAST_CODE, devices=8, timeout=900)
+    assert "PASS all" in out
+
+
+@pytest.mark.slow
+def test_spectral_warm_start_measured_8dev():
+    out = run_subprocess(WARM_CODE, devices=8, timeout=900)
+    assert "PASS warm" in out
