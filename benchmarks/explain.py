@@ -1,0 +1,60 @@
+"""``--explain``: dump the stage schedules the benchmarks execute.
+
+For each representative plan (the shapes the fft/pencil/real sweeps
+measure), print ``Plan.describe()`` -- the declarative stage pipeline
+(:mod:`repro.core.schedule`) with per-stage model-predicted microseconds
+and wire bytes per device. This is the observability companion to the
+timing sweeps: the same schedule object that executes is the one being
+priced, so a surprising measured row can be read stage by stage.
+
+Runs in a subprocess with 8 forced host devices (like every sweep), so
+the dumps reflect real 8-shard / 4x2-grid pipelines.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_devices_subprocess
+
+_CODE = r"""
+from repro.core import plan_fft
+from repro.core.compat import make_mesh
+
+n = __N__
+mesh = make_mesh((8,), ("model",))
+gmesh = make_mesh((4, 2), ("rows", "cols"))
+
+cases = [
+    ("slab c2c fft2 (fused streaming)",
+     dict(shape=(n, n), mesh=mesh, ndim=2, backend="scatter")),
+    ("slab c2c fft2 (unfused monolithic)",
+     dict(shape=(n, n), mesh=mesh, ndim=2, backend="scatter", pipeline=False)),
+    ("slab c2c fft3",
+     dict(shape=(64, 64, 64), mesh=mesh, ndim=3, backend="alltoall")),
+    ("slab c2c fft1d_large",
+     dict(shape=(n * n,), mesh=mesh, ndim=1, backend="scatter")),
+    ("slab r2c rfft2",
+     dict(shape=(n, n), mesh=mesh, ndim=2, backend="scatter", real=True)),
+    ("slab c2r irfft2",
+     dict(shape=(n, n), mesh=mesh, ndim=2, backend="scatter", real=True,
+          direction="inverse")),
+    ("pencil c2c fft3 (4x2 grid)",
+     dict(shape=(64, 64, 64), mesh=gmesh, ndim=3, decomp="pencil")),
+    ("pencil r2c rfft3 (4x2 grid)",
+     dict(shape=(64, 64, 64), mesh=gmesh, ndim=3, decomp="pencil", real=True)),
+]
+for title, kw in cases:
+    shape, m = kw.pop("shape"), kw.pop("mesh")
+    plan = plan_fft(shape, m, **kw)
+    print(f"== {title}: {plan!r}")
+    print(plan.describe())
+    print()
+"""
+
+
+def run(n: int = 256) -> str:
+    """The full explain dump (also printed by ``run.py --explain``)."""
+    return run_devices_subprocess(_CODE.replace("__N__", str(n)), devices=8)
+
+
+if __name__ == "__main__":
+    print(run(), end="")

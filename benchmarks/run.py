@@ -14,7 +14,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Run: PYTHONPATH=src python -m benchmarks.run
          [--only overlap,fig45,moe,kernel,fft,pencil,real,serve]
-     [--json BENCH_fft.json] [--force]
+     [--json BENCH_fft.json] [--force] [--explain]
+
+``--explain`` first prints each representative plan's stage schedule
+(``Plan.describe()``: the declarative pipeline IR with per-stage model
+microseconds and wire bytes); ``--explain --only ''`` prints only the
+schedules and times nothing.
 
 ``--json PATH`` additionally writes the fft_measure + pencil_sweep +
 real_sweep + overlap rows (measured + model-predicted per backend / per
@@ -51,7 +56,19 @@ def main() -> None:
         help="with --json: overwrite PATH instead of merging this run's "
         "sections into its existing rows",
     )
+    ap.add_argument(
+        "--explain",
+        action="store_true",
+        help="before timing anything, print each representative plan's "
+        "stage schedule (per-stage model microseconds + wire bytes); "
+        "alone (with --only ''), just the schedules",
+    )
     args = ap.parse_args()
+    if args.explain:
+        from benchmarks import explain
+
+        print(explain.run(), end="")
+        sys.stdout.flush()
     wanted = set(args.only.split(","))
     print("name,us_per_call,derived")
     rows = []

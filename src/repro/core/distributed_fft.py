@@ -1,5 +1,5 @@
-"""Pencil-decomposed distributed FFT composed from local FFTs + the
-collective-strategy transpose (the paper's application, §2).
+"""Slab-decomposed distributed FFT entry points over the stage-schedule
+IR (the paper's application, §2).
 
 Global data model for ``fft2``: x has shape (..., R, C) with R sharded
 over ``axis_name`` (P shards); leading axes are batch. The paper's four
@@ -26,75 +26,26 @@ the flight time -- the pipelined overlap executor
 slab chain, both pencil legs and the r2c subsystem. ``fuse_dft`` is the
 legacy fft2-only spelling and is honoured as an alias; ``n_chunks``
 decouples the streamed chunk count from P (see ``plan_fft(pipeline=)``).
+
+Every transform here is a thin builder over
+:mod:`repro.core.schedule`: the entry point lowers its arguments to a
+declarative stage schedule and hands it to the one interpreter
+(:func:`repro.core.schedule.run_schedule`), which is also what the cost
+model and the byte accounting walk.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 import repro.core.fftmath as lf
-import repro.core.transpose as tr
+import repro.core.schedule as sch
 from repro.core import backends
-from repro.core.compat import shard_map
-
-
-# ---------------------------------------------------------------------------
-# shard_map-local building blocks
-# ---------------------------------------------------------------------------
-
-
-def _fft_local_then_transpose(
-    x: jax.Array,
-    axis_name: str,
-    *,
-    strategy: tr.Strategy,
-    impl: lf.LocalImpl,
-    n_chunks: Optional[int] = None,
-) -> jax.Array:
-    """Steps 1-4 for one dimension: local FFT along the contiguous axis,
-    then the strategy-switched pencil exchange."""
-    y = lf.local_fft(x, axis=-1, impl=impl)
-    return tr.distributed_transpose(y, axis_name, strategy=strategy, n_chunks=n_chunks)
-
-
-def _fft2_fused_scatter(
-    x: jax.Array,
-    axis_name: str,
-    *,
-    impl: lf.LocalImpl,
-    strategy: tr.Strategy = "scatter",
-    n_chunks: Optional[int] = None,
-) -> jax.Array:
-    """fft2 second dimension folded into the exchange (fused execution).
-
-    After the row FFT, the column DFT of length R = P*r decomposes across
-    source ranks (decimation in time with n1 = P, n2 = r):
-
-        F[k1 + P*k2] = DFT_r over j2 [ T[k1, j2] * sum_src W_P[k1, src] * chunk_src[j2] ]
-
-    The inner sum streams through the backend's own chunk schedule with a
-    cheap rank-1 outer product per arriving (sub-)chunk -- fully
-    overlapped with the in-flight sends. The shared implementation is
-    :func:`repro.core.transpose.transpose_then_fft`, which the 3-D slab,
-    pencil and r2c chains ride too.
-    """
-    y = lf.local_fft(x, axis=-1, impl=impl)
-    return tr.transpose_then_fft(
-        y, axis_name, strategy=strategy, impl=impl, fused=True, n_chunks=n_chunks
-    )
-
-
-# ---------------------------------------------------------------------------
-# Public distributed transforms
-# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +85,16 @@ def _check(cfg: FFTConfig) -> backends.CollectiveBackend:
     return backend
 
 
+def _build(x: jax.Array, mesh: Mesh, axis_name: str, cfg: FFTConfig, *,
+           ndim: int, inverse: bool, rows: Optional[int] = None) -> sch.Schedule:
+    return sch.build_schedule(
+        x.shape, ndim=ndim, inverse=inverse, decomp="slab",
+        axis_name=axis_name, p=mesh.shape[axis_name], backend=cfg.strategy,
+        fused=_wants_fused(cfg), n_chunks=cfg.n_chunks,
+        transpose_back=cfg.transpose_back, rows=rows,
+    )
+
+
 def fft2(
     x: jax.Array,
     mesh: Mesh,
@@ -149,56 +110,13 @@ def fft2(
     ``inverse``, computes the unitary-unnormalized ifft2 (1/(R*C) factor),
     same layout conventions.
     """
-    backend = _check(cfg)
-    if backend.kind == "global":
-        return _fft2_xla_auto(x, mesh, axis_name, inverse=inverse, transpose_back=cfg.transpose_back)
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = jnp.conj(xl) if inverse else xl
-        if _wants_fused(cfg):
-            out = _fft2_fused_scatter(
-                v, axis_name, impl=cfg.local_impl, strategy=cfg.strategy,
-                n_chunks=cfg.n_chunks,
-            )
-        else:
-            out = _fft_local_then_transpose(
-                v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-                n_chunks=cfg.n_chunks,
-            )
-            out = lf.local_fft(out, axis=-1, impl=cfg.local_impl)
-        if cfg.transpose_back:
-            out = tr.distributed_transpose(
-                out, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-            )
-        if inverse:
-            out = jnp.conj(out) / (x.shape[-1] * x.shape[-2])
-        return out
-
-    ndim = x.ndim
-    spec = P(*([None] * (ndim - 2) + [axis_name, None]))
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    _check(cfg)
+    plan = _build(x, mesh, axis_name, cfg, ndim=2, inverse=inverse)
+    return sch.run_schedule(x, plan, mesh, impl=cfg.local_impl)
 
 
 def ifft2(x: jax.Array, mesh: Mesh, axis_name: str, cfg: FFTConfig = FFTConfig()) -> jax.Array:
     return fft2(x, mesh, axis_name, cfg, inverse=True)
-
-
-def _fft2_xla_auto(
-    x: jax.Array, mesh: Mesh, axis_name: str, *, inverse: bool, transpose_back: bool
-) -> jax.Array:
-    """The 'FFTW3 reference' analogue: hand the sharded array to XLA's own
-    FFT op under jit and let GSPMD choose the communication schedule."""
-    ndim = x.ndim
-    spec = P(*([None] * (ndim - 2) + [axis_name, None]))
-    sh = NamedSharding(mesh, spec)
-
-    def fn(v: jax.Array) -> jax.Array:
-        out = jnp.fft.ifft2(v) if inverse else jnp.fft.fft2(v)
-        if not transpose_back:
-            out = jnp.swapaxes(out, -1, -2)
-        return out
-
-    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(x)
 
 
 def fft3(
@@ -214,37 +132,9 @@ def fft3(
     Local batched 2-D FFT over (D1, D2), then one strategy-switched
     exchange to localize D0, FFT, and the exchange back (natural layout is
     always restored: 3-D users expect it)."""
-    backend = _check(cfg)
-    if backend.kind == "global":
-        ndim = x.ndim
-        spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
-        sh = NamedSharding(mesh, spec)
-        f = jnp.fft.ifftn if inverse else jnp.fft.fftn
-        return jax.jit(lambda v: f(v, axes=(-3, -2, -1)), in_shardings=sh, out_shardings=sh)(x)
-
-    d0, d1, d2 = x.shape[-3:]
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = jnp.conj(xl) if inverse else xl
-        v = lf.local_fft2(v, impl=cfg.local_impl)  # over (D1, D2), both local
-        flat = v.reshape(v.shape[:-2] + (d1 * d2,))  # (..., d0_local, D1*D2)
-        # D0 pass: exchange + FFT, fused into the arriving chunks on
-        # streaming backends (the pipelined overlap executor)
-        t = tr.transpose_then_fft(
-            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-            fused=_wants_fused(cfg), n_chunks=cfg.n_chunks,
-        )
-        back = tr.distributed_transpose(
-            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-        )
-        out = back.reshape(v.shape)
-        if inverse:
-            out = jnp.conj(out) / (d0 * d1 * d2)
-        return out
-
-    ndim = x.ndim
-    spec = P(*([None] * (ndim - 3) + [axis_name, None, None]))
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    _check(cfg)
+    plan = _build(x, mesh, axis_name, cfg, ndim=3, inverse=inverse)
+    return sch.run_schedule(x, plan, mesh, impl=cfg.local_impl)
 
 
 def fft1d_large(
@@ -262,64 +152,9 @@ def fft1d_large(
     (fused into the second exchange's chunks under ``scatter``), transpose,
     FFT_C, transpose. Returns the standard-ordered spectrum, R-sharded.
     """
-    backend = _check(cfg)
-    if backend.kind == "global":
-        ndim = x.ndim
-        sh = NamedSharding(mesh, P(*([None] * (ndim - 1) + [axis_name])))
-        return jax.jit(jnp.fft.fft, in_shardings=sh, out_shardings=sh)(x)
-
-    n = x.shape[-1]
-    p = mesh.shape[axis_name]
-    r = rows or p
-    if n % r or (n // r) % p or r % p:
-        raise ValueError(f"N={n} must factor as rows({r}) x cols with both divisible by P={p}")
-    c = n // r
-
-    def fn(xl: jax.Array) -> jax.Array:
-        me = lax.axis_index(axis_name)
-        # local rows block of A = x.reshape(R, C): (..., R/p, C)
-        a = xl.reshape(xl.shape[:-1] + (r // p, c))
-        # exchange 1: localize columns j2; FFT_R over j1 -> k1 -- fused
-        # into the arriving chunks on streaming backends
-        g = tr.transpose_then_fft(
-            a, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-            fused=_wants_fused(cfg), n_chunks=cfg.n_chunks,
-        )  # (..., C/p, R)
-
-        # Twiddle w_n^(j2*k1). Under a chunk-streaming backend it is fused
-        # into exchange 2's per-chunk compute (applied to each sub-chunk
-        # as it arrives -- the paper's 'hide computation behind
-        # communication'); otherwise applied up-front to the whole block.
-        if backend.supports_chunk_fn:
-
-            def tw_chunk(chunk: jax.Array, src: jax.Array, offset: int) -> jax.Array:
-                # chunk (..., R/p, rows): my k1 block x src's j2 rows
-                # [offset, offset+rows) of its C/p block.
-                k1 = me * (r // p) + jnp.arange(r // p)
-                j2 = src * (c // p) + offset + jnp.arange(chunk.shape[-1])
-                tw = jnp.exp(-2j * jnp.pi * (k1[:, None] * j2[None, :]) / n)
-                return chunk * tw.astype(chunk.dtype)
-
-            t2 = tr.distributed_transpose(
-                g, axis_name, strategy=cfg.strategy, chunk_fn=tw_chunk,
-                n_chunks=cfg.n_chunks,
-            )
-        else:
-            j2 = me * (c // p) + jnp.arange(c // p)
-            k1 = jnp.arange(r)
-            tw = jnp.exp(-2j * jnp.pi * (j2[:, None] * k1[None, :]) / n).astype(g.dtype)
-            t2 = tr.distributed_transpose(g * tw, axis_name, strategy=cfg.strategy)
-        f = lf.local_fft(t2, axis=-1, impl=cfg.local_impl)  # (..., R/p, C): F[k1, k2]
-        # X[k2*R + k1] = F[k1, k2]  =>  natural order is F^T flattened; one
-        # final exchange re-shards k2 and emits X contiguously.
-        t3 = tr.distributed_transpose(
-            f, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-        )
-        return t3.reshape(xl.shape[:-1] + (c // p * r,))
-
-    ndim = x.ndim
-    spec = P(*([None] * (ndim - 1) + [axis_name]))
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    _check(cfg)
+    plan = _build(x, mesh, axis_name, cfg, ndim=1, inverse=False, rows=rows)
+    return sch.run_schedule(x, plan, mesh, impl=cfg.local_impl)
 
 
 def reference_fft2(x: jax.Array, *, inverse: bool = False) -> jax.Array:

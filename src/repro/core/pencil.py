@@ -34,7 +34,10 @@ P_row*P_col, so its parallelism cap matches slab's P <= N.
 
 Every sub-exchange dispatches through :mod:`repro.core.backends` by
 name, exactly like the slab path -- whole-transform (``kind="global"``)
-backends have no shard_map transpose and are rejected per-axis.
+backends have no shard_map transpose and are rejected per-axis. Both
+transforms are thin builders over :mod:`repro.core.schedule`: they
+lower to a declarative stage schedule and run through the one
+interpreter, the same object the cost model walks.
 """
 
 from __future__ import annotations
@@ -42,13 +45,10 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 import repro.core.fftmath as lf
-import repro.core.transpose as tr
+import repro.core.schedule as sch
 from repro.core import backends
-from repro.core.compat import shard_map
 from repro.core.grid import ProcessGrid
 
 
@@ -97,31 +97,26 @@ def _check_backends(cfg: PencilConfig, grid: ProcessGrid) -> None:
 
 def check_divisible(global_shape, grid: ProcessGrid, ndim: int) -> None:
     """Raise a ValueError naming the offending data axis and grid
-    dimension when ``global_shape`` cannot be pencil-sharded -- the
-    plan-time guard, so the failure never surfaces as an opaque chunking
-    error deep inside :mod:`repro.core.transpose`."""
-    pr, pc = grid.p_rows, grid.p_cols
+    dimension when ``global_shape`` cannot be pencil-sharded.
+    Delegates to the one schedule-level validator
+    (:func:`repro.core.schedule.check_divisible`); kept as the
+    grid-flavored public spelling."""
+    sch.check_divisible(
+        global_shape, ndim, p_rows=grid.p_rows, p_cols=grid.p_cols,
+        row_axis=grid.row_axis, col_axis=grid.col_axis,
+    )
 
-    def need(axis_from_end: int, divisor: int, why: str) -> None:
-        size = global_shape[len(global_shape) - axis_from_end]
-        if size % divisor:
-            raise ValueError(
-                f"pencil fft{ndim}: data axis -{axis_from_end} (global size "
-                f"{size}) is not divisible by {why} -- shape "
-                f"{tuple(global_shape)} on grid {pr}x{pc} "
-                f"(row_axis={grid.row_axis!r}, col_axis={grid.col_axis!r})"
-            )
 
-    if ndim == 3:
-        need(3, pr, f"P_row={pr} ({grid.row_axis!r})")
-        need(2, pc, f"P_col={pc} ({grid.col_axis!r})")
-        need(2, pr, f"P_row={pr} ({grid.row_axis!r}; the rows exchange re-shards it)")
-        need(1, pc, f"P_col={pc} ({grid.col_axis!r}; the cols exchange re-shards it)")
-    elif ndim == 2:
-        need(2, pr * pc, f"P_row*P_col={pr * pc} (both sub-rings re-shard it)")
-        need(1, pr * pc, f"P_row*P_col={pr * pc} (both sub-rings re-shard it)")
-    else:
-        raise ValueError(f"pencil decomposition supports ndim 2 or 3, got {ndim}")
+def _build(x: jax.Array, grid: ProcessGrid, cfg: PencilConfig, *,
+           ndim: int, inverse: bool) -> sch.Schedule:
+    return sch.build_schedule(
+        x.shape, ndim=ndim, inverse=inverse, decomp="pencil",
+        row_axis=grid.row_axis, col_axis=grid.col_axis,
+        p_rows=grid.p_rows, p_cols=grid.p_cols,
+        backend_row=cfg.backend_row, backend_col=cfg.backend_col,
+        fused=cfg.fused, n_chunks=cfg.n_chunks,
+        transpose_back=cfg.transpose_back,
+    )
 
 
 def pencil_fft3(
@@ -141,45 +136,8 @@ def pencil_fft3(
     (1/(D0*D1*D2) normalization), same layout conventions.
     """
     _check_backends(cfg, grid)
-    check_divisible(x.shape, grid, 3)
-    d0, d1, d2 = x.shape[-3:]
-    row, col = grid.row_axis, grid.col_axis
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = jnp.conj(xl) if inverse else xl
-        # pass 1: D2 is local -- FFT it, then the cols sub-exchange
-        # swaps (D1, D2): (x_r, y_c, D2) -> (x_r, z_c, D1) with the D1
-        # FFT (pass 2) fused into the arriving chunks when backend_col
-        # streams -- each leg pipelines independently
-        v = lf.local_fft(v, axis=-1, impl=cfg.local_impl)
-        v = tr.transpose_then_fft(
-            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
-            fused=cfg.fused, n_chunks=cfg.n_chunks,
-        )
-        # pass 3 prep: the rows sub-exchange needs the rows-sharded D0
-        # at position -2: (x_r, z_c, D1) -> (z_c, x_r, D1); the D0 FFT
-        # fuses into the rows exchange when backend_row streams
-        v = jnp.swapaxes(v, -3, -2)
-        v = tr.transpose_then_fft(
-            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=cfg.fused, n_chunks=cfg.n_chunks,
-        )  # (z_c, y_r, D0), D0 transformed
-        if cfg.transpose_back:
-            v = tr.distributed_transpose(
-                v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
-            )
-            v = jnp.swapaxes(v, -3, -2)
-            v = tr.distributed_transpose(
-                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-            )
-        if inverse:
-            v = jnp.conj(v) / (d0 * d1 * d2)
-        return v
-
-    lead = [None] * (x.ndim - 3)
-    in_spec = P(*lead, row, col, None)
-    out_spec = in_spec if cfg.transpose_back else P(*lead, col, row, None)
-    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(x)
+    plan = _build(x, grid, cfg, ndim=3, inverse=inverse)
+    return sch.run_schedule(x, plan, grid.mesh, impl=cfg.local_impl)
 
 
 def pencil_fft2(
@@ -190,7 +148,7 @@ def pencil_fft2(
     inverse: bool = False,
 ) -> jax.Array:
     """Pencil-decomposed 2-D FFT of (..., R, C) with R sharded over
-    ``grid.row_axis`` and C over ``grid.col_axis``.
+    ``grid.row_axis`` and C sharded over ``grid.col_axis``.
 
     Each data dimension is transformed over its own grid axis
     (transpose / local FFT / transpose-back, i.e. two exchanges per
@@ -205,39 +163,5 @@ def pencil_fft2(
             "transpose_back applies to slab transforms and pencil fft3 only"
         )
     _check_backends(cfg, grid)
-    check_divisible(x.shape, grid, 2)
-    r_glob, c_glob = x.shape[-2:]
-    row, col = grid.row_axis, grid.col_axis
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = jnp.conj(xl) if inverse else xl
-        # pass A -- transform C over the cols sub-ring. The cols
-        # exchange wants the cols-sharded dim at -2 and a fully-local
-        # dim at -1: (r_r, c_c) -> (c_c, r_r) -> T_col -> (r_rc, C),
-        # with the C FFT fused into the arriving chunks when
-        # backend_col streams (the transpose-back stays monolithic --
-        # nothing follows it to fuse)
-        v = jnp.swapaxes(v, -1, -2)
-        v = tr.transpose_then_fft(
-            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
-            fused=cfg.fused, n_chunks=cfg.n_chunks,
-        )
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )
-        v = jnp.swapaxes(v, -1, -2)  # back to (r_r, c_c), C-dim done
-        # pass B -- transform R over the rows sub-ring: (r_r, c_c) is
-        # already (rows-sharded, local): T_row -> (c_cr, R).
-        v = tr.transpose_then_fft(
-            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=cfg.fused, n_chunks=cfg.n_chunks,
-        )
-        v = tr.distributed_transpose(
-            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
-        )
-        if inverse:
-            v = jnp.conj(v) / (r_glob * c_glob)
-        return v
-
-    spec = P(*([None] * (x.ndim - 2)), row, col)
-    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(x)
+    plan = _build(x, grid, cfg, ndim=2, inverse=inverse)
+    return sch.run_schedule(x, plan, grid.mesh, impl=cfg.local_impl)

@@ -41,12 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+import repro.core.schedule as sch
 from repro.core import backends
 from repro.core import comm_model as cm
-from repro.core import distributed_fft as dfft
 from repro.core.distributed_fft import FFTConfig
-
-_EXCHANGES = {1: 3, 2: 1, 3: 2}  # slab pencil-exchanges per forward transform
 
 #: Pair-key separator for pencil backend pairs ("scatter+bisection") --
 #: registry names are identifiers, so '+' cannot appear inside one.
@@ -250,6 +248,10 @@ class Plan:
         self.planner = "estimate"
         self.measured: Optional[Dict[str, float]] = None
         self.wisdom_hit = False
+        #: direction -> lowered stage schedule (the single pipeline truth
+        #: that execution, the cost model and the byte accounting share);
+        #: cleared whenever the decomposition/backends are (re)resolved
+        self._schedules: Dict[bool, sch.Schedule] = {}
 
         self.grid = None
         if decomp == "slab":
@@ -391,41 +393,15 @@ class Plan:
         return self._cost_bytes(dtype) / cm.HBM_BW
 
     def _init_slab(self, backend: str) -> None:
+        self._schedules.clear()
         p = self.shards
         shape, ax = self.global_shape, self.axis_name
         if self.real:
-            from repro.core import real as _real
-
-            self.hermitian_len, self.padded_hermitian_len = _real.check_divisible_slab(
-                shape, p, self.ndim, ax, pad=self.pad
+            self.hermitian_len, self.padded_hermitian_len = sch.check_divisible(
+                shape, self.ndim, p=p, axis_name=ax, real=True, pad=self.pad
             )
-        elif self.ndim == 2:
-            r, c = shape[-2:]
-            for off, size in ((2, r), (1, c)):
-                if size % p:
-                    raise ValueError(
-                        f"slab fft2: data axis -{off} (global size {size}) is not "
-                        f"divisible by mesh axis {ax!r} (P={p}) -- shape {shape}"
-                    )
-        elif self.ndim == 3:
-            d0, d1, d2 = shape[-3:]
-            if d0 % p:
-                raise ValueError(
-                    f"slab fft3: data axis -3 (global size {d0}) is not divisible "
-                    f"by mesh axis {ax!r} (P={p}) -- shape {shape}"
-                )
-            if (d1 * d2) % p:
-                raise ValueError(
-                    f"slab fft3: flattened axes (-2,-1) (size {d1}*{d2}={d1 * d2}) "
-                    f"not divisible by mesh axis {ax!r} (P={p}) -- shape {shape}"
-                )
         else:
-            n = shape[-1]
-            if n % (p * p):
-                raise ValueError(
-                    f"fft1d_large: data axis -1 (size {n}) must be divisible by "
-                    f"P^2={p * p} of mesh axis {ax!r} -- shape {shape}"
-                )
+            sch.check_divisible(shape, self.ndim, p=p, axis_name=ax)
 
         if not isinstance(backend, str) or PAIR_SEP in backend:
             raise ValueError(
@@ -476,15 +452,19 @@ class Plan:
                 "pencil fft2 already returns the natural layout; "
                 "transpose_back applies to slab plans and pencil fft3 only"
             )
+        self._schedules.clear()
         self.grid = _grid.grid_from_mesh(self.mesh, row_axis, col_axis)
+        g = self.grid
         if self.real:
-            from repro.core import real as _real
-
-            self.hermitian_len, self.padded_hermitian_len = _real.check_divisible_pencil(
-                self.global_shape, self.grid, self.ndim, pad=self.pad
+            self.hermitian_len, self.padded_hermitian_len = sch.check_divisible(
+                self.global_shape, self.ndim, p_rows=g.p_rows, p_cols=g.p_cols,
+                row_axis=g.row_axis, col_axis=g.col_axis, real=True, pad=self.pad,
             )
         else:
-            _pencil.check_divisible(self.global_shape, self.grid, self.ndim)
+            sch.check_divisible(
+                self.global_shape, self.ndim, p_rows=g.p_rows, p_cols=g.p_cols,
+                row_axis=g.row_axis, col_axis=g.col_axis,
+            )
 
         if backend == "auto":
             br, bc = backends.cheapest_pair(
@@ -545,49 +525,33 @@ class Plan:
         elems = float(np.prod(self.global_shape[:-1])) * self.padded_hermitian_len
         return elems * citem / self.shards
 
+    def _byte_sizes(self, dtype=None) -> Tuple[int, int]:
+        """(real_itemsize, complex_itemsize) a byte/cost query prices the
+        schedule's Exchange payloads with; either side of the r2c pair
+        may be passed, None means the plan's own dtypes."""
+        if self.real:
+            r, c = self._dtype_pair(dtype)
+            return r.itemsize, c.itemsize
+        item = jnp.dtype(dtype or self.dtype).itemsize
+        return item, item
+
     def comm_bytes(self, dtype=None) -> float:
         """Total bytes each device ships over the fabric per transform,
-        summed over every exchange -- each exchange re-shards the local
-        block over its ring (P for slab, P_row/P_col per sub-exchange
-        for pencil), shipping (1-1/P_ring) of it. Same units under both
-        decompositions, so slab-vs-pencil comparisons are direct.
+        summed over every Exchange stage of the plan's own schedule --
+        each exchange re-shards its block over its ring (P for slab,
+        P_row/P_col per sub-exchange for pencil), shipping (1-1/P_ring)
+        of it. Same units under both decompositions, so slab-vs-pencil
+        comparisons are direct.
 
         Real plans count the Hermitian payload: every complex exchange
         moves the truncated ``Hp`` block (~half the c2c bytes at the
         same shape); the pencil rfft2's first cols exchange moves the
         full-width block at the *real* dtype (also half). The c2r
         inverse mirrors the chain, so the total is direction-agnostic."""
-        if self.decomp == "pencil":
-            row, col = self._pencil_blocks(dtype)
-            pr, pc = self.grid.p_rows, self.grid.p_cols
-            return sum(b * (1 - 1 / pr) for b in row) + (
-                sum(b * (1 - 1 / pc) for b in col)
-            )
-        return self._cost_bytes(dtype) * self._slab_exchanges() * (1 - 1 / self.shards)
+        r_item, c_item = self._byte_sizes(dtype)
+        return sch.schedule_comm_bytes(self.schedule(), r_item, c_item)
 
     # -- cost model ------------------------------------------------------------
-    def _slab_exchanges(self) -> int:
-        return _EXCHANGES[self.ndim] + (1 if self.ndim == 2 and self.transpose_back else 0)
-
-    def _pencil_exchanges(self) -> Tuple[int, int]:
-        return cm.pencil_exchanges(self.ndim, self.transpose_back)
-
-    def _pencil_blocks(self, dtype=None) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
-        """(row_blocks, col_blocks): per-exchange shipped block bytes of
-        one pencil transform -- THE single copy of the exchange schedule
-        that :meth:`comm_bytes` and :meth:`predict_axes` both consume,
-        so the byte accounting and the cost model cannot drift. All
-        blocks are the (real: Hermitian-truncated) local block, except
-        the real rfft2's first cols exchange, which ships the full-width
-        block at the real dtype (the r2c pass needs the axis local
-        first)."""
-        n_row, n_col = self._pencil_exchanges()
-        m = self._cost_bytes(dtype)
-        row, col = [m] * n_row, [m] * n_col
-        if self.real and self.ndim == 2:
-            col[0] = self.local_bytes(dtype)
-        return tuple(row), tuple(col)
-
     def predict(
         self,
         dtype=None,
@@ -627,16 +591,16 @@ class Plan:
                 for r in row_costs
                 for c in col_costs
             }
-        m = self._cost_bytes(dtype)
         cc = self._auto_chunk_compute_s(dtype) if chunk_compute_s is None else chunk_compute_s
+        r_item, c_item = self._byte_sizes(dtype)
+        base = sch.with_pipeline(self.schedule(), fused, n_chunks)
         p = self.shards
-        n_ex = self._slab_exchanges()
         out = {}
         for name in backends.available():
-            b = backends.get(name)
-            if b.supports(p):
-                out[name] = n_ex * b.cost(
-                    m, p, self.params, cc, n_chunks=n_chunks, fused=fused
+            if backends.get(name).supports(p):
+                out[name] = sch.predict_seconds(
+                    sch.with_backends(base, slab=name),
+                    self.params, cc, r_item, c_item,
                 )
         return out
 
@@ -659,19 +623,14 @@ class Plan:
         fused = self.fused if fused is None else fused
         n_chunks = self.n_chunks if n_chunks is None else n_chunks
         cc = self._auto_chunk_compute_s(dtype) if chunk_compute_s is None else chunk_compute_s
-        row_blocks, col_blocks = self._pencil_blocks(dtype)
+        r_item, c_item = self._byte_sizes(dtype)
+        base = sch.with_pipeline(self.schedule(), fused, n_chunks)
         out = []
-        for p_axis, blocks in (
-            (self.grid.p_rows, row_blocks),
-            (self.grid.p_cols, col_blocks),
-        ):
-            # _pencil_blocks is [first?, m, m, ...]: everything after the
-            # first block is uniform, which is exactly t_pencil_axis's shape
-            first = blocks[0] if blocks[0] != blocks[-1] else None
+        for role, p_axis in (("row", self.grid.p_rows), ("col", self.grid.p_cols)):
             out.append({
-                name: cm.t_pencil_axis(
-                    blocks[-1], p_axis, name, len(blocks), self.params, cc,
-                    first_m_bytes=first, n_chunks=n_chunks, fused=fused,
+                name: sch.predict_seconds(
+                    sch.with_backends(base, **{role: name}),
+                    self.params, cc, r_item, c_item, role,
                 )
                 for name in backends.supporting(p_axis, kind="shard_map")
             })
@@ -758,57 +717,98 @@ class Plan:
             shape, dtype or self.dtype, sharding=self.input_sharding(opposite)
         )
 
-    # -- execution -------------------------------------------------------------
-    def _fn(self, inverse: bool):
-        if self.real:
-            from repro.core import real as _real
-
-            n_last, pad = self.global_shape[-1], self.pad
-            if self.decomp == "pencil":
-                cfg, grid = self._cfg, self.grid
-                # no grid-role swap here: each irfft consumes exactly the
-                # layout its rfft produces (explicit reverse chain)
-                if self.ndim == 2:
-                    if inverse:
-                        return lambda x: _real.pencil_irfft2(x, grid, cfg, n_last, pad=pad)
-                    return lambda x: _real.pencil_rfft2(x, grid, cfg, pad=pad)
-                if inverse:
-                    return lambda x: _real.pencil_irfft3(x, grid, cfg, n_last, pad=pad)
-                return lambda x: _real.pencil_rfft3(x, grid, cfg, pad=pad)
-            mesh, ax, cfg = self.mesh, self.axis_name, self._cfg
-            if self.ndim == 2:
-                if inverse:
-                    return lambda x: _real.irfft2(x, mesh, ax, cfg, n_last, pad=pad)
-                return lambda x: _real.rfft2(x, mesh, ax, cfg, pad=pad)
-            if inverse:
-                return lambda x: _real.irfft3(x, mesh, ax, cfg, n_last, pad=pad)
-            return lambda x: _real.rfft3(x, mesh, ax, cfg, pad=pad)
+    # -- the stage schedule (the single pipeline truth) ------------------------
+    def schedule(self, inverse: Optional[bool] = None) -> sch.Schedule:
+        """The stage schedule the given direction executes (None: the
+        planned direction) -- the declarative pipeline IR
+        (:class:`repro.core.schedule.Schedule`) that ``execute`` runs,
+        :meth:`predict`/:meth:`comm_bytes` walk, and the planner
+        rewrites. Built once per direction and cached."""
+        inv = (self.direction == "inverse") if inverse is None else bool(inverse)
+        cached = self._schedules.get(inv)
+        if cached is not None:
+            return cached
+        if self.ndim == 1 and inv:
+            raise NotImplementedError("1-D large inverse: conjugate externally")
         if self.decomp == "pencil":
-            from repro.core import pencil as _pencil
-            from repro.core.grid import ProcessGrid
-
-            cfg, grid = self._cfg, self.grid
-            opposite = inverse != (self.direction == "inverse")
-            if opposite and self._opposite_reverses_layout():
+            grid, shape = self.grid, self.global_shape
+            row, col = grid.row_axis, grid.col_axis
+            pr, pc = grid.p_rows, grid.p_cols
+            br, bc = self.backend_row, self.backend_col
+            opposite = inv != (self.direction == "inverse")
+            if not self.real and opposite and self._opposite_reverses_layout():
                 # the opposite direction consumes the reversed-axes
                 # output, sharded (cols, rows): swap the grid roles (and
                 # the per-axis backends with them) so the transform
                 # reads that sharding directly -- no hidden reshard, and
                 # the forward divisibility constraints already imply the
-                # reversed ones, so round trips always plan
-                grid = ProcessGrid(grid.mesh, grid.col_axis, grid.row_axis)
-                cfg = dataclasses.replace(
-                    cfg, backend_row=cfg.backend_col, backend_col=cfg.backend_row
-                )
-            f = _pencil.pencil_fft2 if self.ndim == 2 else _pencil.pencil_fft3
-            return lambda x: f(x, grid, cfg, inverse=inverse)
-        if self.ndim == 2:
-            return lambda x: dfft.fft2(x, self.mesh, self.axis_name, self._cfg, inverse=inverse)
-        if self.ndim == 3:
-            return lambda x: dfft.fft3(x, self.mesh, self.axis_name, self._cfg, inverse=inverse)
-        if inverse:
-            raise NotImplementedError("1-D large inverse: conjugate externally")
-        return lambda x: dfft.fft1d_large(x, self.mesh, self.axis_name, self._cfg)
+                # reversed ones, so round trips always plan. (Real plans
+                # never swap: each irfft consumes exactly the layout its
+                # rfft produces -- an explicit reverse chain.)
+                shape = shape[:-3] + tuple(reversed(shape[-3:]))
+                row, col, pr, pc, br, bc = col, row, pc, pr, bc, br
+            built = sch.build_schedule(
+                shape, ndim=self.ndim, inverse=inv, real=self.real,
+                decomp="pencil", row_axis=row, col_axis=col,
+                p_rows=pr, p_cols=pc, backend_row=br, backend_col=bc,
+                fused=self.fused, n_chunks=self.n_chunks,
+                transpose_back=self.transpose_back, pad=self.pad,
+            )
+        else:
+            built = sch.build_schedule(
+                self.global_shape, ndim=self.ndim, inverse=inv,
+                real=self.real, decomp="slab", axis_name=self.axis_name,
+                # _cfg.strategy, not self.backend: a measured variant
+                # winner reports its candidate id ("scatter@u") on
+                # .backend, but the schedule carries the base name
+                p=self.shards, backend=self._cfg.strategy,
+                fused=self.fused or self._cfg.fuse_dft,
+                n_chunks=self.n_chunks,
+                transpose_back=self.transpose_back, pad=self.pad,
+            )
+        self._schedules[inv] = built
+        return built
+
+    def schedule_hash(self, inverse: Optional[bool] = None) -> str:
+        """Content hash of the direction's stage schedule: two plans with
+        equal hashes execute the same pipeline (serve pools record it)."""
+        return self.schedule(inverse).schedule_hash()
+
+    def predict_stages(self, inverse: Optional[bool] = None, dtype=None):
+        """Per-stage cost decomposition: ``[(Exchange, predicted seconds,
+        wire bytes), ...]`` over the direction's schedule at the plan's
+        own backends and pipeline. The seconds sum to
+        ``predict()[self.backend]`` and the bytes to :meth:`comm_bytes`
+        -- the invariant the schedule tests pin."""
+        r_item, c_item = self._byte_sizes(dtype)
+        cc = self._auto_chunk_compute_s(dtype)
+        base = sch.with_pipeline(self.schedule(inverse), self.fused, self.n_chunks)
+        return [
+            (
+                st,
+                sch.stage_seconds(st, self.params, cc, r_item, c_item),
+                sch.exchange_wire_bytes(st, r_item, c_item),
+            )
+            for st in base.exchanges()
+        ]
+
+    def describe(self, inverse: Optional[bool] = None, dtype=None) -> str:
+        """Human-readable stage dump of the direction's schedule with
+        per-stage predicted microseconds and wire bytes (the
+        observability hook; also ``benchmarks/run.py --explain``)."""
+        r_item, c_item = self._byte_sizes(dtype)
+        return self.schedule(inverse).describe(
+            params=self.params,
+            chunk_compute_s=self._auto_chunk_compute_s(dtype),
+            real_itemsize=r_item,
+            complex_itemsize=c_item,
+        )
+
+    # -- execution -------------------------------------------------------------
+    def _fn(self, inverse: bool):
+        built = self.schedule(inverse)  # ndim=1 inverse raises here
+        mesh, impl = self.mesh, self.local_impl
+        return lambda x: sch.run_schedule(x, built, mesh, impl=impl)
 
     def _executable(self, inverse: bool, dtype) -> jax.stages.Wrapped:
         key = ("inverse" if inverse else "forward", jnp.dtype(dtype).name)

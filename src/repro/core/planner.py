@@ -337,17 +337,19 @@ def predict_candidate(plan, candidate: str, pipeline="auto") -> float:
     to ``pipeline`` -- the setting the candidates were raced under
     (default "auto" = fused wherever the backend streams) -- so benches
     can print measured and model columns for the same
-    (backend, n_chunks, fused) triple."""
-    from repro.core.plan import pipeline_is_default
+    (backend, n_chunks, fused) triple.
 
-    base, pipe = parse_variant(candidate)
-    if pipe is None and not pipeline_is_default(pipeline):
-        pipe = pipeline  # plain candidates ran at the race's own pipeline
-    fused = True if pipe is None else pipe not in (False, 0)
-    n_chunks = (
-        pipe if isinstance(pipe, int) and not isinstance(pipe, bool) and pipe > 0 else None
+    Implemented as a schedule rewrite: the candidate id is applied to the
+    plan's own stage schedule (:func:`repro.core.schedule.apply_variant`)
+    and the rewritten schedule is costed stage by stage -- the exact
+    pipeline the candidate would execute is the one being priced."""
+    import repro.core.schedule as sch
+
+    rewritten = sch.apply_variant(plan.schedule(), candidate, pipeline=pipeline)
+    r_item, c_item = plan._byte_sizes()
+    return sch.predict_seconds(
+        rewritten, plan.params, plan._auto_chunk_compute_s(), r_item, c_item
     )
-    return plan.predict(fused=fused, n_chunks=n_chunks)[base]
 
 
 def candidate_variants(

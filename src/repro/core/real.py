@@ -44,182 +44,55 @@ pencil ``rfft3``      reversed ``(..., Hp, D1, D0)``, (cols, rows)-sharded;
 Each ``irfft*`` consumes exactly the layout its ``rfft*`` produces.
 ``n_last`` (the original real length) is explicit on every inverse --
 ``H`` alone cannot distinguish even ``2*(H-1)`` from odd ``2*H-1``.
+
+Every transform is a thin builder over :mod:`repro.core.schedule`: the
+r2c/c2r chains lower to declarative stage schedules (the inverse chains
+are structurally reversed schedules with conjugated tables) and run
+through the one interpreter, the same object the cost model and the
+byte accounting walk. The Hermitian helpers and the shard-divisibility
+validators live there too; this module re-exports them under their
+historical names.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-import repro.core.fftmath as lf
-import repro.core.transpose as tr
+import repro.core.schedule as sch
 from repro.core import backends
-from repro.core.compat import shard_map
 from repro.core.distributed_fft import FFTConfig
 from repro.core.grid import ProcessGrid
 from repro.core.pencil import PencilConfig, _check_backends
+from repro.core.schedule import (  # noqa: F401  (re-exported API)
+    _pad_disabled_hint,
+    padded_rfft_len,
+    rfft_len,
+)
 
-
-# ---------------------------------------------------------------------------
-# Hermitian-length helpers
-# ---------------------------------------------------------------------------
-
-
-def rfft_len(n: int) -> int:
-    """Length of the Hermitian-non-redundant rfft output for a real
-    length-``n`` axis (numpy's ``n//2 + 1``)."""
-    return int(n) // 2 + 1
-
-
-def padded_rfft_len(n: int, multiple: int, weight: int = 1) -> int:
-    """Smallest ``hp >= rfft_len(n)`` with ``(weight * hp) % multiple == 0``.
-
-    ``weight`` covers the slab fft3 case where the *flattened* axis
-    ``D1 * Hp`` (not ``Hp`` itself) must divide the shard count."""
-    hp = rfft_len(n)
-    while (weight * hp) % multiple:
-        hp += 1
-    return hp
-
-
-def _pad_disabled_hint(n: int, multiple: int, weight: int = 1) -> str:
-    return (
-        f"pass pad=True (pads the half spectrum to "
-        f"{padded_rfft_len(n, multiple, weight)}, plan-recorded trim)"
-    )
+# historical private names, re-exported for the impl-switched local passes
+_local_rfft = sch.local_rfft
+_local_irfft = sch.local_irfft
+_pad_last = sch.pad_last
 
 
 def check_divisible_slab(global_shape, p: int, ndim: int, axis_name, *, pad: bool = True):
     """Validate a slab r2c problem; returns ``(h, hp)`` for the Hermitian
     axis. Raises a ValueError naming the offending data axis and mesh
-    axis -- the plan-time guard, mirroring the c2c validators."""
-    shape = tuple(global_shape)
-    if ndim == 2:
-        r, c = shape[-2:]
-        if r % p:
-            raise ValueError(
-                f"real slab rfft2: data axis -2 (global size {r}) is not "
-                f"divisible by mesh axis {axis_name!r} (P={p}) -- shape {shape}"
-            )
-        h = rfft_len(c)
-        if not pad and h % p:
-            raise ValueError(
-                f"real slab rfft2: Hermitian axis -1 (N={c} -> N//2+1={h}) is "
-                f"not divisible by mesh axis {axis_name!r} (P={p}) and "
-                f"pad=False -- shape {shape}; {_pad_disabled_hint(c, p)}"
-            )
-        return h, (padded_rfft_len(c, p) if pad else h)
-    if ndim == 3:
-        d0, d1, d2 = shape[-3:]
-        if d0 % p:
-            raise ValueError(
-                f"real slab rfft3: data axis -3 (global size {d0}) is not "
-                f"divisible by mesh axis {axis_name!r} (P={p}) -- shape {shape}"
-            )
-        h = rfft_len(d2)
-        if not pad and (d1 * h) % p:
-            raise ValueError(
-                f"real slab rfft3: flattened axes (-2,-1) (size {d1}*{h}={d1 * h} "
-                f"after the Hermitian truncation of N={d2}) not divisible by "
-                f"mesh axis {axis_name!r} (P={p}) and pad=False -- shape "
-                f"{shape}; {_pad_disabled_hint(d2, p, d1)}"
-            )
-        return h, (padded_rfft_len(d2, p, weight=d1) if pad else h)
-    raise NotImplementedError(
-        f"real transforms support ndim 2 or 3, got ndim={ndim} "
-        f"(1-D real: run the c2c fft1d_large on a complexified signal)"
+    axis -- delegates to the one schedule-level validator
+    (:func:`repro.core.schedule.check_divisible`)."""
+    return sch.check_divisible(
+        global_shape, ndim, p=p, axis_name=axis_name, real=True, pad=pad
     )
 
 
 def check_divisible_pencil(global_shape, grid: ProcessGrid, ndim: int, *, pad: bool = True):
     """Validate a pencil r2c problem; returns ``(h, hp)``. Errors name
-    the data axis and grid dimension, like the c2c pencil validator."""
-    shape = tuple(global_shape)
-    pr, pc = grid.p_rows, grid.p_cols
-    where = (
-        f"shape {shape} on grid {pr}x{pc} "
-        f"(row_axis={grid.row_axis!r}, col_axis={grid.col_axis!r})"
+    the data axis and grid dimension -- delegates to the one
+    schedule-level validator."""
+    return sch.check_divisible(
+        global_shape, ndim, p_rows=grid.p_rows, p_cols=grid.p_cols,
+        row_axis=grid.row_axis, col_axis=grid.col_axis, real=True, pad=pad,
     )
-    if ndim == 3:
-        d0, d1, d2 = shape[-3:]
-        if d0 % pr:
-            raise ValueError(
-                f"real pencil rfft3: data axis -3 (global size {d0}) is not "
-                f"divisible by P_row={pr} ({grid.row_axis!r}) -- {where}"
-            )
-        for divisor, why in ((pc, f"P_col={pc} ({grid.col_axis!r})"),
-                             (pr, f"P_row={pr} ({grid.row_axis!r}; the rows "
-                                  f"exchange re-shards it)")):
-            if d1 % divisor:
-                raise ValueError(
-                    f"real pencil rfft3: data axis -2 (global size {d1}) is "
-                    f"not divisible by {why} -- {where}"
-                )
-        h = rfft_len(d2)
-        if not pad and h % pc:
-            raise ValueError(
-                f"real pencil rfft3: Hermitian axis -1 (N={d2} -> N//2+1={h}) "
-                f"is not divisible by P_col={pc} ({grid.col_axis!r}) and "
-                f"pad=False -- {where}; {_pad_disabled_hint(d2, pc)}"
-            )
-        return h, (padded_rfft_len(d2, pc) if pad else h)
-    if ndim == 2:
-        r, c = shape[-2:]
-        if r % (pr * pc):
-            raise ValueError(
-                f"real pencil rfft2: data axis -2 (global size {r}) is not "
-                f"divisible by P_row*P_col={pr * pc} (both sub-rings re-shard "
-                f"it) -- {where}"
-            )
-        if c % pc:
-            raise ValueError(
-                f"real pencil rfft2: data axis -1 (global size {c}) is not "
-                f"divisible by P_col={pc} ({grid.col_axis!r}) -- {where}"
-            )
-        h = rfft_len(c)
-        if not pad and h % (pr * pc):
-            raise ValueError(
-                f"real pencil rfft2: Hermitian axis -1 (N={c} -> N//2+1={h}) "
-                f"is not divisible by P_row*P_col={pr * pc} (both sub-rings "
-                f"re-shard it) and pad=False -- {where}; "
-                f"{_pad_disabled_hint(c, pr * pc)}"
-            )
-        return h, (padded_rfft_len(c, pr * pc) if pad else h)
-    raise NotImplementedError(f"real pencil transforms support ndim 2 or 3, got {ndim}")
-
-
-# ---------------------------------------------------------------------------
-# Local r2c / c2r building blocks (impl-switched like lf.local_fft)
-# ---------------------------------------------------------------------------
-
-
-def _local_rfft(x: jax.Array, impl: lf.LocalImpl) -> jax.Array:
-    """r2c along the last axis. ``jnp`` uses the native rfft; the matmul
-    and pallas impls have no r2c codelet, so they transform the
-    complexified axis and keep the non-redundant half."""
-    if impl == "jnp":
-        return jnp.fft.rfft(x, axis=-1)
-    return lf.local_fft(x, axis=-1, impl=impl)[..., : rfft_len(x.shape[-1])]
-
-
-def _local_irfft(x: jax.Array, n: int, impl: lf.LocalImpl) -> jax.Array:
-    """c2r along the last axis: half spectrum (length ``n//2+1``) to a
-    real length-``n`` signal, carrying the 1/n factor."""
-    if impl == "jnp":
-        return jnp.fft.irfft(x, n=n, axis=-1)
-    h = x.shape[-1]
-    # rebuild the redundant half (X[n-k] = conj(X[k]), k = 1..n-h) and
-    # run the impl's c2c inverse; the result is real up to roundoff
-    tail = jnp.conj(x[..., 1 : n - h + 1])[..., ::-1]
-    full = jnp.concatenate([x, tail], axis=-1)
-    return jnp.real(lf.local_fft(full, axis=-1, inverse=True, impl=impl))
-
-
-def _pad_last(v: jax.Array, count: int) -> jax.Array:
-    if count == 0:
-        return v
-    return jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, count)])
 
 
 def _real_fused(cfg) -> bool:
@@ -247,6 +120,26 @@ def _check_real_cfg(cfg) -> backends.CollectiveBackend:
     return backends.get(cfg.strategy)
 
 
+def _build_slab(shape, mesh, axis_name, cfg, *, ndim, inverse, pad) -> sch.Schedule:
+    return sch.build_schedule(
+        shape, ndim=ndim, inverse=inverse, real=True, decomp="slab",
+        axis_name=axis_name, p=mesh.shape[axis_name], backend=cfg.strategy,
+        fused=_real_fused(cfg), n_chunks=cfg.n_chunks,
+        transpose_back=cfg.transpose_back, pad=pad,
+    )
+
+
+def _build_pencil(shape, grid, cfg, *, ndim, inverse, pad) -> sch.Schedule:
+    return sch.build_schedule(
+        shape, ndim=ndim, inverse=inverse, real=True, decomp="pencil",
+        row_axis=grid.row_axis, col_axis=grid.col_axis,
+        p_rows=grid.p_rows, p_cols=grid.p_cols,
+        backend_row=cfg.backend_row, backend_col=cfg.backend_col,
+        fused=_real_fused(cfg), n_chunks=cfg.n_chunks,
+        transpose_back=cfg.transpose_back, pad=pad,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Slab r2c / c2r
 # ---------------------------------------------------------------------------
@@ -254,7 +147,7 @@ def _check_real_cfg(cfg) -> backends.CollectiveBackend:
 
 def rfft2(
     x: jax.Array,
-    mesh: Mesh,
+    mesh,
     axis_name: str,
     cfg: FFTConfig = FFTConfig(),
     *,
@@ -268,36 +161,14 @@ def rfft2(
     payload. ``cfg.transpose_back`` restores the exact natural
     ``(..., R, H)`` layout with a second (equally truncated) exchange.
     """
-    backend = _check_real_cfg(cfg)
-    fused = _real_fused(cfg)
-    p = mesh.shape[axis_name]
-    h, hp = check_divisible_slab(x.shape, p, 2, axis_name, pad=pad)
-    if backend.kind == "global":
-        return _rfft2_xla_auto(x, mesh, axis_name, hp=hp, transpose_back=cfg.transpose_back)
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = _local_rfft(xl, cfg.local_impl)  # (..., r, H)
-        v = _pad_last(v, hp - h)
-        # exchange + R-axis FFT, fused into the Hermitian-truncated
-        # chunks in flight when the backend streams: (..., hp/P, R)
-        v = tr.transpose_then_fft(
-            v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks,
-        )
-        if cfg.transpose_back:
-            v = tr.distributed_transpose(
-                v, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-            )
-            v = v[..., :h]  # (..., r, H) exact
-        return v
-
-    spec = P(*([None] * (x.ndim - 2)), axis_name, None)
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    _check_real_cfg(cfg)
+    plan = _build_slab(x.shape, mesh, axis_name, cfg, ndim=2, inverse=False, pad=pad)
+    return sch.run_schedule(x, plan, mesh, impl=cfg.local_impl)
 
 
 def irfft2(
     y: jax.Array,
-    mesh: Mesh,
+    mesh,
     axis_name: str,
     cfg: FFTConfig = FFTConfig(),
     n_last: int = 0,
@@ -307,14 +178,13 @@ def irfft2(
     """Inverse of :func:`rfft2`: consumes exactly its layout (transposed
     padded half spectrum, or natural when ``cfg.transpose_back``) and
     returns the real (..., R, C=``n_last``), R sharded."""
-    backend = _check_real_cfg(cfg)
+    _check_real_cfg(cfg)
     if n_last <= 0:
         raise ValueError("irfft2 needs n_last (the original real length of axis -1)")
-    p = mesh.shape[axis_name]
     r_glob = y.shape[-2] if cfg.transpose_back else y.shape[-1]
-    h, hp = check_divisible_slab(
-        y.shape[:-2] + (r_glob, n_last), p, 2, axis_name, pad=pad
-    )
+    shape = y.shape[:-2] + (r_glob, n_last)
+    plan = _build_slab(shape, mesh, axis_name, cfg, ndim=2, inverse=True, pad=pad)
+    h, hp = plan.h, plan.hp
     expect = (r_glob, h) if cfg.transpose_back else (hp, r_glob)
     if y.shape[-2:] != expect:
         raise ValueError(
@@ -322,37 +192,12 @@ def irfft2(
             f"layout {expect} for n_last={n_last} "
             f"(transpose_back={cfg.transpose_back}, pad={pad})"
         )
-    if backend.kind == "global":
-        return _irfft2_xla_auto(
-            y, mesh, axis_name, n_last=n_last, h=h, transpose_back=cfg.transpose_back
-        )
-
-    fused = _real_fused(cfg)
-
-    def fn(yl: jax.Array) -> jax.Array:
-        v = yl
-        if cfg.transpose_back:  # natural (..., r, H): re-enter the spectral layout
-            v = _pad_last(v, hp - h)
-            # the re-entry exchange + inverse R FFT fuse (conjugated
-            # decimation; the trailing transpose stays monolithic)
-            v = tr.transpose_then_fft(
-                v, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-                fused=fused, n_chunks=cfg.n_chunks, inverse=True,
-            )
-        else:
-            v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/R
-        v = tr.distributed_transpose(
-            v, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-        )  # (..., r, Hp)
-        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (..., r, C), 1/C
-
-    spec = P(*([None] * (y.ndim - 2)), axis_name, None)
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(y)
+    return sch.run_schedule(y, plan, mesh, impl=cfg.local_impl)
 
 
 def rfft3(
     x: jax.Array,
-    mesh: Mesh,
+    mesh,
     axis_name: str,
     cfg: FFTConfig = FFTConfig(),
     *,
@@ -364,42 +209,14 @@ def rfft3(
     the last three axes (the internal ``Hp`` padding rides the two
     exchanges flattened with D1 and is trimmed before returning -- the
     trim is free because the Hermitian axis ends up local)."""
-    backend = _check_real_cfg(cfg)
-    p = mesh.shape[axis_name]
-    h, hp = check_divisible_slab(x.shape, p, 3, axis_name, pad=pad)
-    d1 = x.shape[-2]
-    spec = P(*([None] * (x.ndim - 3)), axis_name, None, None)
-    if backend.kind == "global":
-        sh = NamedSharding(mesh, spec)
-        out_sh = NamedSharding(mesh, spec)
-        return jax.jit(
-            lambda v: jnp.fft.rfftn(v, axes=(-3, -2, -1)),
-            in_shardings=sh, out_shardings=out_sh,
-        )(x)
-
-    fused = _real_fused(cfg)
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = _local_rfft(xl, cfg.local_impl)  # (..., d0, D1, H)
-        v = _pad_last(v, hp - h)
-        v = lf.local_fft(v, axis=-2, impl=cfg.local_impl)  # c2c along D1
-        flat = v.reshape(v.shape[:-2] + (d1 * hp,))
-        # exchange + D0 FFT fused into the truncated chunks in flight
-        t = tr.transpose_then_fft(
-            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks,
-        )
-        back = tr.distributed_transpose(
-            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-        )
-        return back.reshape(v.shape)[..., :h]
-
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    _check_real_cfg(cfg)
+    plan = _build_slab(x.shape, mesh, axis_name, cfg, ndim=3, inverse=False, pad=pad)
+    return sch.run_schedule(x, plan, mesh, impl=cfg.local_impl)
 
 
 def irfft3(
     y: jax.Array,
-    mesh: Mesh,
+    mesh,
     axis_name: str,
     cfg: FFTConfig = FFTConfig(),
     n_last: int = 0,
@@ -408,72 +225,18 @@ def irfft3(
 ) -> jax.Array:
     """Inverse of :func:`rfft3`: natural half spectrum (..., D0, D1, H)
     to the real (..., D0, D1, ``n_last``), D0 sharded."""
-    backend = _check_real_cfg(cfg)
+    _check_real_cfg(cfg)
     if n_last <= 0:
         raise ValueError("irfft3 needs n_last (the original real length of axis -1)")
-    p = mesh.shape[axis_name]
-    h, hp = check_divisible_slab(y.shape[:-1] + (n_last,), p, 3, axis_name, pad=pad)
+    shape = y.shape[:-1] + (n_last,)
+    plan = _build_slab(shape, mesh, axis_name, cfg, ndim=3, inverse=True, pad=pad)
+    h = plan.h
     if y.shape[-1] != h:
         raise ValueError(
             f"irfft3: Hermitian axis has length {y.shape[-1]}, expected "
             f"{n_last}//2+1={h} for n_last={n_last}"
         )
-    d1 = y.shape[-2]
-    spec = P(*([None] * (y.ndim - 3)), axis_name, None, None)
-    if backend.kind == "global":
-        sh = NamedSharding(mesh, spec)
-        return jax.jit(
-            lambda v: jnp.fft.irfftn(v, s=y.shape[-3:-1] + (n_last,), axes=(-3, -2, -1)),
-            in_shardings=sh, out_shardings=sh,
-        )(y)
-
-    fused = _real_fused(cfg)
-
-    def fn(yl: jax.Array) -> jax.Array:
-        v = _pad_last(yl, hp - h)
-        flat = v.reshape(v.shape[:-2] + (d1 * hp,))
-        # exchange + inverse D0 FFT fused (conjugated decimation): 1/D0
-        t = tr.transpose_then_fft(
-            flat, axis_name, strategy=cfg.strategy, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
-        )
-        back = tr.distributed_transpose(
-            t, axis_name, strategy=cfg.strategy, n_chunks=cfg.n_chunks
-        )
-        v = back.reshape(v.shape)
-        v = lf.local_fft(v, axis=-2, inverse=True, impl=cfg.local_impl)  # 1/D1
-        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
-
-    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)(y)
-
-
-def _rfft2_xla_auto(x, mesh, axis_name, *, hp: int, transpose_back: bool):
-    """GSPMD reference for the slab r2c: same layout contract as the
-    shard_map path (padded transposed spectrum / exact natural)."""
-    spec = P(*([None] * (x.ndim - 2)), axis_name, None)
-    sh = NamedSharding(mesh, spec)
-
-    def fn(v):
-        y = jnp.fft.rfft2(v)
-        if transpose_back:
-            return y
-        y = jnp.swapaxes(y, -1, -2)
-        return jnp.pad(y, [(0, 0)] * (y.ndim - 2) + [(0, hp - y.shape[-2]), (0, 0)])
-
-    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(x)
-
-
-def _irfft2_xla_auto(y, mesh, axis_name, *, n_last: int, h: int, transpose_back: bool):
-    spec = P(*([None] * (y.ndim - 2)), axis_name, None)
-    sh = NamedSharding(mesh, spec)
-    r_glob = y.shape[-2] if transpose_back else y.shape[-1]
-
-    def fn(v):
-        if not transpose_back:
-            v = jnp.swapaxes(v[..., :h, :], -1, -2)
-        return jnp.fft.irfft2(v, s=(r_glob, n_last))
-
-    return jax.jit(fn, in_shardings=sh, out_shardings=sh)(y)
+    return sch.run_schedule(y, plan, mesh, impl=cfg.local_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -498,40 +261,8 @@ def pencil_rfft3(
     the exact natural ``(..., D0, D1, H)`` with two more sub-exchanges.
     """
     _check_backends(cfg, grid)
-    fused = _real_fused(cfg)
-    h, hp = check_divisible_pencil(x.shape, grid, 3, pad=pad)
-    row, col = grid.row_axis, grid.col_axis
-
-    def fn(xl: jax.Array) -> jax.Array:
-        v = _local_rfft(xl, cfg.local_impl)  # (..., d0r, d1c, H)
-        v = _pad_last(v, hp - h)
-        # cols sub-exchange swaps (D1, Hp) with the D1 FFT fused into
-        # the truncated chunks: (d0r, d1c, Hp) -> (d0r, hp_c, D1)
-        v = tr.transpose_then_fft(
-            v, col, strategy=cfg.backend_col, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks,
-        )
-        v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
-        # rows sub-exchange + D0 FFT, fused independently per leg
-        v = tr.transpose_then_fft(
-            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks,
-        )  # (hp_c, d1r, D0)
-        if cfg.transpose_back:
-            v = tr.distributed_transpose(
-                v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
-            )
-            v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
-            v = tr.distributed_transpose(
-                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-            )
-            v = v[..., :h]  # (d0r, d1c, H) exact
-        return v
-
-    lead = [None] * (x.ndim - 3)
-    in_spec = P(*lead, row, col, None)
-    out_spec = in_spec if cfg.transpose_back else P(*lead, col, row, None)
-    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(x)
+    plan = _build_pencil(x.shape, grid, cfg, ndim=3, inverse=False, pad=pad)
+    return sch.run_schedule(x, plan, grid.mesh, impl=cfg.local_impl)
 
 
 def pencil_irfft3(
@@ -553,7 +284,9 @@ def pencil_irfft3(
         d0, d1 = y.shape[-3], y.shape[-2]
     else:
         d0, d1 = y.shape[-1], y.shape[-2]
-    h, hp = check_divisible_pencil(y.shape[:-3] + (d0, d1, n_last), grid, 3, pad=pad)
+    shape = y.shape[:-3] + (d0, d1, n_last)
+    plan = _build_pencil(shape, grid, cfg, ndim=3, inverse=True, pad=pad)
+    h, hp = plan.h, plan.hp
     expect = (d0, d1, h) if cfg.transpose_back else (hp, d1, d0)
     if y.shape[-3:] != expect:
         raise ValueError(
@@ -561,39 +294,7 @@ def pencil_irfft3(
             f"pencil_rfft3 layout {expect} for n_last={n_last} "
             f"(transpose_back={cfg.transpose_back}, pad={pad})"
         )
-    row, col = grid.row_axis, grid.col_axis
-    fused = _real_fused(cfg)
-
-    def fn(yl: jax.Array) -> jax.Array:
-        v = yl
-        if cfg.transpose_back:  # natural (d0r, d1c, H): re-enter the spectral layout
-            v = _pad_last(v, hp - h)
-            v = tr.distributed_transpose(
-                v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-            )  # (d0r, hp_c, D1)
-            v = jnp.swapaxes(v, -3, -2)  # (hp_c, d0r, D1)
-            # re-entry rows exchange + inverse D0 FFT fuse: (hp_c, d1r, D0)
-            v = tr.transpose_then_fft(
-                v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-                fused=fused, n_chunks=cfg.n_chunks, inverse=True,
-            )  # 1/D0
-        else:
-            v = lf.local_fft(v, axis=-1, inverse=True, impl=cfg.local_impl)  # 1/D0
-        # rows exchange + inverse D1 FFT fuse: (hp_c, d0r, D1), 1/D1
-        v = tr.transpose_then_fft(
-            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
-        )
-        v = jnp.swapaxes(v, -3, -2)  # (d0r, hp_c, D1)
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )  # (d0r, d1c, Hp)
-        return _local_irfft(v[..., :h], n_last, cfg.local_impl)  # 1/D2
-
-    lead = [None] * (y.ndim - 3)
-    in_spec = P(*lead, row, col, None) if cfg.transpose_back else P(*lead, col, row, None)
-    out_spec = P(*lead, row, col, None)
-    return shard_map(fn, mesh=grid.mesh, in_specs=in_spec, out_specs=out_spec)(y)
+    return sch.run_schedule(y, plan, grid.mesh, impl=cfg.local_impl)
 
 
 def pencil_rfft2(
@@ -618,38 +319,8 @@ def pencil_rfft2(
             "transpose_back applies to slab transforms and pencil rfft3 only"
         )
     _check_backends(cfg, grid)
-    h, hp = check_divisible_pencil(x.shape, grid, 2, pad=pad)
-    row, col = grid.row_axis, grid.col_axis
-
-    fused = _real_fused(cfg)
-
-    def fn(xl: jax.Array) -> jax.Array:
-        # pass A -- localize C over the cols sub-ring (real payload),
-        # r2c it, and re-shard the truncated half spectrum back (the r2c
-        # pass itself stays local -- its input is real, not a c2c stage)
-        v = jnp.swapaxes(xl, -1, -2)  # (c_c, r_r)
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )  # (r_rc, C)
-        v = _local_rfft(v, cfg.local_impl)  # (r_rc, H)
-        v = _pad_last(v, hp - h)
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )  # (hp_c, r_r)
-        v = jnp.swapaxes(v, -1, -2)  # (r_r, hp_c)
-        # pass B -- c2c transform R over the rows sub-ring (half
-        # payload), the R FFT fused into the arriving chunks
-        v = tr.transpose_then_fft(
-            v, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks,
-        )  # (hp_rc, R)
-        v = tr.distributed_transpose(
-            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
-        )  # (r_r, hp_c)
-        return v
-
-    spec = P(*([None] * (x.ndim - 2)), row, col)
-    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(x)
+    plan = _build_pencil(x.shape, grid, cfg, ndim=2, inverse=False, pad=pad)
+    return sch.run_schedule(x, plan, grid.mesh, impl=cfg.local_impl)
 
 
 def pencil_irfft2(
@@ -671,35 +342,13 @@ def pencil_irfft2(
     _check_backends(cfg, grid)
     if n_last <= 0:
         raise ValueError("pencil_irfft2 needs n_last (the original real length of axis -1)")
-    h, hp = check_divisible_pencil(y.shape[:-1] + (n_last,), grid, 2, pad=pad)
+    shape = y.shape[:-1] + (n_last,)
+    plan = _build_pencil(shape, grid, cfg, ndim=2, inverse=True, pad=pad)
+    h, hp = plan.h, plan.hp
     if y.shape[-1] != hp:
         raise ValueError(
             f"pencil_irfft2: Hermitian axis has length {y.shape[-1]}, expected "
             f"the padded {hp} (H={h}) for n_last={n_last} on grid "
             f"{grid.p_rows}x{grid.p_cols} (pad={pad})"
         )
-    row, col = grid.row_axis, grid.col_axis
-
-    fused = _real_fused(cfg)
-
-    def fn(yl: jax.Array) -> jax.Array:
-        # rows exchange + inverse R FFT fuse: (hp_rc, R), 1/R
-        v = tr.transpose_then_fft(
-            yl, row, strategy=cfg.backend_row, impl=cfg.local_impl,
-            fused=fused, n_chunks=cfg.n_chunks, inverse=True,
-        )
-        v = tr.distributed_transpose(
-            v, row, strategy=cfg.backend_row, n_chunks=cfg.n_chunks
-        )  # (r_r, hp_c)
-        v = jnp.swapaxes(v, -1, -2)  # (hp_c, r_r)
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )  # (r_rc, Hp)
-        v = _local_irfft(v[..., :h], n_last, cfg.local_impl)  # (r_rc, C), 1/C
-        v = tr.distributed_transpose(
-            v, col, strategy=cfg.backend_col, n_chunks=cfg.n_chunks
-        )  # (c_c, r_r)
-        return jnp.swapaxes(v, -1, -2)  # (r_r, c_c)
-
-    spec = P(*([None] * (y.ndim - 2)), row, col)
-    return shard_map(fn, mesh=grid.mesh, in_specs=spec, out_specs=spec)(y)
+    return sch.run_schedule(y, plan, grid.mesh, impl=cfg.local_impl)

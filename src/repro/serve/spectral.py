@@ -141,6 +141,12 @@ class PlanPool:
         self.plan_kwargs = dict(plan_kwargs or {})
         self.decomp = self.plan_kwargs.get("decomp", "slab")
         self._plans: "collections.OrderedDict[str, object]" = collections.OrderedDict()
+        #: key -> stage-schedule content hash of the cached plan's planned
+        #: direction (Plan.schedule_hash()). Pool-side metadata only: the
+        #: lookup key format above is frozen (wisdom interop), so the
+        #: hash rides next to the entry instead of inside the key. Two
+        #: keys with equal hashes execute the identical stage pipeline.
+        self._schedule_hashes: Dict[str, str] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -190,9 +196,23 @@ class PlanPool:
     def _insert(self, key: str, plan) -> None:
         self._plans[key] = plan
         self._plans.move_to_end(key)
+        self._schedule_hashes[key] = plan.schedule_hash()
         while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
+            evicted, _ = self._plans.popitem(last=False)
+            self._schedule_hashes.pop(evicted, None)
             self.evictions += 1
+
+    def schedule_hash(self, key: str) -> Optional[str]:
+        """Stage-schedule hash of the pooled plan under ``key`` (None
+        when the key is cold/evicted) -- the pipeline identity the pool
+        serves for that problem."""
+        return self._schedule_hashes.get(key)
+
+    def schedule_hashes(self) -> Dict[str, str]:
+        """Snapshot of key -> schedule hash for every warm plan. Equal
+        hashes mean the pool would execute the identical stage pipeline
+        for those keys (telemetry / cache-dedup analysis)."""
+        return dict(self._schedule_hashes)
 
     def get(self, shape, ndim: int, dtype, real: bool):
         """(plan, hit): the cached plan for this problem, planning (and
@@ -286,6 +306,7 @@ class PlanPool:
     def stats(self) -> Dict[str, float]:
         return {
             "plans": len(self._plans),
+            "distinct_schedules": len(set(self._schedule_hashes.values())),
             "capacity": self.capacity,
             "hits": self.hits,
             "misses": self.misses,
