@@ -9,6 +9,13 @@ paper's measured-parcelport vs napkin-model comparison, as data.
 ``run_json()`` returns machine-readable dict rows (written to
 ``BENCH_fft.json`` by ``benchmarks/run.py --json``); ``to_csv()`` renders
 the same rows in the harness's ``name,us_per_call,derived`` format.
+
+With ``trace=`` (a :class:`repro.obs.trace.TraceRecorder`), each
+subprocess additionally profiles the winning plan through the trace-mode
+executor (``Plan.profile``) and ships its per-stage spans back as Chrome
+events, adopted into the recorder under one pid row per device count --
+``benchmarks/run.py --trace`` merges these into the benchmark trace
+artifact.
 """
 
 from __future__ import annotations
@@ -36,19 +43,31 @@ for name in sorted(plan.measured):
            "model_us": round(model * 1e6, 2),
            "picked": plan.backend, "device_kind": dev}
     print("ROW " + json.dumps(row))
+if __TRACE__:
+    # per-stage observed timeline of the winning plan (trace-mode
+    # executor); spans ship back to the parent as Chrome events
+    result = plan.profile(reps=3, warmup=1)
+    print("TRACE " + json.dumps(result.trace.to_chrome_trace()["traceEvents"]))
 """
 
 
-def run_json(n: int = 256, device_counts: Iterable[int] = (1, 2, 4, 8)) -> List[dict]:
+def run_json(
+    n: int = 256, device_counts: Iterable[int] = (1, 2, 4, 8), trace=None
+) -> List[dict]:
     """Measured + model-predicted rows per backend per device count."""
     rows: List[dict] = []
     for p in device_counts:
-        out = run_devices_subprocess(
-            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        code = (
+            _CODE.replace("__N__", str(n))
+            .replace("__P__", str(p))
+            .replace("__TRACE__", repr(trace is not None))
         )
+        out = run_devices_subprocess(code, devices=p)
         for line in out.splitlines():
             if line.startswith("ROW "):
                 rows.append(json.loads(line[4:]))
+            elif line.startswith("TRACE ") and trace is not None:
+                trace.adopt(json.loads(line[6:]), name=f"fft_measure n={n} p={p}")
     return rows
 
 

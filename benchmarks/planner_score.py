@@ -1,0 +1,158 @@
+"""Planner-accuracy score over a committed BENCH_fft.json baseline.
+
+Every backend-race row in the baseline carries both ``measured_us`` (what
+the measured planner timed) and ``model_us`` (what that backend's
+alpha-beta cost model predicted), plus ``picked`` (the backend the
+planner shipped). Grouping the rows back into their races -- one group
+per (bench, n, p, decomp, grid, transform) -- yields two hit rates and a
+calibration ratio:
+
+  picked_hit_rate   fraction of races where ``picked`` equals the
+                    measured argmin. The measured planner picks the
+                    measured argmin *by construction*, so anything below
+                    1.0 means the race rows and the shipped decision
+                    drifted apart (a merge bug, a stale section, or a
+                    planner regression) -- this is the CI tripwire.
+  model_hit_rate    fraction of races where the alpha-beta model's
+                    argmin agrees with the measured argmin -- would the
+                    napkin model alone have picked the same backend?
+                    (The paper's model-vs-measured question, as a score.)
+  model_ratio_geo   geometric mean of model_us / measured_us across all
+                    rows -- absolute calibration. Far from 1.0 on CPU
+                    hosts (the model is parameterised for TPU ICI), so
+                    it is reported but not gated by default.
+
+Run:  PYTHONPATH=src python -m benchmarks.planner_score
+          [--path BENCH_fft.json] [--min-picked 0.9] [--min-model 0.1]
+          [--write-meta]
+
+Exits 1 when a gate fails. ``--write-meta`` records the score into the
+baseline's top-level ``meta`` section (which ``benchmarks/run.py
+--json`` merges preserve), so the committed artifact carries its own
+accuracy stamp.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+#: race identity: one group per planner decision in the baseline
+GROUP_KEYS = ("bench", "n", "p", "decomp", "grid", "transform")
+
+
+def _race_rows(rows: List[dict]) -> List[dict]:
+    """Rows that describe one backend inside a planner race: must carry
+    the backend, both timings, and the planner's decision. (overlap and
+    serve rows are sweeps, not races -- no ``picked`` -- and drop out.)"""
+    out = []
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        if not isinstance(r.get("backend"), str) or not isinstance(r.get("picked"), str):
+            continue
+        m, mo = r.get("measured_us"), r.get("model_us")
+        if isinstance(m, (int, float)) and isinstance(mo, (int, float)) and m > 0 and mo > 0:
+            out.append(r)
+    return out
+
+
+def group_races(rows: List[dict]) -> Dict[Tuple, List[dict]]:
+    groups: Dict[Tuple, List[dict]] = {}
+    for r in _race_rows(rows):
+        key = tuple(r.get(k) for k in GROUP_KEYS)
+        groups.setdefault(key, []).append(r)
+    return groups
+
+
+def score(rows: List[dict]) -> dict:
+    """Planner-accuracy score dict for a baseline's rows (see module
+    docstring for the metric definitions)."""
+    groups = group_races(rows)
+    picked_hits = model_hits = 0
+    log_ratios: List[float] = []
+    for rs in groups.values():
+        measured_best = min(rs, key=lambda r: r["measured_us"])["backend"]
+        model_best = min(rs, key=lambda r: r["model_us"])["backend"]
+        # every row in a race carries the same `picked`; trust the first
+        if rs[0]["picked"] == measured_best:
+            picked_hits += 1
+        if model_best == measured_best:
+            model_hits += 1
+        log_ratios.extend(math.log(r["model_us"] / r["measured_us"]) for r in rs)
+    n = len(groups)
+    return {
+        "groups": n,
+        "rows": sum(len(rs) for rs in groups.values()),
+        "picked_hits": picked_hits,
+        "picked_hit_rate": picked_hits / n if n else 0.0,
+        "model_hits": model_hits,
+        "model_hit_rate": model_hits / n if n else 0.0,
+        "model_ratio_geo": math.exp(sum(log_ratios) / len(log_ratios))
+        if log_ratios
+        else 0.0,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--path", default="BENCH_fft.json")
+    ap.add_argument(
+        "--min-picked", type=float, default=0.9,
+        help="gate: minimum picked-vs-measured-argmin hit rate",
+    )
+    ap.add_argument(
+        "--min-model", type=float, default=0.0,
+        help="gate: minimum model-argmin-vs-measured-argmin hit rate",
+    )
+    ap.add_argument(
+        "--write-meta", action="store_true",
+        help="record the score into the baseline's top-level meta section",
+    )
+    args = ap.parse_args(argv)
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"planner_score: cannot read {args.path}: {e}", file=sys.stderr)
+        return 1
+    rows = doc.get("rows", []) if isinstance(doc, dict) else []
+    s = score(rows)
+    print(
+        f"planner_score {args.path}: {s['groups']} races / {s['rows']} rows\n"
+        f"  picked_hit_rate  {s['picked_hit_rate']:.3f} "
+        f"({s['picked_hits']}/{s['groups']})  [gate >= {args.min_picked}]\n"
+        f"  model_hit_rate   {s['model_hit_rate']:.3f} "
+        f"({s['model_hits']}/{s['groups']})  [gate >= {args.min_model}]\n"
+        f"  model_ratio_geo  {s['model_ratio_geo']:.4g}  (1.0 = calibrated)"
+    )
+    if args.write_meta and isinstance(doc, dict):
+        meta = doc.get("meta")
+        if not isinstance(meta, dict):
+            meta = {}
+        meta["planner_score"] = s
+        out = {"schema": doc.get("schema"), "meta": meta, "rows": rows}
+        with open(args.path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"  wrote meta.planner_score into {args.path}")
+    failed = []
+    if s["groups"] == 0:
+        failed.append("no planner races found in baseline")
+    if s["picked_hit_rate"] < args.min_picked:
+        failed.append(
+            f"picked_hit_rate {s['picked_hit_rate']:.3f} < {args.min_picked}"
+        )
+    if s["model_hit_rate"] < args.min_model:
+        failed.append(f"model_hit_rate {s['model_hit_rate']:.3f} < {args.min_model}")
+    if failed:
+        print("planner_score FAIL: " + "; ".join(failed), file=sys.stderr)
+        return 1
+    print("planner_score OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,11 +27,20 @@ grid shape / per transform kind / per pipeline variant) as
 machine-readable JSON -- the perf trajectory artifact CI uploads.
 Sections that did not run in this invocation keep their rows from an
 existing file at PATH (a partial run merges instead of clobbering the
-committed baseline); ``--force`` overwrites the file with only this
-run's sections. ``fig3`` is accepted as a legacy alias for ``overlap``.
+committed baseline); a top-level ``meta`` section (e.g. the planner
+accuracy score written by ``benchmarks/planner_score.py --write-meta``)
+survives merges the same way. ``--force`` overwrites the file with only
+this run's sections. ``fig3`` is accepted as a legacy alias for
+``overlap``.
+
+``--trace PATH`` records a Chrome-trace (chrome://tracing / Perfetto)
+timeline of the harness: one span per benchmark section, plus -- for the
+fft section -- per-stage spans of each subprocess's winning plan
+(``Plan.profile`` timelines, one trace process row per device count).
 """
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -57,6 +66,14 @@ def main() -> None:
         "sections into its existing rows",
     )
     ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome-trace JSON timeline of this run (section "
+        "spans + per-stage plan profiles from the fft section); load at "
+        "ui.perfetto.dev or chrome://tracing",
+    )
+    ap.add_argument(
         "--explain",
         action="store_true",
         help="before timing anything, print each representative plan's "
@@ -64,6 +81,12 @@ def main() -> None:
         "alone (with --only ''), just the schedules",
     )
     args = ap.parse_args()
+    rec = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+
+        rec = TraceRecorder()
+        rec.set_process_name(0, "benchmarks.run")
     if args.explain:
         from benchmarks import explain
 
@@ -75,53 +98,63 @@ def main() -> None:
     if "kernel" in wanted:
         from benchmarks import kernel_bench
 
-        rows += kernel_bench.run()
+        with _section(rec, "kernel"):
+            rows += kernel_bench.run()
         _flush(rows)
     if "fig45" in wanted:
         from benchmarks import strong_scaling
 
-        rows += strong_scaling.run()
+        with _section(rec, "fig45"):
+            rows += strong_scaling.run()
         _flush(rows)
     jrows = []
     if "overlap" in wanted or "fig3" in wanted:
         from benchmarks import chunk_scaling
 
-        orows = chunk_scaling.run_json()
+        with _section(rec, "overlap"):
+            orows = chunk_scaling.run_json()
         jrows += orows
         rows += chunk_scaling.to_csv(orows)
         _flush(rows)
     if "fft" in wanted or args.json:
         from benchmarks import fft_measure
 
-        frows = fft_measure.run_json()
+        with _section(rec, "fft"):
+            frows = fft_measure.run_json(trace=rec)
         jrows += frows
         rows += fft_measure.to_csv(frows)
         _flush(rows)
     if "pencil" in wanted:
         from benchmarks import pencil_sweep
 
-        prows = pencil_sweep.run_json()
+        with _section(rec, "pencil"):
+            prows = pencil_sweep.run_json()
         jrows += prows
         rows += pencil_sweep.to_csv(prows)
         _flush(rows)
     if "real" in wanted:
         from benchmarks import real_sweep
 
-        rrows = real_sweep.run_json()
+        with _section(rec, "real"):
+            rrows = real_sweep.run_json()
         jrows += rrows
         rows += real_sweep.to_csv(rrows)
         _flush(rows)
     if "serve" in wanted:
         from benchmarks import serve_sweep
 
-        srows = serve_sweep.run_json()
+        with _section(rec, "serve"):
+            srows = serve_sweep.run_json()
         jrows += srows
         rows += serve_sweep.to_csv(srows)
         _flush(rows)
     if args.json:
-        merged = _merge_json(args.json, jrows, force=args.force)
+        merged, meta = _merge_json(args.json, jrows, force=args.force)
+        doc = {"schema": BENCH_SCHEMA, "rows": merged}
+        if meta:
+            doc = {"schema": BENCH_SCHEMA, "meta": meta, "rows": merged}
         with open(args.json, "w") as f:
-            json.dump({"schema": BENCH_SCHEMA, "rows": merged}, f, indent=2)
+            json.dump(doc, f, indent=2)
         print(
             f"# wrote {len(merged)} rows to {args.json} "
             f"({len(jrows)} from this run)",
@@ -130,27 +163,44 @@ def main() -> None:
     if "moe" in wanted:
         from benchmarks import moe_dispatch
 
-        rows += moe_dispatch.run()
+        with _section(rec, "moe"):
+            rows += moe_dispatch.run()
         _flush(rows)
+    if rec is not None:
+        rec.write_chrome_trace(args.trace)
+        n_ev = len(rec.to_chrome_trace()["traceEvents"])
+        print(f"# wrote {n_ev} trace events to {args.trace}", file=sys.stderr)
+
+
+def _section(rec, name: str):
+    """Span context for one benchmark section (no-op when untraced)."""
+    if rec is None:
+        return contextlib.nullcontext()
+    return rec.span(f"section:{name}", cat="section")
 
 
 def _merge_json(path: str, new_rows, *, force: bool = False):
     """Merge this run's rows into an existing BENCH json: sections (the
     ``bench`` key) produced now replace their old rows; sections that did
     not run survive -- so a partial ``--only`` run cannot clobber the
-    committed multi-section baseline. ``force`` skips the read."""
+    committed multi-section baseline. The file's top-level ``meta`` dict
+    (planner-accuracy score etc.) is carried over untouched. ``force``
+    skips the read. Returns ``(rows, meta)``."""
     if force or not os.path.exists(path):
-        return list(new_rows)
+        return list(new_rows), {}
     try:
         with open(path) as f:
             old = json.load(f)
         old_rows = old.get("rows", []) if isinstance(old, dict) else []
+        meta = old.get("meta", {}) if isinstance(old, dict) else {}
+        if not isinstance(meta, dict):
+            meta = {}
     except (OSError, json.JSONDecodeError) as e:
         print(f"# --json: could not merge existing {path} ({e}); overwriting", file=sys.stderr)
-        return list(new_rows)
+        return list(new_rows), {}
     ran = {r.get("bench") for r in new_rows}
     kept = [r for r in old_rows if isinstance(r, dict) and r.get("bench") not in ran]
-    return kept + list(new_rows)
+    return kept + list(new_rows), meta
 
 
 _printed = 0

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
@@ -116,6 +116,111 @@ class CommParams:
             )
             beta = ICI_BW_PER_LINK * ICI_LINKS
         return cls(alpha_s=alpha, beta_bytes_s=beta)
+
+    def refine_online(self, trace, *, min_spans: int = 2):
+        """Re-fit alpha/beta from *observed* Exchange spans -- ROADMAP's
+        online refinement from execution telemetry.
+
+        ``trace`` is a :class:`repro.obs.trace.TraceRecorder` (its
+        ``exchange_spans()`` are consumed), or any iterable of spans
+        (``Span`` objects or their JSONL dicts). Each span contributes
+        one point ``t = alpha * n_msgs + fit_bytes / beta`` where
+        ``n_msgs``/``fit_bytes`` come from the span's backend structure
+        (:func:`exchange_fit_terms`: ring backends send ``(P-1)*q``
+        messages of the wire payload, bisection ``ceil(log2 P)`` rounds
+        of half the block, all-to-all one fused phase).
+
+        Returns a dict mapping ``(backend, payload_class)`` to a new
+        frozen :class:`CommParams` (``self`` is never mutated), plus the
+        pooled fit under ``("*", "*")``. Groups with fewer than
+        ``min_spans`` points or a degenerate/negative fit keep this
+        instance's constants for the unidentifiable coefficient -- same
+        contract as :meth:`calibrate`'s bandwidth guard."""
+        import numpy as np
+
+        if hasattr(trace, "exchange_spans"):
+            spans = trace.exchange_spans()
+        else:
+            spans = [s for s in trace if _span_field(s, "cat") == "exchange"]
+        groups: Dict[Tuple[str, str], list] = {}
+        pooled: list = []
+        for sp in spans:
+            args = _span_field(sp, "args") or {}
+            dur = _span_field(sp, "dur")
+            backend = args.get("backend")
+            p = args.get("p")
+            block = args.get("block_bytes")
+            if not (isinstance(backend, str) and isinstance(p, (int, float)) and p
+                    and isinstance(block, (int, float)) and isinstance(dur, (int, float))
+                    and dur > 0):
+                continue
+            msgs, fit_bytes = exchange_fit_terms(
+                backend, int(p), float(block), args.get("n_chunks")
+            )
+            wire = args.get("wire_bytes", fit_bytes)
+            row = (float(msgs), float(fit_bytes), float(dur))
+            groups.setdefault((backend, payload_class(float(wire))), []).append(row)
+            pooled.append(row)
+        fits = dict(groups)
+        fits[("*", "*")] = pooled
+        out = {}
+        for key, rows in fits.items():
+            out[key] = self._fit_spans(rows, min_spans, np)
+        return out
+
+    def _fit_spans(self, rows, min_spans: int, np) -> "CommParams":
+        if len(rows) < max(2, min_spans):
+            return self
+        a = np.asarray([[r[0], r[1]] for r in rows], dtype=float)
+        y = np.asarray([r[2] for r in rows], dtype=float)
+        if np.linalg.matrix_rank(a) < 2:
+            return self
+        (alpha, inv_beta), *_ = np.linalg.lstsq(a, y, rcond=None)
+        new_alpha = float(alpha) if alpha > 0 else self.alpha_s
+        beta = 1.0 / float(inv_beta) if inv_beta > 0 else float("inf")
+        new_beta = beta if 0 < beta <= _BETA_FIT_MAX else self.beta_bytes_s
+        return dataclasses.replace(self, alpha_s=new_alpha, beta_bytes_s=new_beta)
+
+
+def _span_field(sp, name: str):
+    """Span attribute access across Span objects and their JSONL dicts."""
+    if isinstance(sp, dict):
+        return sp.get(name)
+    return getattr(sp, name, None)
+
+
+#: (exclusive) upper edges of the observed-payload size classes the
+#: online refinement groups spans by -- wire payloads below 64 KiB are
+#: latency-shaped, above 8 MiB bandwidth-shaped.
+PAYLOAD_CLASS_EDGES = ((64 * 1024, "small"), (8 * 1024 * 1024, "medium"))
+
+
+def payload_class(wire_bytes: float) -> str:
+    for edge, name in PAYLOAD_CLASS_EDGES:
+        if wire_bytes < edge:
+            return name
+    return "large"
+
+
+def exchange_fit_terms(
+    backend: str, p: int, block_bytes: float, n_chunks: Optional[int] = None
+) -> Tuple[float, float]:
+    """(n_msgs, bytes-on-the-wire) one Exchange contributes to the
+    alpha/beta regression -- the message/byte structure of each cost
+    function above, inverted for fitting. Unknown backends fall back to
+    the one-phase all-to-all shape."""
+    import math
+
+    if p <= 1:
+        return 0.0, 0.0
+    wire = block_bytes * (1 - 1 / p)
+    if backend in ("scatter", "pairwise_xor"):
+        q = effective_chunks(p, n_chunks) // p
+        return float((p - 1) * q), wire
+    if backend == "bisection":
+        rounds = math.ceil(math.log2(p))
+        return float(rounds), rounds * block_bytes / 2
+    return 1.0, wire
 
 
 def _pingpong_timer(mesh, axis_name: Optional[str], *, warmup: int, iters: int):

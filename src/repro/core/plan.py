@@ -804,6 +804,86 @@ class Plan:
             complex_itemsize=c_item,
         )
 
+    def profile(
+        self,
+        x: Optional[jax.Array] = None,
+        *,
+        reps: int = 3,
+        warmup: int = 1,
+        inverse: Optional[bool] = None,
+        trace=None,
+        record: bool = True,
+    ) -> "ProfileResult":
+        """Execute the direction through the trace-mode (segmented)
+        executor and return one *observed* row per schedule stage next
+        to :meth:`predict_stages`' model -- the paper's comm-vs-compute
+        breakdown, measured on this plan.
+
+        ``x=None`` profiles a zeros input built from :meth:`input_spec`.
+        Spans land in ``trace`` (a fresh
+        :class:`repro.obs.trace.TraceRecorder` if None; the returned
+        result keeps it for export). ``warmup`` untimed traced runs pay
+        the per-segment compiles first, then ``reps`` timed runs are
+        aggregated by median. ``record=True`` folds the total observed
+        seconds into the planner's wisdom observed channel
+        (:func:`repro.core.planner.record_observed`; a no-op unless this
+        plan came from ``planner="measure"``).
+
+        Profiling never touches the plan's cached untraced executables
+        -- the jitted hot path compiles to exactly the same HLO before
+        and after (pinned by a regression test). Segmented wall-clock
+        time exceeds the fused execution (per-stage host fences defeat
+        inter-stage overlap), so treat observed sums as an attribution
+        of cost, not a throughput measurement."""
+        from repro.obs.trace import TraceRecorder
+
+        inv = (self.direction == "inverse") if inverse is None else bool(inverse)
+        opposite = inv != (self.direction == "inverse")
+        if x is None:
+            spec = self.input_spec(opposite=opposite)
+            x = jax.device_put(jnp.zeros(spec.shape, spec.dtype), spec.sharding)
+        else:
+            x = jnp.asarray(x)
+        built = self.schedule(inv)
+        rec = trace if trace is not None else TraceRecorder()
+        for _ in range(max(0, warmup)):
+            sch.run_schedule(
+                x, built, self.mesh, impl=self.local_impl, trace=TraceRecorder()
+            )
+        per_rep = []
+        for _ in range(max(1, reps)):
+            m = rec.mark()
+            sch.run_schedule(x, built, self.mesh, impl=self.local_impl, trace=rec)
+            per_rep.append(rec.spans_since(m))
+        preds = self.predict_stages(inv, x.dtype)
+        rows = []
+        k_ex = 0
+        for pos, sp in enumerate(per_rep[0]):
+            durs = sorted(spans[pos].dur for spans in per_rep)
+            obs = durs[len(durs) // 2]
+            pred_s = wire = None
+            if sp.cat == "exchange":
+                pred_s = preds[k_ex][1]
+                wire = sp.args.get("wire_bytes")
+                k_ex += 1
+            rows.append(ProfileRow(
+                index=int(sp.args.get("index", pos)),
+                stage=sp.name,
+                kind=str(sp.args.get("stage", type(sp).__name__)),
+                observed_s=obs,
+                predicted_s=pred_s,
+                wire_bytes=wire,
+                args=dict(sp.args),
+            ))
+        result = ProfileResult(
+            rows=tuple(rows), schedule=built, trace=rec, reps=len(per_rep)
+        )
+        if record:
+            from repro.core import planner
+
+            planner.record_observed(self, result.observed_s)
+        return result
+
     # -- execution -------------------------------------------------------------
     def _fn(self, inverse: bool):
         built = self.schedule(inverse)  # ndim=1 inverse raises here
@@ -885,6 +965,80 @@ class Plan:
             f"backend={self.backend!r}, direction={self.direction!r}, "
             f"dtype={self.dtype.name})"
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileRow:
+    """One schedule stage's observed wall-clock vs model prediction.
+    ``predicted_s``/``wire_bytes`` are None for non-Exchange stages (the
+    alpha-beta model prices exchanges; local compute has no model row).
+    ``args`` is the span's full attribute payload (backend, role, p,
+    fused, n_chunks, ... for exchanges)."""
+
+    index: int
+    stage: str
+    kind: str
+    observed_s: float
+    predicted_s: Optional[float] = None
+    wire_bytes: Optional[float] = None
+    args: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileResult:
+    """``Plan.profile`` output: per-stage rows + the recorder holding
+    the raw spans (exportable via ``result.trace.write_chrome_trace``)."""
+
+    rows: Tuple[ProfileRow, ...]
+    schedule: sch.Schedule
+    trace: object
+    reps: int
+
+    @property
+    def observed_s(self) -> float:
+        return sum(r.observed_s for r in self.rows)
+
+    @property
+    def exchange_observed_s(self) -> float:
+        return sum(r.observed_s for r in self.rows if r.kind == "Exchange")
+
+    @property
+    def predicted_s(self) -> float:
+        return sum(r.predicted_s or 0.0 for r in self.rows)
+
+    def exchange_rows(self) -> Tuple[ProfileRow, ...]:
+        return tuple(r for r in self.rows if r.kind == "Exchange")
+
+    def table(self) -> str:
+        """The observed-vs-predicted stage table (README's worked
+        example renders this)."""
+        s = self.schedule
+        head = (
+            f"profile {s.kind} [{s.decomp}"
+            f"{', r2c' if s.real else ''}{', inverse' if s.inverse else ''}] "
+            f"shape={s.global_shape} hash={s.schedule_hash()} reps={self.reps}"
+        )
+        lines = [head]
+        lines.append(
+            f"  {'#':>2}  {'stage':<52} {'observed us':>12} {'model us':>10} "
+            f"{'wire bytes':>12}"
+        )
+        for r in self.rows:
+            pred = f"{r.predicted_s * 1e6:.2f}" if r.predicted_s is not None else "-"
+            wire = f"{r.wire_bytes:.0f}" if r.wire_bytes is not None else "-"
+            lines.append(
+                f"  {r.index:>2}  {r.stage:<52} {r.observed_s * 1e6:>12.2f} "
+                f"{pred:>10} {wire:>12}"
+            )
+        lines.append(
+            f"  total observed {self.observed_s * 1e6:.2f} us "
+            f"(exchanges {self.exchange_observed_s * 1e6:.2f} us, "
+            f"model {self.predicted_s * 1e6:.2f} us)"
+        )
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.table()
 
 
 def plan_fft(

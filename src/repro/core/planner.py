@@ -112,12 +112,69 @@ def wisdom_key(
     return key
 
 
+def _valid_observed_cell(cell) -> bool:
+    return (
+        isinstance(cell, dict)
+        and isinstance(cell.get("n"), (int, float))
+        and cell.get("n", 0) > 0
+        and isinstance(cell.get("s"), (int, float))
+        and cell.get("s", -1.0) >= 0
+    )
+
+
+def _merge_observed(a, b) -> Dict[str, dict]:
+    """Union two observed-timings channels: per-candidate sample counts
+    add and means combine count-weighted. Malformed cells are dropped
+    (same advisory contract as the rest of the wisdom store)."""
+    out: Dict[str, dict] = {}
+    for side in (a, b):
+        if not isinstance(side, dict):
+            continue
+        for name, cell in side.items():
+            if not _valid_observed_cell(cell):
+                continue
+            prev = out.get(name)
+            if prev is None:
+                out[name] = {"n": cell["n"], "s": float(cell["s"])}
+            else:
+                n = prev["n"] + cell["n"]
+                out[name] = {
+                    "n": n,
+                    "s": (prev["s"] * prev["n"] + float(cell["s"]) * cell["n"]) / n,
+                }
+    return out
+
+
+def effective_timings(entry) -> Dict[str, float]:
+    """The timing table the planner's argmin consults: plan-time race
+    medians overlaid by the *observed* channel where real executions
+    have been recorded (``record_observed`` / ``Plan.profile``) -- a
+    candidate's observed mean from production runs outranks its one-off
+    race time. Returns {} for malformed entries."""
+    if not isinstance(entry, dict):
+        return {}
+    timings = entry.get("timings")
+    eff = {
+        k: float(v)
+        for k, v in (timings.items() if isinstance(timings, dict) else ())
+        if isinstance(v, (int, float))
+    }
+    obs = entry.get("observed")
+    if isinstance(obs, dict):
+        for name, cell in obs.items():
+            if _valid_observed_cell(cell):
+                eff[name] = float(cell["s"])
+    return eff
+
+
 def merge_wisdom_entry(old, new) -> dict:
     """Combine two wisdom entries for the same key: the per-candidate
     timing tables union (both measurements were real; a candidate timed
-    by either run stays known) and the pinned backend becomes the argmin
-    of the combined table. A malformed side loses to a well-formed one
-    outright -- wisdom is advisory, so the merge can never raise."""
+    by either run stays known), the observed-timings channels union
+    count-weighted, and the pinned backend becomes the argmin of the
+    combined :func:`effective_timings`. A malformed side loses to a
+    well-formed one outright -- wisdom is advisory, so the merge can
+    never raise."""
     old_t = old.get("timings") if isinstance(old, dict) else None
     new_t = new.get("timings") if isinstance(new, dict) else None
     if not isinstance(new_t, dict) or not new_t:
@@ -128,7 +185,11 @@ def merge_wisdom_entry(old, new) -> dict:
     timings.update(new_t)
     merged = dict(new)
     merged["timings"] = timings
-    merged["backend"] = min(sorted(timings), key=timings.__getitem__)
+    observed = _merge_observed(old.get("observed"), new.get("observed"))
+    if observed:
+        merged["observed"] = observed
+    eff = effective_timings(merged)
+    merged["backend"] = min(sorted(eff), key=eff.__getitem__)
     return merged
 
 
@@ -271,6 +332,45 @@ def wisdom_items():
     """Snapshot of the in-process wisdom store as (key, entry) pairs --
     the read-only view the serving pool's warm start iterates."""
     return list(_WISDOM.items())
+
+
+def record_observed(plan, seconds, *, backend: Optional[str] = None) -> bool:
+    """Fold one *observed* whole-transform execution time (seconds of
+    wall clock from real telemetry -- ``Plan.profile``, a trace span, a
+    serving window) into the wisdom observed channel for the plan's
+    problem key.
+
+    The entry's ``observed`` table keeps a count-weighted running mean
+    per candidate, and the entry's pinned ``backend`` re-argmins over
+    :func:`effective_timings` -- so the measured planner consults real
+    executions, not just its plan-time races, and ``export_wisdom``
+    ships what production actually saw. Only plans produced by
+    ``planner="measure"`` carry a ``wisdom_key``; anything else (or a
+    forgotten key, or a non-positive/NaN duration) is a no-op returning
+    False."""
+    key = getattr(plan, "wisdom_key", None)
+    if key is None or not (seconds > 0):
+        return False
+    entry = _WISDOM.get(key)
+    if not isinstance(entry, dict):
+        return False
+    name = backend if backend is not None else getattr(plan, "backend", None)
+    if not isinstance(name, str):
+        return False
+    obs = entry.get("observed")
+    if not isinstance(obs, dict):
+        obs = entry["observed"] = {}
+    cell = obs.get(name)
+    if _valid_observed_cell(cell):
+        n = cell["n"] + 1
+        cell = {"n": n, "s": (cell["s"] * cell["n"] + float(seconds)) / n}
+    else:
+        cell = {"n": 1, "s": float(seconds)}
+    obs[name] = cell
+    eff = effective_timings(entry)
+    if eff:
+        entry["backend"] = min(sorted(eff), key=eff.__getitem__)
+    return True
 
 
 def forget_wisdom() -> None:
@@ -557,6 +657,7 @@ def plan_measured(
             plan.planner = "measure"
             plan.measured = dict(timings)
             plan.wisdom_hit = True
+            plan.wisdom_key = key
             return plan
         # wisdom is advisory: a malformed/stale entry (e.g. a hand-edited
         # or foreign wisdom file, or one without usable timings) is
@@ -580,4 +681,5 @@ def plan_measured(
     plan.planner = "measure"
     plan.measured = timings
     plan.wisdom_hit = False
+    plan.wisdom_key = key
     return plan

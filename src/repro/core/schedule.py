@@ -48,6 +48,7 @@ so ``predict()`` can never drift from execution.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Dict, Optional, Tuple
 
@@ -946,12 +947,11 @@ def _twiddled_exchange(v: jax.Array, tw: Twiddle, ex: Exchange) -> jax.Array:
     return tr.distributed_transpose(v * t, ex.axis, strategy=ex.backend)
 
 
-def execute_schedule(xl: jax.Array, sched: Schedule, *, impl="jnp") -> jax.Array:
-    """Interpret a schedule over one device's local block -- the single
-    shard_map body behind every distributed transform. Must be called
-    inside ``shard_map`` (use :func:`run_schedule` from outside)."""
-    stages = sched.stages
-    v = jnp.conj(xl) if sched.conj else xl
+def _execute_stages(v: jax.Array, stages: Tuple[object, ...], *, impl="jnp") -> jax.Array:
+    """Interpret a run of stages over one device's local block. The
+    whole-schedule executor and the trace-mode segment runner both call
+    this, so traced segments execute exactly the ops the untraced body
+    would."""
     i = 0
     while i < len(stages):
         st = stages[i]
@@ -987,6 +987,15 @@ def execute_schedule(xl: jax.Array, sched: Schedule, *, impl="jnp") -> jax.Array
         else:
             raise TypeError(f"unknown stage {st!r}")
         i += 1
+    return v
+
+
+def execute_schedule(xl: jax.Array, sched: Schedule, *, impl="jnp") -> jax.Array:
+    """Interpret a schedule over one device's local block -- the single
+    shard_map body behind every distributed transform. Must be called
+    inside ``shard_map`` (use :func:`run_schedule` from outside)."""
+    v = jnp.conj(xl) if sched.conj else xl
+    v = _execute_stages(v, sched.stages, impl=impl)
     if sched.conj:
         v = jnp.conj(v)
     if sched.scale is not None:
@@ -1000,6 +1009,63 @@ def _specs(sched: Schedule, ndim: int) -> Tuple[P, P]:
     return i, o
 
 
+def simulate_specs(sched: Schedule, ndim: int) -> Tuple[Tuple[Optional[str], ...], ...]:
+    """Walk the stage list symbolically and return the full-length
+    partition spec at every stage boundary: ``specs[0]`` is the input
+    spec, ``specs[i + 1]`` the spec after stage ``i``. This is what lets
+    the trace-mode executor cut the schedule into per-stage shard_map
+    segments without any resharding between them.
+
+    The rules mirror the executor's data movement:
+
+    - an :class:`Exchange` transposes the *data* of the last two local
+      dims but keeps the same spec positions sharded -- the local block
+      goes ``(..., r, C)`` with R sharded to ``(..., c, R)`` with C
+      sharded over the same mesh axis (see
+      :mod:`repro.core.transpose`), so the tail spec is unchanged;
+    - a :class:`Relayout` permutes/merges/splits spec entries exactly as
+      it moves the local dims;
+    - local stages (FFT/r2c/c2r/pad/trim) never touch sharding.
+
+    The final spec must land on the schedule's own ``out_tail`` -- a
+    mismatch means the simulation rules and a builder disagree, so we
+    fail loudly rather than emit a silently-resharding trace."""
+    spec = [None] * (ndim - len(sched.in_tail)) + list(sched.in_tail)
+    out = [tuple(spec)]
+    for st in sched.stages:
+        if isinstance(st, Relayout):
+            if st.op == "swap_last2":
+                spec[-1], spec[-2] = spec[-2], spec[-1]
+            elif st.op == "swap_outer":
+                spec[-3], spec[-2] = spec[-2], spec[-3]
+            elif st.op == "flatten2":
+                if spec[-1] is not None:
+                    raise ValueError(
+                        "flatten2 with the minor axis sharded has no "
+                        "block-contiguous partition spec"
+                    )
+                spec = spec[:-2] + [spec[-2]]
+            elif st.op == "unflatten2":
+                spec = spec[:-1] + [spec[-1], None]
+            else:  # pragma: no cover - _relayout already rejects these
+                raise ValueError(f"unknown relayout op {st.op!r}")
+        elif isinstance(st, (Twiddle, Exchange)):
+            ex = st if isinstance(st, Exchange) else None
+            if ex is not None and ex.p > 1 and spec[-2] != ex.axis:
+                raise ValueError(
+                    f"exchange over mesh axis {ex.axis!r} but simulated "
+                    f"spec has {spec[-2]!r} sharded at position -2"
+                )
+        out.append(tuple(spec))
+    expected = [None] * (len(out[-1]) - len(sched.out_tail)) + list(sched.out_tail)
+    if list(out[-1]) != expected:
+        raise ValueError(
+            f"spec simulation of {sched.kind} schedule landed on "
+            f"{out[-1]} but the schedule declares out_tail={sched.out_tail}"
+        )
+    return tuple(out)
+
+
 def _xla_reference(x: jax.Array, sched: Schedule, mesh: Mesh) -> jax.Array:
     """The one GSPMD reference path (the 'FFTW3 reference' analogue):
     hand the sharded array to XLA's own FFT op under jit and let GSPMD
@@ -1007,7 +1073,15 @@ def _xla_reference(x: jax.Array, sched: Schedule, mesh: Mesh) -> jax.Array:
     ``_fft2_xla_auto`` / ``_rfft2_xla_auto`` / ``_irfft2_xla_auto``
     one-offs -- every whole-transform backend now routes through the
     same schedule object as the shard_map executor."""
-    in_spec, out_spec = _specs(sched, x.ndim)
+    return _reference_executable(sched, mesh, x.ndim)(x)
+
+
+@functools.lru_cache(maxsize=128)
+def _reference_executable(sched: Schedule, mesh: Mesh, ndim: int):
+    """Jitted GSPMD reference, cached on the (hashable, frozen) schedule
+    so repeated traced executions (``Plan.profile`` reps) hit the compile
+    cache instead of re-jitting a fresh closure every call."""
+    in_spec, out_spec = _specs(sched, ndim)
     sh_in = NamedSharding(mesh, in_spec)
     sh_out = NamedSharding(mesh, out_spec)
     k, inv, tb = sched.kind, sched.inverse, sched.transpose_back
@@ -1050,14 +1124,26 @@ def _xla_reference(x: jax.Array, sched: Schedule, mesh: Mesh) -> jax.Array:
         fn = lambda v: jnp.fft.irfftn(v, s=s, axes=(-3, -2, -1))  # noqa: E731
     else:  # pragma: no cover - builders only emit the kinds above
         raise ValueError(f"no whole-transform reference for schedule kind {k!r}")
-    return jax.jit(fn, in_shardings=sh_in, out_shardings=sh_out)(x)
+    return jax.jit(fn, in_shardings=sh_in, out_shardings=sh_out)
 
 
-def run_schedule(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl="jnp") -> jax.Array:
+def run_schedule(
+    x: jax.Array, sched: Schedule, mesh: Mesh, *, impl="jnp", trace=None
+) -> jax.Array:
     """Run a schedule on a globally-sharded array: shard_map the
     interpreter with the schedule's own partition specs, or dispatch the
     whole transform to the GSPMD reference for ``kind="global"``
-    backends."""
+    backends.
+
+    With ``trace`` (a :class:`repro.obs.trace.TraceRecorder`) the
+    schedule instead executes *segmented*: one shard_map per stage with
+    ``jax.block_until_ready`` between them, stamping a wall-clock span
+    per stage -- Exchange spans carry backend/role/wire-bytes/pipeline
+    attributes (the paper's comm-vs-compute breakdown, per stage). The
+    default ``trace=None`` path is byte-identical to the untraced
+    executor and stays jittable."""
+    if trace is not None:
+        return _run_schedule_traced(x, sched, mesh, impl=impl, trace=trace)
     if sched.global_backend is not None:
         return _xla_reference(x, sched, mesh)
     in_spec, out_spec = _specs(sched, x.ndim)
@@ -1066,6 +1152,122 @@ def run_schedule(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl="jnp") -> ja
         return execute_schedule(xl, sched, impl=impl)
 
     return shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)(x)
+
+
+def _segments(sched: Schedule) -> Tuple[Tuple[int, Tuple[object, ...]], ...]:
+    """Cut the stage list into trace segments: every stage is its own
+    segment except a Twiddle, which rides its following Exchange (the
+    executor fuses them; the merged span reports on the Exchange)."""
+    segs = []
+    stages = sched.stages
+    i = 0
+    while i < len(stages):
+        if isinstance(stages[i], Twiddle):
+            segs.append((i, stages[i : i + 2]))
+            i += 2
+        else:
+            segs.append((i, stages[i : i + 1]))
+            i += 1
+    return tuple(segs)
+
+
+def _itemsizes(x: jax.Array) -> Tuple[int, int]:
+    """(real, complex) itemsizes implied by the runtime dtype."""
+    if jnp.iscomplexobj(x):
+        return x.dtype.itemsize // 2, x.dtype.itemsize
+    return x.dtype.itemsize, 2 * x.dtype.itemsize
+
+
+def exchange_span_args(st: Exchange, real_itemsize: int, complex_itemsize: int) -> Dict[str, object]:
+    """The attribute payload every Exchange span carries -- the same
+    byte walk the cost model uses, so observed spans and
+    ``schedule_comm_bytes`` can never disagree."""
+    return {
+        "stage": "Exchange",
+        "backend": st.backend,
+        "role": st.role,
+        "axis": st.axis,
+        "p": st.p,
+        "payload": st.payload,
+        "fft": st.fft,
+        "inverse": st.inverse,
+        "fused": st.fused,
+        "n_chunks": st.n_chunks,
+        "block_bytes": exchange_block_bytes(st, real_itemsize, complex_itemsize),
+        "wire_bytes": exchange_wire_bytes(st, real_itemsize, complex_itemsize),
+    }
+
+
+@functools.lru_cache(maxsize=512)
+def _segment_executable(
+    sched: Schedule, start: int, seg_len: int, impl: str, mesh: Mesh,
+    in_spec: P, out_spec: P,
+):
+    """One jitted shard_map per trace segment, cached on the frozen
+    schedule + boundary specs. Without this every traced execution
+    rebuilds fresh closures, so jit's cache never hits and each
+    ``Plan.profile`` rep re-pays tracing + compilation -- the observed
+    spans would time the compiler, not the stage."""
+    seg = sched.stages[start : start + seg_len]
+    return jax.jit(shard_map(
+        lambda xl: _execute_stages(xl, seg, impl=impl),
+        mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+    ))
+
+
+def _run_schedule_traced(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, trace) -> jax.Array:
+    """Trace-mode executor: host-side segmentation with a wall-clock
+    span per stage. Each segment is its own shard_map over the
+    spec-simulated boundary shardings (no resharding between segments --
+    :func:`simulate_specs` guarantees consecutive segments agree on the
+    layout), and ``block_until_ready`` fences each span so durations
+    measure that stage's work rather than dispatch latency. First
+    execution of a segment pays its compile; profile with warmup reps
+    (``Plan.profile`` does) for steady-state numbers."""
+    r_item, c_item = _itemsizes(x)
+    if sched.global_backend is not None:
+        with trace.span(
+            f"global:{sched.kind}",
+            cat="stage",
+            stage="Global",
+            backend=sched.global_backend,
+            schedule=sched.schedule_hash(),
+        ):
+            out = _xla_reference(x, sched, mesh)
+            jax.block_until_ready(out)
+        return out
+    bounds = simulate_specs(sched, x.ndim)
+    v = x
+    jax.block_until_ready(v)
+    if sched.conj:
+        with trace.span("Conj(in)", cat="stage", stage="Conj"):
+            v = jnp.conj(v)
+            jax.block_until_ready(v)
+    for start, seg in _segments(sched):
+        in_spec = P(*bounds[start])
+        out_spec = P(*bounds[start + len(seg)])
+        report = seg[-1]  # the Exchange of a Twiddle+Exchange pair
+        if isinstance(report, Exchange):
+            cat = "exchange"
+            args = exchange_span_args(report, r_item, c_item)
+            if len(seg) > 1:
+                args["twiddle"] = True
+        else:
+            cat = "stage"
+            args = {"stage": type(report).__name__}
+        args["index"] = start + len(seg) - 1
+        fn = _segment_executable(sched, start, len(seg), impl, mesh, in_spec, out_spec)
+        with trace.span(_stage_label(report), cat=cat, **args):
+            v = fn(v)
+            jax.block_until_ready(v)
+    if sched.conj or sched.scale is not None:
+        with trace.span("Epilogue(conj/scale)", cat="stage", stage="Epilogue"):
+            if sched.conj:
+                v = jnp.conj(v)
+            if sched.scale is not None:
+                v = v / sched.scale
+            jax.block_until_ready(v)
+    return v
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,10 @@ def build_argparser():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at", type=int, default=None, help="inject a failure (recovery demo)")
     ap.add_argument("--attn-impl", default="chunked", choices=["chunked", "naive"])
+    ap.add_argument(
+        "--monitor-window", type=int, default=512,
+        help="step-telemetry history bound (StepMonitor history_limit)",
+    )
     return ap
 
 
@@ -63,7 +67,7 @@ def train(args, *, injector: Optional[FailureInjector] = None) -> dict:
     )
     ds = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed))
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)
-    monitor = StepMonitor()
+    monitor = StepMonitor(history_limit=getattr(args, "monitor_window", 512))
     injector = injector or FailureInjector(args.fail_at)
     history = {"loss": [], "restarts": 0}
 
@@ -75,17 +79,30 @@ def train(args, *, injector: Optional[FailureInjector] = None) -> dict:
             state = ckpt.restore(latest, state)
             start = latest
             log.info("resumed from checkpoint step %d", start)
+            # the pre-failure EMA would flag every post-restart step
+            # (recompiles, cold caches) -- start the baseline fresh
+            monitor.reset()
         step_fn = jax.jit(make_train_step(model, tcfg, mesh), donate_argnums=(0,))
         for step in range(start, args.steps):
             injector.maybe_fail(step)
-            batch = make_batch_arrays(ds.batch_at(step), mesh if mesh.size > 1 else None)
+            # a step spans input + device work so a slow host pipeline
+            # flags (and names itself) like a slow device would
             monitor.start()
+            t_in = time.perf_counter()
+            batch = make_batch_arrays(ds.batch_at(step), mesh if mesh.size > 1 else None)
+            input_s = time.perf_counter() - t_in
             state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            st = monitor.stop(tokens=args.batch * args.seq)
+            loss = float(metrics["loss"])  # blocks on the step
+            st = monitor.stop(
+                tokens=args.batch * args.seq,
+                spans=[("input", input_s), ("step_fn", time.perf_counter() - t_in - input_s)],
+            )
             history["loss"].append(loss)
             if st.flagged:
-                log.warning("straggler step %d: %.3fs (ema %.3fs)", step, st.seconds, monitor.ema)
+                log.warning(
+                    "straggler step %d: %.3fs (ema %.3fs, slowest stage: %s)",
+                    step, st.seconds, monitor.ema, st.culprit,
+                )
             if step % args.log_every == 0:
                 log.info(
                     "step %d loss %.4f gnorm %.3f %.0f tok/s",

@@ -1,0 +1,3 @@
+from repro.obs.trace import Span, TraceRecorder, merge_traces
+
+__all__ = ["Span", "TraceRecorder", "merge_traces"]

@@ -49,7 +49,7 @@ from repro.apps import derivatives as _derivatives
 from repro.apps import poisson as _poisson
 from repro.core import planner as _planner
 from repro.core.plan import plan_fft
-from repro.runtime.monitor import LatencyWindow
+from repro.runtime.monitor import LatencyWindow, StepMonitor
 from repro.serve.queue import Admission, CoalescingQueue
 
 
@@ -432,12 +432,21 @@ class SpectralEngine:
     def reset_stats(self) -> None:
         """Zero the telemetry windows and counters (the plan pool and
         its hit/miss history are kept) -- e.g. between benchmark
-        measurement windows."""
+        measurement windows. This is the ``reset()`` escape hatch for
+        the default-on dispatch telemetry."""
         w = self._window_len
         self.latency = LatencyWindow(w)  # submit -> device-done (blocked)
         self.queue_wait = LatencyWindow(w)  # submit -> dispatch
         self.queue_depth = LatencyWindow(w)  # sampled at each submit
         self.batch_sizes = LatencyWindow(w)
+        # host-side dispatch breakdown, one window per pipeline stage:
+        # plan-pool lookup / operand stack+pad+placement / async launch
+        self.stage_windows: Dict[str, LatencyWindow] = {
+            name: LatencyWindow(w) for name in ("pool", "stack", "execute")
+        }
+        # straggler detection over dispatches; flagged dispatches name
+        # the slowest stage above as their culprit
+        self.dispatch_monitor = StepMonitor(history_limit=w)
         self.requests = 0
         self.batches = 0
         self.padded = 0  # zero-pad rows added to fill buckets
@@ -602,12 +611,15 @@ class SpectralEngine:
         shape, ndim, real, lengths = req0.shape, req0.ndim, req0.real, req0.lengths
         k = len(futs)
         bucket = self._bucket(k)
+        self.dispatch_monitor.start()
+        t0 = self._clock()
         plan, hit = self.pool.get(
             (bucket,) + self._plan_shape(op, shape, ndim),
             ndim,
             req0.operands[0].dtype,
             real,
         )
+        t_pool = self._clock()
         sharding = plan.input_sharding(opposite=(op == "ifft"))
         stacked = []
         for j in range(arity):
@@ -618,8 +630,16 @@ class SpectralEngine:
                 )
             stacked.append(jax.device_put(block, sharding))
         self.padded += bucket - k
-        out = fn(plan, tuple(stacked), lengths)
+        t_stack = self._clock()
+        out = fn(plan, tuple(stacked), lengths)  # async launch, not device time
         now = self._clock()
+        spans = [
+            ("pool", t_pool - t0), ("stack", t_stack - t_pool),
+            ("execute", now - t_stack),
+        ]
+        for name, dt in spans:
+            self.stage_windows[name].record(dt)
+        self.dispatch_monitor.stop(tokens=k, spans=spans)
         self.batches += 1
         self.batch_sizes.record(k)
         for i, fut in enumerate(futs):
@@ -657,5 +677,43 @@ class SpectralEngine:
             "latency_s": self.latency.summary((50, 90, 99)),
             "queue_wait_s": self.queue_wait.summary((50, 90, 99)),
             "queue_depth": self.queue_depth.summary((50, 99)),
+            "stages_s": {
+                name: w.summary((50, 99)) for name, w in self.stage_windows.items()
+            },
+            "dispatch": self.dispatch_monitor.straggler_report(),
             "pool": self.pool.stats(),
         }
+
+    def metrics(self) -> dict:
+        """Flat scalar gauge/counter mapping for scraping (one number
+        per key -- Prometheus-shaped, unlike the nested :meth:`stats`):
+        live queue depth, request/batch counters, latency and queue-wait
+        percentiles, per-dispatch-stage p50s, plan-pool hit/miss/eviction
+        counters, and the dispatch straggler telemetry. Culprit
+        attribution rides ``dispatch_culprit_<stage>`` counters."""
+        pool = self.pool.stats()
+        lat = self.latency.percentiles((50, 99))
+        wait = self.queue_wait.percentiles((50, 99))
+        report = self.dispatch_monitor.straggler_report()
+        out = {
+            "requests": self.requests,
+            "completed": self.latency.count,
+            "batches": self.batches,
+            "padded": self.padded,
+            "queue_depth": self.queue.depth(),
+            "queue_depth_p99": self.queue_depth.percentiles((99,))["p99"],
+            "latency_p50_s": lat["p50"],
+            "latency_p99_s": lat["p99"],
+            "queue_wait_p50_s": wait["p50"],
+            "queue_wait_p99_s": wait["p99"],
+            "pool_hits": pool["hits"],
+            "pool_misses": pool["misses"],
+            "pool_evictions": pool["evictions"],
+            "dispatch_steps": report["steps"],
+            "dispatch_flagged": report["flagged"],
+        }
+        for name, w in self.stage_windows.items():
+            out[f"dispatch_{name}_p50_s"] = w.percentiles((50,))["p50"]
+        for name, count in report["culprits"].items():
+            out[f"dispatch_culprit_{name}"] = count
+        return out

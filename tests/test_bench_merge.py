@@ -1,6 +1,8 @@
 """benchmarks/run.py --json merge semantics: a partial run must merge
 its sections into an existing BENCH_fft.json instead of clobbering the
-committed multi-section baseline (and --force must overwrite)."""
+committed multi-section baseline (and --force must overwrite). The
+top-level ``meta`` section (planner-accuracy score) must survive row
+merges untouched."""
 
 import json
 import sys
@@ -13,8 +15,11 @@ if REPO not in sys.path:
 from benchmarks.run import _merge_json  # noqa: E402
 
 
-def _write(path, rows):
-    path.write_text(json.dumps({"schema": 2, "rows": rows}))
+def _write(path, rows, meta=None):
+    doc = {"schema": 2, "rows": rows}
+    if meta is not None:
+        doc["meta"] = meta
+    path.write_text(json.dumps(doc))
 
 
 def test_partial_run_keeps_other_sections(tmp_path):
@@ -28,7 +33,7 @@ def test_partial_run_keeps_other_sections(tmp_path):
     ]
     _write(path, baseline)
     new = [{"bench": "fft2", "p": 8, "backend": "scatter", "measured_us": 9.0}]
-    merged = _merge_json(str(path), new)
+    merged, _ = _merge_json(str(path), new)
     benches = sorted(r["bench"] for r in merged)
     assert benches == ["fft2", "fft3_decomp", "overlap", "real"]
     (fft2_row,) = [r for r in merged if r["bench"] == "fft2"]
@@ -47,7 +52,7 @@ def test_overlap_section_replaced_as_a_unit(tmp_path):
         {"bench": "overlap", "p": 8, "fused": True, "measured_us": 4.0},
         {"bench": "real", "p": 8, "measured_us": 3.0},
     ])
-    merged = _merge_json(str(path), [
+    merged, _ = _merge_json(str(path), [
         {"bench": "overlap", "p": 8, "fused": True, "n_chunks": 32, "measured_us": 2.0},
     ])
     overlap = [r for r in merged if r["bench"] == "overlap"]
@@ -60,7 +65,7 @@ def test_overlap_section_replaced_as_a_unit(tmp_path):
 def test_ran_section_fully_replaced_not_appended(tmp_path):
     path = tmp_path / "b.json"
     _write(path, [{"bench": "real", "p": 2}, {"bench": "real", "p": 4}])
-    merged = _merge_json(str(path), [{"bench": "real", "p": 8}])
+    merged, _ = _merge_json(str(path), [{"bench": "real", "p": 8}])
     assert merged == [{"bench": "real", "p": 8}]
 
 
@@ -74,7 +79,7 @@ def test_serve_section_merges_like_the_rest(tmp_path):
          "load": 16, "tps": 100.0},
         {"bench": "serve", "row": "warm_start", "p": 8, "cold_first_us": 9e4},
     ])
-    merged = _merge_json(str(path), [
+    merged, _ = _merge_json(str(path), [
         {"bench": "serve", "row": "load_sweep", "p": 8, "coalesce": True,
          "load": 16, "tps": 250.0},
         {"bench": "serve", "row": "load_sweep", "p": 8, "coalesce": False,
@@ -92,14 +97,36 @@ def test_serve_section_merges_like_the_rest(tmp_path):
 def test_force_overwrites(tmp_path):
     path = tmp_path / "b.json"
     _write(path, [{"bench": "fft3_decomp", "p": 8}])
-    merged = _merge_json(str(path), [{"bench": "fft2", "p": 8}], force=True)
+    merged, meta = _merge_json(str(path), [{"bench": "fft2", "p": 8}], force=True)
     assert merged == [{"bench": "fft2", "p": 8}]
+    assert meta == {}
 
 
 def test_missing_or_corrupt_file_is_fresh_start(tmp_path):
-    assert _merge_json(str(tmp_path / "nope.json"), [{"bench": "fft2"}]) == [
-        {"bench": "fft2"}
-    ]
+    assert _merge_json(str(tmp_path / "nope.json"), [{"bench": "fft2"}]) == (
+        [{"bench": "fft2"}],
+        {},
+    )
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
-    assert _merge_json(str(bad), [{"bench": "fft2"}]) == [{"bench": "fft2"}]
+    assert _merge_json(str(bad), [{"bench": "fft2"}]) == ([{"bench": "fft2"}], {})
+
+
+def test_meta_survives_row_merge(tmp_path):
+    """planner_score --write-meta stamps meta; a later --json bench run
+    must carry it over unchanged while replacing its own rows."""
+    path = tmp_path / "BENCH_fft.json"
+    score = {"planner_score": {"picked_hit_rate": 1.0, "groups": 15}}
+    _write(path, [{"bench": "fft2", "p": 8, "measured_us": 1.0}], meta=score)
+    merged, meta = _merge_json(str(path), [{"bench": "fft2", "p": 8, "measured_us": 2.0}])
+    assert meta == score
+    assert merged == [{"bench": "fft2", "p": 8, "measured_us": 2.0}]
+
+
+def test_malformed_meta_dropped_not_crashed(tmp_path):
+    path = tmp_path / "b.json"
+    doc = {"schema": 2, "rows": [{"bench": "real", "p": 2}], "meta": ["not", "a", "dict"]}
+    path.write_text(json.dumps(doc))
+    merged, meta = _merge_json(str(path), [{"bench": "fft2", "p": 8}])
+    assert meta == {}
+    assert any(r["bench"] == "real" for r in merged)

@@ -44,6 +44,22 @@ class TestPercentiles:
         with pytest.raises(ValueError):
             percentiles([1.0], qs=(-1,))
 
+    def test_boundary_quantiles_multi_sample(self):
+        # documented convention: q=0 -> minimum, q=100 -> maximum
+        out = percentiles([5.0, 1.0, 3.0], qs=(0, 100))
+        assert out == {"p0": 1.0, "p100": 5.0}
+
+    def test_distinct_quantiles_with_colliding_labels_raise(self):
+        # 99.9 and 99.9000001 are different floats but both format to
+        # "p99_9" at %g precision: two different quantiles silently
+        # sharing one dict key would drop a result, so this must raise
+        with pytest.raises(ValueError, match="collide"):
+            percentiles([1.0, 2.0], qs=(99.9, 99.9000001))
+
+    def test_same_quantile_twice_is_not_a_collision(self):
+        out = percentiles([1.0, 2.0], qs=(50, 50.0))
+        assert out == {"p50": 1.0}
+
 
 # ---------------------------------------------------------- LatencyWindow
 class TestLatencyWindow:
@@ -131,3 +147,64 @@ class TestStepMonitorEMA:
         assert rep["steps"] == 4
         assert rep["flagged"] == 1
         assert rep["worst"] == 8.0
+
+
+def _step(mon, dt, **stop_kwargs):
+    """One synthetic step of duration dt through a patched clock."""
+    import repro.runtime.monitor as m
+
+    orig = m.time.perf_counter
+    mon._t0 = 0.0
+    m.time.perf_counter = lambda: dt
+    try:
+        return mon.stop(**stop_kwargs)
+    finally:
+        m.time.perf_counter = orig
+
+
+class TestStepMonitorTelemetry:
+    def test_culprit_names_slowest_span(self):
+        mon = StepMonitor(warmup=0)
+        st = _step(mon, 1.0, spans=[("input", 0.1), ("step_fn", 0.9)])
+        assert st.culprit == "step_fn"
+        # trace-span objects and JSONL dicts parse the same way
+        span_obj = type("S", (), {"name": "exchange", "dur": 2.0})()
+        st = _step(mon, 2.5, spans=[span_obj, {"name": "fft", "dur": 0.5}])
+        assert st.culprit == "exchange"
+        # no spans / unusable spans -> no attribution, no crash
+        assert _step(mon, 1.0).culprit is None
+        assert _step(mon, 1.0, spans=[{"dur": 1.0}, ("x",)]).culprit is None
+
+    def test_straggler_report_attributes_culprits(self):
+        mon = StepMonitor(ema_alpha=0.0, warmup=1, straggler_factor=2.0)
+        _step(mon, 1.0, spans=[("input", 1.0)])
+        _step(mon, 1.0, spans=[("input", 1.0)])
+        _step(mon, 9.0, spans=[("input", 0.5), ("step_fn", 8.5)])
+        _step(mon, 9.0, spans=[("input", 8.0), ("step_fn", 1.0)])
+        rep = mon.straggler_report()
+        assert rep["flagged"] == 2
+        assert rep["culprits"] == {"step_fn": 1, "input": 1}
+
+    def test_history_window_bounded_counters_lifetime(self):
+        mon = StepMonitor(warmup=10**9, history_limit=4)
+        for i in range(10):
+            _step(mon, float(i + 1), tokens=100)
+        assert len(mon.history) == 4  # always-on recording stays bounded
+        assert mon.straggler_report()["steps"] == 10  # lifetime survives trim
+        assert mon.percentiles(qs=(0,))["p0"] == 7.0  # oldest retained step
+
+    def test_reset_drops_everything(self):
+        mon = StepMonitor(ema_alpha=0.0, warmup=1, straggler_factor=2.0)
+        _step(mon, 1.0)
+        _step(mon, 1.0)
+        _step(mon, 9.0)
+        assert mon.flag_count == 1 and mon.ema is not None
+        mon.reset()
+        assert mon.ema is None and len(mon.history) == 0
+        assert mon.flag_count == 0
+        rep = mon.straggler_report()
+        assert rep == {
+            "steps": 0, "flagged": 0, "ema_s": None, "worst": 0.0, "culprits": {},
+        }
+        # post-reset, a big step inside the fresh warmup is not flagged
+        assert not _step(mon, 50.0).flagged
