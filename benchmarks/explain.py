@@ -3,9 +3,14 @@
 For each representative plan (the shapes the fft/pencil/real sweeps
 measure), print ``Plan.describe()`` -- the declarative stage pipeline
 (:mod:`repro.core.schedule`) with per-stage model-predicted microseconds
-and wire bytes per device. This is the observability companion to the
-timing sweeps: the same schedule object that executes is the one being
-priced, so a surprising measured row can be read stage by stage.
+and wire bytes per device -- followed by ``Plan.why_text()``, the
+decision provenance: which channel chose the backend (pinned /
+model-argmin / measured-race / wisdom-hit / observed-overlay), the
+timing table that decision argmin'd over, and the calibration constants
+it was priced under. This is the observability companion to the timing
+sweeps: the same schedule object that executes is the one being priced,
+so a surprising measured row can be read stage by stage and decision by
+decision.
 
 Runs in a subprocess with 8 forced host devices (like every sweep), so
 the dumps reflect real 8-shard / 4x2-grid pipelines.
@@ -41,12 +46,15 @@ cases = [
      dict(shape=(64, 64, 64), mesh=gmesh, ndim=3, decomp="pencil")),
     ("pencil r2c rfft3 (4x2 grid)",
      dict(shape=(64, 64, 64), mesh=gmesh, ndim=3, decomp="pencil", real=True)),
+    ("slab c2c fft2 (auto backend: model-argmin provenance)",
+     dict(shape=(n, n), mesh=mesh, ndim=2, backend="auto")),
 ]
 for title, kw in cases:
     shape, m = kw.pop("shape"), kw.pop("mesh")
     plan = plan_fft(shape, m, **kw)
     print(f"== {title}: {plan!r}")
     print(plan.describe())
+    print(plan.why_text())
     print()
 """
 

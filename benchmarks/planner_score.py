@@ -24,12 +24,23 @@ calibration ratio:
 
 Run:  PYTHONPATH=src python -m benchmarks.planner_score
           [--path BENCH_fft.json] [--min-picked 0.9] [--min-model 0.1]
-          [--write-meta]
+          [--wisdom auto] [--ratio-band 0.2:5.0] [--write-meta]
 
-Exits 1 when a gate fails. ``--write-meta`` records the score into the
-baseline's top-level ``meta`` section (which ``benchmarks/run.py
---json`` merges preserve), so the committed artifact carries its own
-accuracy stamp.
+When persisted calibration is available (``--wisdom`` names a wisdom
+file with a ``calibration`` section; the default ``auto`` looks for
+``WISDOM.json`` next to ``--path``), a second *calibrated* score is
+computed: every race row's ``model_us`` is re-priced offline
+(:mod:`benchmarks.row_model` rebuilds the row's schedule) under the
+fabric's fitted alpha/beta -- per backend class where fitted, pooled
+otherwise -- so the score reflects this fabric's constants, not the
+TPU-ICI defaults. ``--ratio-band LO:HI`` gates the calibrated
+``model_ratio_geo`` inside [LO, HI].
+
+Exits 1 when a gate fails. ``--write-meta`` records both scores into
+the baseline's top-level ``meta`` section (which ``benchmarks/run.py
+--json`` merges preserve) plus the calibration fingerprint (alpha/beta
+per device kind and backend class), so the committed artifact carries
+its own accuracy stamp.
 """
 
 from __future__ import annotations
@@ -37,6 +48,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
 from typing import Dict, List, Tuple
 
@@ -97,6 +109,43 @@ def score(rows: List[dict]) -> dict:
     }
 
 
+def calibrated_rows(rows: List[dict]) -> List[dict]:
+    """Race rows with ``model_us`` re-priced under the planner
+    calibration store's fitted constants (per backend class when fitted,
+    pooled otherwise). Empty when no calibration is known for any row's
+    device kind -- the caller falls back to the raw score only."""
+    from benchmarks import row_model
+    from repro.core import planner
+
+    out = []
+    for r in _race_rows(rows):
+        dev = r.get("device_kind") or "unknown"
+        params = planner.calibration_for(dev, row_model.backend_class(r["backend"]))
+        if params is None:
+            continue
+        s = row_model.row_model_seconds(r, params)
+        if s is None:
+            continue
+        r2 = dict(r)
+        r2["model_us"] = round(s * 1e6, 2)
+        out.append(r2)
+    return out
+
+
+def calibration_fingerprint() -> dict:
+    """The alpha/beta constants the calibrated score was computed under,
+    per device kind and backend class -- stamped into meta so the
+    committed artifact records what it was scored against."""
+    from repro.core import planner
+
+    return {dev: cell for dev, cell in planner.calibration_items()}
+
+
+def _parse_band(text: str):
+    lo, _, hi = text.partition(":")
+    return float(lo), float(hi)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--path", default="BENCH_fft.json")
@@ -106,11 +155,21 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--min-model", type=float, default=0.0,
-        help="gate: minimum model-argmin-vs-measured-argmin hit rate",
+        help="gate: minimum model-argmin hit rate (default TPU-ICI params)",
+    )
+    ap.add_argument(
+        "--wisdom", default="auto", metavar="PATH",
+        help="wisdom file whose calibration section prices the "
+        "calibrated score ('auto': WISDOM.json next to --path; '' : off)",
+    )
+    ap.add_argument(
+        "--ratio-band", default=None, metavar="LO:HI",
+        help="gate: calibrated model_ratio_geo must land inside [LO, HI]",
     )
     ap.add_argument(
         "--write-meta", action="store_true",
-        help="record the score into the baseline's top-level meta section",
+        help="record the scores + calibration fingerprint into the "
+        "baseline's top-level meta section",
     )
     args = ap.parse_args(argv)
     try:
@@ -129,12 +188,46 @@ def main(argv=None) -> int:
         f"({s['model_hits']}/{s['groups']})  [gate >= {args.min_model}]\n"
         f"  model_ratio_geo  {s['model_ratio_geo']:.4g}  (1.0 = calibrated)"
     )
+
+    sc = None
+    wisdom = args.wisdom
+    if wisdom == "auto":
+        wisdom = os.path.join(os.path.dirname(os.path.abspath(args.path)), "WISDOM.json")
+        if not os.path.exists(wisdom):
+            wisdom = ""
+    if wisdom:
+        from repro.core import planner
+
+        try:
+            planner.import_wisdom(wisdom)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"planner_score: cannot read wisdom {wisdom}: {e}", file=sys.stderr)
+            return 1
+        crows = calibrated_rows(rows)
+        if crows:
+            sc = score(crows)
+            print(
+                f"  calibrated ({wisdom}):\n"
+                f"  model_hit_rate   {sc['model_hit_rate']:.3f} "
+                f"({sc['model_hits']}/{sc['groups']})\n"
+                f"  model_ratio_geo  {sc['model_ratio_geo']:.4g}"
+                + (f"  [gate in {args.ratio_band}]" if args.ratio_band else "")
+            )
+        else:
+            print(f"  (no calibration for these rows' device kinds in {wisdom})")
+
     if args.write_meta and isinstance(doc, dict):
         meta = doc.get("meta")
         if not isinstance(meta, dict):
             meta = {}
         meta["planner_score"] = s
-        out = {"schema": doc.get("schema"), "meta": meta, "rows": rows}
+        if sc is not None:
+            meta["planner_score_calibrated"] = dict(
+                sc, calibration=calibration_fingerprint()
+            )
+        doc["meta"] = meta
+        out = {k: doc[k] for k in ("schema", "meta") if k in doc}
+        out["rows"] = rows
         with open(args.path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"  wrote meta.planner_score into {args.path}")
@@ -147,6 +240,15 @@ def main(argv=None) -> int:
         )
     if s["model_hit_rate"] < args.min_model:
         failed.append(f"model_hit_rate {s['model_hit_rate']:.3f} < {args.min_model}")
+    if args.ratio_band:
+        lo, hi = _parse_band(args.ratio_band)
+        if sc is None:
+            failed.append("--ratio-band set but no calibrated score (missing wisdom?)")
+        elif not (lo <= sc["model_ratio_geo"] <= hi):
+            failed.append(
+                f"calibrated model_ratio_geo {sc['model_ratio_geo']:.4g} "
+                f"outside [{lo}, {hi}]"
+            )
     if failed:
         print("planner_score FAIL: " + "; ".join(failed), file=sys.stderr)
         return 1

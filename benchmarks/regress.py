@@ -1,0 +1,136 @@
+"""Perf-trajectory viewer + noise-aware regression gate over the
+benchmark history ledger (``BENCH_history.jsonl``).
+
+Each ``benchmarks/run.py --json`` run appends one snapshot record
+(commit, device_kind, timestamp, planner score, one scalar per
+``section|config|metric`` key) to the append-only ledger -- see
+:mod:`repro.obs.history`. This CLI reads it back:
+
+  default       render the trajectory table: one line per tracked key,
+                the last K values oldest->newest, rolling median, and
+                the current baseline's value/ratio
+  --check       gate mode: reduce the baseline BENCH json to a candidate
+                snapshot and exit 1 when any metric regressed against
+                the rolling median/MAD of the ledger (naming the
+                (section, config) row); a ledger with fewer than
+                --min-snapshots points per key never false-fails
+  --append      append the baseline's snapshot to the ledger (what the
+                CI slow-sweeps job runs after regenerating + re-scoring
+                the baseline, so the artifact trajectory grows one
+                point per run)
+
+Run:  PYTHONPATH=src python -m benchmarks.regress
+          [--history BENCH_history.jsonl] [--baseline BENCH_fft.json]
+          [--check] [--append] [--k 8] [--min-snapshots 3]
+          [--nsig 4.0] [--min-ratio 1.5] [--last 30]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import history as h
+
+
+def _load_baseline(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"regress: cannot read baseline {path}: {e}", file=sys.stderr)
+        return None
+
+
+def render_table(hist, snap, *, k: int, last: int) -> str:
+    """Trajectory table: per key, the last values, median, and the
+    candidate snapshot's value/ratio against that median."""
+    lines = [
+        f"{'section|config|metric':<72} {'history (old->new)':<28} "
+        f"{'median':>10} {'now':>10} {'ratio':>7}"
+    ]
+    keys = sorted(snap.get("metrics", {}))[: max(0, last) or None]
+    for key in keys:
+        vals = h.history_values(hist, key, k=k)
+        value = snap["metrics"][key]
+        med = vals and h._median(vals)
+        hist_s = " ".join(f"{v:.0f}" for v in vals) or "-"
+        med_s = f"{med:.1f}" if med else "-"
+        ratio_s = f"{value / med:.2f}" if med else "-"
+        lines.append(f"{key:<72} {hist_s:<28} {med_s:>10} {value:>10.1f} {ratio_s:>7}")
+    if len(snap.get("metrics", {})) > len(keys):
+        lines.append(f"... {len(snap['metrics']) - len(keys)} more keys (--last N)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--baseline", default="BENCH_fft.json")
+    ap.add_argument("--check", action="store_true", help="exit 1 on a confirmed regression")
+    ap.add_argument(
+        "--append", action="store_true",
+        help="append the baseline's snapshot to the ledger",
+    )
+    ap.add_argument("--k", type=int, default=8, help="rolling window (snapshots per key)")
+    ap.add_argument(
+        "--min-snapshots", type=int, default=3,
+        help="min historical points per key before the gate can fire",
+    )
+    ap.add_argument("--nsig", type=float, default=4.0, help="robust sigmas (MAD-based)")
+    ap.add_argument(
+        "--min-ratio", type=float, default=1.5,
+        help="relative floor: a regression must also exceed ratio x median",
+    )
+    ap.add_argument("--last", type=int, default=30, help="table rows to print (0 = all)")
+    args = ap.parse_args(argv)
+
+    doc = _load_baseline(args.baseline)
+    if doc is None:
+        return 1
+    snap = h.snapshot_from_bench(doc)
+    hist = h.read_history(args.history)
+    print(
+        f"regress: ledger {args.history}: {len(hist)} snapshot(s); "
+        f"baseline {args.baseline}: {len(snap['metrics'])} tracked metrics "
+        f"(commit={snap['commit']}, dev={snap['device_kind']})"
+    )
+
+    if args.append:
+        h.append_snapshot(args.history, snap)
+        print(f"regress: appended snapshot -> {args.history} ({len(hist) + 1} total)")
+        return 0
+
+    if not args.check:
+        print(render_table(hist, snap, k=args.k, last=args.last))
+        return 0
+
+    findings = h.detect_regressions(
+        hist, snap, k=args.k, min_snapshots=args.min_snapshots,
+        nsig=args.nsig, min_ratio=args.min_ratio,
+    )
+    if not findings:
+        checked = sum(
+            1 for key in snap["metrics"]
+            if len(h.history_values(hist, key, k=args.k)) >= args.min_snapshots
+        )
+        guarded = len(snap["metrics"]) - checked
+        print(
+            f"regress OK: {checked} metric(s) within the noise band"
+            + (f" ({guarded} below the {args.min_snapshots}-snapshot guard)" if guarded else "")
+        )
+        return 0
+    for f in findings:
+        print(
+            f"regress REGRESSION: ({f['section']}, {f['config']}) {f['metric']} "
+            f"= {f['value']:.1f} vs median {f['median']:.1f} "
+            f"(ratio {f['ratio']:.2f}x, mad {f['mad']:.1f}, n={f['n']})",
+            file=sys.stderr,
+        )
+    print(f"regress FAIL: {len(findings)} regression(s)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

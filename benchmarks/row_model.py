@@ -1,0 +1,277 @@
+"""Offline re-pricing of committed BENCH race rows + per-fabric fits.
+
+Every race row in ``BENCH_fft.json`` (fft2 / fft3_decomp / real
+sections) names a pure schedule: problem shape, shard count,
+decomposition/grid, transform kind, and the candidate variant id. Since
+the stage-schedule IR is rebuildable without a mesh
+(:func:`repro.core.schedule.build_schedule` + ``apply_variant``), each
+row's ``model_us`` can be recomputed offline under ANY CommParams --
+which is what lets persisted calibration re-score the committed
+baseline without re-running the sweeps:
+
+- :func:`row_model_seconds` rebuilds the row's schedule and prices it
+  exactly the way ``planner.predict_candidate`` priced it at bench time
+  (same chunk-compute napkin, same itemsizes) -- with default params it
+  reproduces the committed ``model_us`` columns bit-for-rounding;
+- :func:`row_fit_terms` inverts the row into its alpha/beta regression
+  terms (total messages, total fit bytes over its exchanges);
+- :func:`fit_calibration` least-squares fits fabric constants from the
+  measured rows -- pooled per device_kind plus one fit per backend
+  class (the paper's Fig. 3 per-parcelport fit, from the committed
+  artifact instead of a live sweep).
+
+Run:  PYTHONPATH=src python -m benchmarks.row_model
+          [--path BENCH_fft.json] [--write-wisdom WISDOM.json] [--verify]
+
+``--write-wisdom`` records the fits into the planner calibration store
+and exports them as the wisdom file's ``calibration`` section (merged
+atomically); ``--verify`` recomputes every race row under default
+CommParams and fails on any mismatch with the committed ``model_us``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import comm_model as cm
+from repro.core import planner
+from repro.core import schedule as sch
+from repro.core.plan import split_pair
+
+
+def row_problem(row: dict) -> Optional[dict]:
+    """Decode one race row into pure schedule-builder arguments (None
+    for rows that are not rebuildable races -- overlap/serve sweeps)."""
+    bench = row.get("bench")
+    n, p = row.get("n"), row.get("p")
+    if not isinstance(n, int) or not isinstance(p, int) or p < 1:
+        return None
+    if bench == "fft2":
+        return {"shape": (n, n), "ndim": 2, "decomp": "slab", "p": p, "real": False}
+    if bench == "fft3_decomp":
+        if row.get("decomp") == "pencil":
+            pr, _, pc = str(row.get("grid")).partition("x")
+            try:
+                pr, pc = int(pr), int(pc)
+            except ValueError:
+                return None
+            return {
+                "shape": (n, n, n), "ndim": 3, "decomp": "pencil",
+                "p_rows": pr, "p_cols": pc, "real": False,
+            }
+        return {"shape": (n, n, n), "ndim": 3, "decomp": "slab", "p": p, "real": False}
+    if bench == "real":
+        return {
+            "shape": (n, n), "ndim": 2, "decomp": "slab", "p": p,
+            "real": row.get("transform") == "r2c",
+        }
+    return None
+
+
+def row_schedule(row: dict, candidate: Optional[str] = None):
+    """``(schedule, r_item, c_item, chunk_compute_s)`` for one row's
+    candidate (default: the row's own backend id), rebuilt offline --
+    the same rewritten schedule ``planner.predict_candidate`` priced on
+    the live plan. None when the row is not a rebuildable race."""
+    prob = row_problem(row)
+    if prob is None:
+        return None
+    candidate = candidate if candidate is not None else row.get("backend")
+    if not isinstance(candidate, str):
+        return None
+    if prob["decomp"] == "pencil":
+        base = sch.build_schedule(
+            prob["shape"], ndim=prob["ndim"], decomp="pencil",
+            row_axis="rows", col_axis="cols",
+            p_rows=prob["p_rows"], p_cols=prob["p_cols"],
+            backend_row="alltoall", backend_col="alltoall", real=prob["real"],
+        )
+        rings = max(prob["p_rows"], prob["p_cols"])
+        p = prob["p_rows"] * prob["p_cols"]
+    else:
+        base = sch.build_schedule(
+            prob["shape"], ndim=prob["ndim"], decomp="slab", axis_name="model",
+            p=prob["p"], backend="alltoall", real=prob["real"],
+        )
+        rings = p = prob["p"]
+    try:
+        applied = sch.apply_variant(base, candidate)
+    except (ValueError, KeyError):
+        return None
+    r_item, c_item = (4, 8) if prob["real"] else (8, 8)
+    # Plan._auto_chunk_compute_s's memory-bound napkin: the per-device
+    # exchanged block (_cost_bytes) over HBM_BW; zero when no ring > 1
+    if prob["real"]:
+        elems = float(np.prod(prob["shape"][:-1])) * float(base.hp)
+        cost_bytes = elems * c_item / p
+    else:
+        cost_bytes = float(np.prod(prob["shape"])) * c_item / p
+    chunk_compute_s = 0.0 if rings <= 1 else cost_bytes / cm.HBM_BW
+    return applied, r_item, c_item, chunk_compute_s
+
+
+def row_model_seconds(
+    row: dict, params: Optional[cm.CommParams] = None, candidate: Optional[str] = None
+) -> Optional[float]:
+    """The row's alpha-beta model seconds under ``params`` (default
+    CommParams reproduces the committed ``model_us``)."""
+    built = row_schedule(row, candidate)
+    if built is None:
+        return None
+    applied, r_item, c_item, cc = built
+    return sch.predict_seconds(applied, params or cm.CommParams(), cc, r_item, c_item)
+
+
+def row_fit_terms(row: dict, candidate: Optional[str] = None) -> Optional[Tuple[float, float]]:
+    """``(n_msgs, fit_bytes)`` the row contributes to an alpha/beta
+    regression -- :func:`repro.core.comm_model.exchange_fit_terms`
+    summed over its rebuilt schedule's exchanges."""
+    built = row_schedule(row, candidate)
+    if built is None:
+        return None
+    applied, r_item, c_item, _ = built
+    msgs = fit_bytes = 0.0
+    for st in applied.exchanges():
+        block = sch.exchange_block_bytes(st, r_item, c_item)
+        m, b = cm.exchange_fit_terms(st.backend, st.p, block, st.n_chunks)
+        msgs += m
+        fit_bytes += b
+    return msgs, fit_bytes
+
+
+def backend_class(candidate: str) -> Optional[str]:
+    """The backend class one candidate's measurement calibrates: the
+    base backend name (variant suffix stripped); a mixed pencil pair
+    spreads its time over two collectives and fits no single class
+    (None -- it still feeds the pooled fit)."""
+    base, _ = planner.parse_variant(candidate)
+    if "+" in base:
+        br, bc = split_pair(base)
+        return br if br == bc else None
+    return base
+
+
+def fit_calibration(
+    rows: List[dict], *, base: Optional[cm.CommParams] = None, min_rows: int = 3
+) -> Dict[str, dict]:
+    """Least-squares alpha/beta per device_kind from measured race rows:
+    ``{dev: {"pooled": CommParams, "backends": {class: CommParams},
+    "rows": n}}``. Groups too small or rank-deficient to fit keep no
+    entry (same guard as ``CommParams.refine_online``)."""
+    base = base or cm.CommParams()
+    per_dev: Dict[str, dict] = {}
+    for row in rows:
+        if not isinstance(row, dict):
+            continue
+        m = row.get("measured_us")
+        if not (isinstance(m, (int, float)) and m > 0 and isinstance(row.get("backend"), str)):
+            continue
+        terms = row_fit_terms(row)
+        if terms is None or terms[0] <= 0:
+            continue  # p=1 rows carry no exchange signal
+        point = (terms[0], terms[1], float(m) * 1e-6)
+        dev = row.get("device_kind") or "unknown"
+        d = per_dev.setdefault(dev, {"pooled": [], "classes": {}})
+        d["pooled"].append(point)
+        cls = backend_class(row["backend"])
+        if cls is not None:
+            d["classes"].setdefault(cls, []).append(point)
+    out: Dict[str, dict] = {}
+    for dev, d in per_dev.items():
+        pooled = base._fit_spans(d["pooled"], min_rows, np)
+        if pooled is base:
+            continue  # unfittable: no calibration for this device kind
+        fits = {}
+        for cls, points in sorted(d["classes"].items()):
+            fit = base._fit_spans(points, min_rows, np)
+            if fit is not base:
+                fits[cls] = fit
+        out[dev] = {"pooled": pooled, "backends": fits, "rows": len(d["pooled"])}
+    return out
+
+
+def record_fits(fits: Dict[str, dict], *, source: str = "bench_fit") -> None:
+    """Fold :func:`fit_calibration`'s output into the planner
+    calibration store (count-weighted by contributing rows)."""
+    for dev, fit in fits.items():
+        planner.record_calibration(
+            dev, fit["pooled"], source=source, n=fit["rows"], backends=fit["backends"]
+        )
+
+
+def verify_rows(rows: List[dict], *, tol_us: float = 0.02) -> List[dict]:
+    """Race rows whose recomputed default-params model_us disagrees with
+    the committed column beyond rounding -- the offline-rebuild
+    correctness check (empty = the pure rebuild matches the live plans)."""
+    bad = []
+    for row in rows:
+        if not isinstance(row, dict) or not isinstance(row.get("model_us"), (int, float)):
+            continue
+        s = row_model_seconds(row)
+        if s is None:
+            continue
+        got = round(s * 1e6, 2)
+        if abs(got - row["model_us"]) > tol_us:
+            bad.append({**row, "recomputed_model_us": got})
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--path", default="BENCH_fft.json")
+    ap.add_argument(
+        "--write-wisdom", default=None, metavar="PATH",
+        help="fit per-fabric constants from the baseline's measured rows "
+        "and export them as the wisdom file's calibration section",
+    )
+    ap.add_argument(
+        "--verify", action="store_true",
+        help="recompute every race row's model_us under default params "
+        "and fail on mismatch with the committed column",
+    )
+    args = ap.parse_args(argv)
+    try:
+        with open(args.path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"row_model: cannot read {args.path}: {e}", file=sys.stderr)
+        return 1
+    rows = doc.get("rows", []) if isinstance(doc, dict) else []
+    if args.verify:
+        bad = verify_rows(rows)
+        if bad:
+            for r in bad[:10]:
+                print(
+                    f"row_model MISMATCH: {r.get('bench')}/{r.get('backend')} "
+                    f"p={r.get('p')} committed {r.get('model_us')} != "
+                    f"recomputed {r['recomputed_model_us']}",
+                    file=sys.stderr,
+                )
+            print(f"row_model FAIL: {len(bad)} mismatching rows", file=sys.stderr)
+            return 1
+        print("row_model verify OK: recomputed model_us matches committed rows")
+    fits = fit_calibration(rows)
+    for dev, fit in sorted(fits.items()):
+        p = fit["pooled"]
+        print(
+            f"row_model fit[{dev}]: pooled alpha={p.alpha_s * 1e6:.1f}us "
+            f"beta={p.beta_bytes_s / 1e9:.2f}GB/s ({fit['rows']} rows; "
+            f"classes: {', '.join(fit['backends']) or 'none'})"
+        )
+    if args.write_wisdom:
+        if not fits:
+            print("row_model: nothing fittable; wisdom not written", file=sys.stderr)
+            return 1
+        record_fits(fits)
+        planner.export_wisdom(args.write_wisdom)
+        print(f"row_model: wrote calibration for {sorted(fits)} -> {args.write_wisdom}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,8 +18,10 @@ Run: PYTHONPATH=src python -m benchmarks.run
 
 ``--explain`` first prints each representative plan's stage schedule
 (``Plan.describe()``: the declarative pipeline IR with per-stage model
-microseconds and wire bytes); ``--explain --only ''`` prints only the
-schedules and times nothing.
+microseconds and wire bytes) followed by its decision provenance
+(``Plan.why_text()``: which channel picked the backend, over which
+timing table, under which calibration constants); ``--explain --only
+''`` prints only the schedules and times nothing.
 
 ``--json PATH`` additionally writes the fft_measure + pencil_sweep +
 real_sweep + overlap rows (measured + model-predicted per backend / per
@@ -64,6 +66,20 @@ def main() -> None:
         action="store_true",
         help="with --json: overwrite PATH instead of merging this run's "
         "sections into its existing rows",
+    )
+    ap.add_argument(
+        "--history",
+        default=None,
+        metavar="PATH",
+        help="with --json: the benchmark history ledger to append this "
+        "run's snapshot to (default: BENCH_history.jsonl next to the "
+        "--json file); see benchmarks/regress.py",
+    )
+    ap.add_argument(
+        "--no-history",
+        action="store_true",
+        help="with --json: do not append a snapshot to the history ledger "
+        "(CI's slow job appends AFTER re-scoring stamps fresh meta)",
     )
     ap.add_argument(
         "--trace",
@@ -150,9 +166,8 @@ def main() -> None:
         _flush(rows)
     if args.json:
         merged, meta = _merge_json(args.json, jrows, force=args.force)
-        doc = {"schema": BENCH_SCHEMA, "rows": merged}
-        if meta:
-            doc = {"schema": BENCH_SCHEMA, "meta": meta, "rows": merged}
+        meta = _stamp_meta(meta, merged)
+        doc = {"schema": BENCH_SCHEMA, "meta": meta, "rows": merged}
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(
@@ -160,6 +175,19 @@ def main() -> None:
             f"({len(jrows)} from this run)",
             file=sys.stderr,
         )
+        if not args.no_history:
+            from repro.obs import history as obs_history
+
+            hpath = args.history or os.path.join(
+                os.path.dirname(os.path.abspath(args.json)), "BENCH_history.jsonl"
+            )
+            snap = obs_history.snapshot_from_bench(doc)
+            obs_history.append_snapshot(hpath, snap)
+            print(
+                f"# appended snapshot ({len(snap['metrics'])} metrics, "
+                f"commit {snap['commit']}) -> {hpath}",
+                file=sys.stderr,
+            )
     if "moe" in wanted:
         from benchmarks import moe_dispatch
 
@@ -177,6 +205,45 @@ def _section(rec, name: str):
     if rec is None:
         return contextlib.nullcontext()
     return rec.span(f"section:{name}", cat="section")
+
+
+def _stamp_meta(meta: dict, rows, *, commit=None, now=None) -> dict:
+    """Inject run provenance into the baseline's meta section: the git
+    ``commit`` this tree is at, the rows' ``device_kind``, and an ISO
+    UTC ``timestamp``. Injected at the harness level -- never read
+    inside jitted code -- and re-stamped on every ``--json`` write, so a
+    merge carries the freshest run's identity while older meta fields
+    (planner scores etc.) survive untouched. ``commit``/``now`` are
+    injectable for tests."""
+    import datetime
+    import subprocess
+
+    if commit is None:
+        try:
+            out = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True,
+                text=True,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                timeout=10,
+            )
+            commit = out.stdout.strip() if out.returncode == 0 else ""
+        except (OSError, subprocess.SubprocessError):
+            commit = ""
+    devs = sorted(
+        {
+            r["device_kind"]
+            for r in rows
+            if isinstance(r, dict) and isinstance(r.get("device_kind"), str)
+        }
+    )
+    meta = dict(meta)
+    meta["commit"] = commit or "unknown"
+    meta["device_kind"] = "+".join(devs) if devs else meta.get("device_kind", "unknown")
+    if now is None:
+        now = datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds")
+    meta["timestamp"] = now
+    return meta
 
 
 def _merge_json(path: str, new_rows, *, force: bool = False):

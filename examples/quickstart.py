@@ -59,6 +59,12 @@ def main():
     print(f"  auto -> {plan.backend!r}  (model ranking: "
           + ", ".join(f"{k}={v*1e6:.1f}us" for k, v in ranking) + ")")
 
+    # decision provenance: every plan can explain WHY its backend won --
+    # which channel decided (pinned / model-argmin / measured-race /
+    # wisdom-hit / observed-overlay), over which timing table, under
+    # which calibration constants (run.py --explain dumps the same)
+    print("  " + plan.why_text().replace("\n", "\n  "))
+
     # planner="measure": FFTW_MEASURE -- time every backend on THIS mesh,
     # pick the measured argmin, remember it as wisdom
     measured = plan_fft((n, n), mesh, planner="measure")

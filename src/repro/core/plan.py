@@ -238,6 +238,15 @@ class Plan:
         self.local_impl = local_impl
         self.fuse_dft = fuse_dft
         self.transpose_back = transpose_back
+        if params is None:
+            # default-on persisted calibration: when this fabric's
+            # alpha/beta have been fitted (CommParams.calibrate via
+            # planner.ensure_calibrated, refine_online, or an imported
+            # wisdom file's calibration section), every default-params
+            # plan prices with the measured constants
+            from repro.core import planner as _planner
+
+            params = _planner.calibration_for(_planner.device_kind(mesh))
         self.params = params or cm.CommParams()
         self.chunk_compute_s = chunk_compute_s
         self.pipeline = "auto" if (pipeline is True or pipeline is None) else pipeline
@@ -248,6 +257,12 @@ class Plan:
         self.planner = "estimate"
         self.measured: Optional[Dict[str, float]] = None
         self.wisdom_hit = False
+        self.wisdom_key: Optional[str] = None
+        #: decision provenance: which channel picked this plan's backend
+        #: -- "pinned" (caller named it), "model-argmin" (alpha-beta
+        #: auto), or -- overwritten by plan_measured -- "measured-race" /
+        #: "wisdom-hit" / "observed-overlay". Rendered by :meth:`why`.
+        self.selection_channel = "pinned"
         #: direction -> lowered stage schedule (the single pipeline truth
         #: that execution, the cost model and the byte accounting share);
         #: cleared whenever the decomposition/backends are (re)resolved
@@ -409,6 +424,7 @@ class Plan:
                 f"(per-axis pairs are decomp='pencil')"
             )
         if backend == "auto":
+            self.selection_channel = "model-argmin"
             backend = "scatter" if self.fuse_dft else backends.cheapest(
                 self._cost_bytes(), p, self.params,
                 chunk_compute_s=self._auto_chunk_compute_s(),
@@ -467,6 +483,7 @@ class Plan:
             )
 
         if backend == "auto":
+            self.selection_channel = "model-argmin"
             br, bc = backends.cheapest_pair(
                 self._cost_bytes(),
                 self.grid.p_rows,
@@ -803,6 +820,77 @@ class Plan:
             real_itemsize=r_item,
             complex_itemsize=c_item,
         )
+
+    def why(self) -> dict:
+        """Decision provenance: *why this backend won* -- the selection
+        channel (``pinned`` / ``model-argmin`` / ``measured-race`` /
+        ``wisdom-hit`` / ``observed-overlay``), the timing table the
+        decision argmin'd over (measured seconds for a measured plan,
+        alpha-beta model seconds otherwise), the wisdom key consulted,
+        and the calibration constants in force (with whether they are
+        fitted fabric constants or the module defaults). Rendered by
+        :meth:`why_text`; dumped by ``benchmarks/run.py --explain``;
+        aggregated as gauges in serve ``metrics()``."""
+        from repro.core import planner as _planner
+
+        if self.planner == "measure" and self.measured:
+            timings = {
+                k: float(v)
+                for k, v in self.measured.items()
+                if isinstance(v, (int, float))
+            }
+            timings_kind = "measured"
+        else:
+            timings = {k: float(v) for k, v in self.predict().items()}
+            timings_kind = "model"
+        argmin = min(sorted(timings), key=timings.__getitem__) if timings else None
+        dev = _planner.device_kind(self.mesh)
+        cell = _planner.calibration_cell(dev)
+        return {
+            "channel": self.selection_channel,
+            "backend": self.backend,
+            "decomp": self.decomp,
+            "planner": self.planner,
+            "fused": self.fused,
+            "n_chunks": self.n_chunks,
+            "timings_kind": timings_kind,
+            "timings": timings,
+            "argmin": argmin,
+            "wisdom_key": self.wisdom_key,
+            "wisdom_hit": self.wisdom_hit,
+            "calibration": {
+                "device_kind": dev,
+                "alpha_s": float(self.params.alpha_s),
+                "beta_bytes_s": float(self.params.beta_bytes_s),
+                "source": (cell or {}).get("source", "default"),
+                "calibrated": cell is not None,
+            },
+        }
+
+    def why_text(self) -> str:
+        """One-paragraph rendering of :meth:`why` (the ``--explain``
+        format): channel, winner, the top of the timing table, and the
+        calibration constants in force."""
+        w = self.why()
+        cal = w["calibration"]
+        unit = 1e6  # report microseconds either way
+        table = sorted(w["timings"].items(), key=lambda kv: kv[1])
+        shown = ", ".join(f"{k}={v * unit:.1f}us" for k, v in table[:4])
+        if len(table) > 4:
+            shown += f", ... ({len(table) - 4} more)"
+        lines = [
+            f"why: backend={w['backend']} via {w['channel']} "
+            f"(decomp={w['decomp']}, planner={w['planner']})",
+            f"  {w['timings_kind']} table argmin={w['argmin']}: {shown}"
+            if table
+            else "  (no timing table)",
+            f"  calibration[{cal['device_kind']}]: alpha={cal['alpha_s'] * 1e6:.2f}us "
+            f"beta={cal['beta_bytes_s'] / 1e9:.1f}GB/s "
+            f"({cal['source'] if cal['calibrated'] else 'default'})",
+        ]
+        if w["wisdom_key"]:
+            lines.append(f"  wisdom_key: {w['wisdom_key']}")
+        return "\n".join(lines)
 
     def profile(
         self,

@@ -220,8 +220,16 @@ def export_wisdom(path: Optional[str] = None, *, merge: bool = True) -> str:
     :func:`merge_wisdom_entry` -- so two concurrent writers (a serving
     pool exporting its warm pool, a benchmark run exporting its sweep)
     interleave instead of clobbering each other's entries.
-    ``merge=False`` writes exactly this process's wisdom."""
+    ``merge=False`` writes exactly this process's wisdom.
+
+    The output carries a top-level ``calibration`` section alongside
+    ``entries``: the per-device-kind fabric constants from the
+    calibration store, merged against the file's the same way (count-
+    weighted, :func:`record_calibration`'s contract) -- so one wisdom
+    file ships both *which backend won* and *the alpha/beta it won
+    under*."""
     entries: Dict[str, dict] = dict(_WISDOM)
+    calibration: Dict[str, dict] = {k: dict(c) for k, c in _CALIBRATION.items()}
     if path is not None and merge and os.path.exists(path):
         try:
             with open(path) as f:
@@ -236,9 +244,17 @@ def export_wisdom(path: Optional[str] = None, *, merge: bool = True) -> str:
                         entries[key] = merge_wisdom_entry(entry, entries[key])
                     else:
                         entries[key] = entry
-    text = json.dumps(
-        {"version": WISDOM_VERSION, "entries": entries}, indent=2, sort_keys=True
-    )
+            disk_cal = data.get("calibration")
+            if isinstance(disk_cal, dict):
+                for dev, cell in disk_cal.items():
+                    if dev in calibration:
+                        calibration[dev] = _merge_calibration_cell(cell, calibration[dev])
+                    elif _valid_calibration_cell(cell):
+                        calibration[dev] = cell
+    doc = {"version": WISDOM_VERSION, "entries": entries}
+    if calibration:
+        doc["calibration"] = calibration
+    text = json.dumps(doc, indent=2, sort_keys=True)
     if path is not None:
         _atomic_write(path, text)
     return text
@@ -261,6 +277,13 @@ def import_wisdom(source: str) -> int:
     data = json.loads(text)
     if not isinstance(data, dict) or data.get("version") != WISDOM_VERSION:
         return 0
+    calibration = data.get("calibration")
+    if isinstance(calibration, dict):
+        # the calibration section merges even when the entry table is
+        # empty/absent -- a calibration-only wisdom file is valid
+        for dev, cell in calibration.items():
+            if _valid_calibration_cell(cell):
+                _CALIBRATION[dev] = _merge_calibration_cell(_CALIBRATION.get(dev), cell)
     entries = data.get("entries")
     if not isinstance(entries, dict):
         return 0
@@ -380,6 +403,240 @@ def forget_wisdom() -> None:
 
 def wisdom_size() -> int:
     return len(_WISDOM)
+
+
+def wisdom_report(*, stale_ratio: float = 2.0) -> List[dict]:
+    """Decision-health report over the in-process wisdom store: one row
+    per entry with the per-candidate drift of the *observed* channel
+    (production executions folded in by :func:`record_observed` /
+    ``Plan.profile``) against the plan-time race median. An entry whose
+    observed mean drifts more than ``stale_ratio`` x (either way) from
+    its race time is flagged ``stale`` -- the fabric has moved since the
+    race and the plan deserves re-measuring. Fleet operators read this;
+    serve ``metrics()`` exports the stale count as a gauge."""
+    rows = []
+    for key, entry in wisdom_items():
+        if not isinstance(entry, dict):
+            continue
+        timings = entry.get("timings")
+        timings = timings if isinstance(timings, dict) else {}
+        obs = entry.get("observed")
+        obs = obs if isinstance(obs, dict) else {}
+        drifts: Dict[str, float] = {}
+        observed_n = 0
+        for name, cell in obs.items():
+            if not _valid_observed_cell(cell):
+                continue
+            observed_n += int(cell["n"])
+            race = timings.get(name)
+            if isinstance(race, (int, float)) and race > 0:
+                drifts[name] = float(cell["s"]) / float(race)
+        stale = any(d > stale_ratio or d < 1.0 / stale_ratio for d in drifts.values())
+        rows.append(
+            {
+                "key": key,
+                "backend": entry.get("backend"),
+                "candidates": len(timings),
+                "observed_n": observed_n,
+                "drifts": drifts,
+                "max_drift": max(drifts.values()) if drifts else None,
+                "stale": stale,
+            }
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Calibration store (persisted per-fabric alpha/beta, default-on)
+# ---------------------------------------------------------------------------
+
+#: device_kind -> {"alpha_s", "beta_bytes_s", "n", "source", "backends"?}
+#: -- the fitted fabric constants every default-params Plan prices with.
+_CALIBRATION: Dict[str, dict] = {}
+
+#: Module override for the auto-calibrate switch; None = consult the
+#: ``REPRO_AUTO_CALIBRATE`` env var (default on).
+_AUTO_CALIBRATE: Optional[bool] = None
+
+#: Device kinds whose auto-calibration already failed this process --
+#: retrying on every plan would turn one broken sweep into a tax.
+_AUTO_CALIBRATE_FAILED: set = set()
+
+
+def auto_calibrate_enabled() -> bool:
+    """Whether ``plan_measured`` may run the ppermute calibration sweep
+    on a fresh race. Default on; ``REPRO_AUTO_CALIBRATE=0`` (the test
+    suite sets it -- subprocesses inherit) or
+    :func:`set_auto_calibrate` ``(False)`` disables."""
+    if _AUTO_CALIBRATE is not None:
+        return _AUTO_CALIBRATE
+    return os.environ.get("REPRO_AUTO_CALIBRATE", "1") != "0"
+
+
+def set_auto_calibrate(enabled: Optional[bool]) -> None:
+    """Override the auto-calibrate switch (None = back to the env var)."""
+    global _AUTO_CALIBRATE
+    _AUTO_CALIBRATE = enabled
+
+
+def _valid_calibration_cell(cell) -> bool:
+    return (
+        isinstance(cell, dict)
+        and isinstance(cell.get("alpha_s"), (int, float))
+        and cell["alpha_s"] >= 0
+        and isinstance(cell.get("beta_bytes_s"), (int, float))
+        and cell["beta_bytes_s"] > 0
+    )
+
+
+def _merge_calibration_cell(old, new) -> dict:
+    """Count-weighted merge of two calibration cells for one device
+    kind (``merge_wisdom_entry``'s contract: malformed sides lose
+    outright, the merge never raises). Per-backend sub-cells union the
+    same way."""
+    if not _valid_calibration_cell(new):
+        return old if _valid_calibration_cell(old) else new
+    if not _valid_calibration_cell(old):
+        return new
+    n_old = old.get("n") if isinstance(old.get("n"), (int, float)) and old.get("n", 0) > 0 else 1
+    n_new = new.get("n") if isinstance(new.get("n"), (int, float)) and new.get("n", 0) > 0 else 1
+    n = n_old + n_new
+    merged = dict(new)
+    merged["alpha_s"] = (old["alpha_s"] * n_old + new["alpha_s"] * n_new) / n
+    merged["beta_bytes_s"] = (old["beta_bytes_s"] * n_old + new["beta_bytes_s"] * n_new) / n
+    merged["n"] = n
+    backends = {}
+    for side in (old.get("backends"), new.get("backends")):
+        if not isinstance(side, dict):
+            continue
+        for name, sub in side.items():
+            backends[name] = _merge_calibration_cell(backends.get(name), sub)
+    if backends:
+        merged["backends"] = backends
+    return merged
+
+
+def record_calibration(
+    dev_kind: str,
+    params,
+    *,
+    source: str = "calibrate",
+    n: int = 1,
+    backends: Optional[Dict[str, object]] = None,
+) -> dict:
+    """Fold fitted fabric constants into the in-process calibration
+    store (count-weighted against what is already known, exactly like
+    the wisdom observed channel). ``params`` is a
+    :class:`repro.core.comm_model.CommParams`; ``backends`` optionally
+    maps backend names to their own fitted CommParams (the per-backend-
+    class fingerprint ``benchmarks/planner_score.py`` stamps into meta).
+    Returns the merged cell."""
+    cell = {
+        "alpha_s": float(params.alpha_s),
+        "beta_bytes_s": float(params.beta_bytes_s),
+        "n": int(n),
+        "source": source,
+    }
+    if backends:
+        cell["backends"] = {
+            name: {
+                "alpha_s": float(p.alpha_s),
+                "beta_bytes_s": float(p.beta_bytes_s),
+                "n": int(n),
+            }
+            for name, p in backends.items()
+        }
+    merged = _merge_calibration_cell(_CALIBRATION.get(dev_kind), cell)
+    _CALIBRATION[dev_kind] = merged
+    return merged
+
+
+def calibration_cell(dev_kind: str) -> Optional[dict]:
+    """The raw stored cell for a device kind (None when uncalibrated)."""
+    cell = _CALIBRATION.get(dev_kind)
+    return cell if _valid_calibration_cell(cell) else None
+
+
+def calibration_for(dev_kind: str, backend: Optional[str] = None):
+    """Fabric constants for a device kind as a ``CommParams`` (None when
+    uncalibrated -- callers fall back to the module defaults). With
+    ``backend``, the per-backend-class fit when one is stored, else the
+    pooled fit."""
+    cell = calibration_cell(dev_kind)
+    if cell is None:
+        return None
+    from repro.core import comm_model as cm
+
+    if backend is not None:
+        sub = (cell.get("backends") or {}).get(backend)
+        if _valid_calibration_cell(sub):
+            return cm.CommParams(
+                alpha_s=float(sub["alpha_s"]), beta_bytes_s=float(sub["beta_bytes_s"])
+            )
+    return cm.CommParams(
+        alpha_s=float(cell["alpha_s"]), beta_bytes_s=float(cell["beta_bytes_s"])
+    )
+
+
+def calibration_items():
+    """Snapshot of the calibration store as (device_kind, cell) pairs."""
+    return list(_CALIBRATION.items())
+
+
+def forget_calibration() -> None:
+    """Drop all stored fabric constants (tests; paired with
+    :func:`forget_wisdom`)."""
+    _CALIBRATION.clear()
+    _AUTO_CALIBRATE_FAILED.clear()
+
+
+def ensure_calibrated(
+    mesh,
+    axis_name: Optional[str] = None,
+    *,
+    timer: Optional[Callable] = None,
+    sizes=None,
+    force: bool = False,
+):
+    """Run :meth:`CommParams.calibrate` once per device kind and record
+    the fit in the calibration store -- the default-on path
+    ``plan_measured`` takes on a fresh race, and the API a host calls
+    explicitly at startup. Already-calibrated device kinds return the
+    stored constants without re-measuring (``force=True`` re-sweeps).
+    ``timer(m_bytes) -> seconds`` injects a synthetic sweep (tests)."""
+    from repro.core import comm_model as cm
+
+    dev = device_kind(mesh)
+    if not force:
+        known = calibration_for(dev)
+        if known is not None:
+            return known
+    kwargs = {} if sizes is None else {"sizes": sizes}
+    params = cm.CommParams.calibrate(mesh, axis_name, timer=timer, **kwargs)
+    record_calibration(dev, params, source="calibrate")
+    return params
+
+
+def _auto_calibrate(mesh) -> None:
+    """Best-effort once-per-device-kind calibration on the fresh-race
+    path. A failed sweep (exotic mesh, collective error) warns once and
+    disables itself for that device kind -- planning must never break
+    because calibration did."""
+    dev = device_kind(mesh)
+    if dev in _CALIBRATION or dev in _AUTO_CALIBRATE_FAILED:
+        return
+    try:
+        ensure_calibrated(mesh)
+    except Exception as e:  # noqa: BLE001 - advisory, never fatal
+        import warnings
+
+        _AUTO_CALIBRATE_FAILED.add(dev)
+        warnings.warn(
+            f"auto-calibration failed on {dev!r} ({e}); planning continues "
+            f"with default CommParams (set REPRO_AUTO_CALIBRATE=0 to silence)",
+            RuntimeWarning,
+            stacklevel=3,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -658,11 +915,33 @@ def plan_measured(
             plan.measured = dict(timings)
             plan.wisdom_hit = True
             plan.wisdom_key = key
+            # provenance: did the observed channel (production
+            # executions) overrule the plan-time race argmin?
+            raw = {
+                k: float(v) for k, v in timings.items() if isinstance(v, (int, float))
+            }
+            race_best = min(sorted(raw), key=raw.__getitem__) if raw else None
+            obs = entry.get("observed")
+            observed = isinstance(obs, dict) and any(
+                _valid_observed_cell(c) for c in obs.values()
+            )
+            plan.selection_channel = (
+                "observed-overlay" if observed and best != race_best else "wisdom-hit"
+            )
             return plan
         # wisdom is advisory: a malformed/stale entry (e.g. a hand-edited
         # or foreign wisdom file, or one without usable timings) is
         # dropped and we re-measure
         _WISDOM.pop(key, None)
+
+    # fresh race on the real fabric: fit this device kind's alpha/beta
+    # first (once per process; REPRO_AUTO_CALIBRATE=0 disables), so the
+    # candidate plans built below -- and every model_us column derived
+    # from them -- price with measured constants, not the v5e defaults.
+    # An injected timer means no real fabric is being measured, so there
+    # is nothing to calibrate against.
+    if timer is None and auto_calibrate_enabled():
+        _auto_calibrate(mesh)
 
     timer = timer or default_timer(warmup=warmup, iters=iters)
     plans: Dict[str, Plan] = {}
@@ -682,4 +961,5 @@ def plan_measured(
     plan.measured = timings
     plan.wisdom_hit = False
     plan.wisdom_key = key
+    plan.selection_channel = "measured-race"
     return plan

@@ -1,3 +1,17 @@
+from repro.obs.history import (
+    append_snapshot,
+    detect_regressions,
+    read_history,
+    snapshot_from_bench,
+)
 from repro.obs.trace import Span, TraceRecorder, merge_traces
 
-__all__ = ["Span", "TraceRecorder", "merge_traces"]
+__all__ = [
+    "Span",
+    "TraceRecorder",
+    "merge_traces",
+    "snapshot_from_bench",
+    "append_snapshot",
+    "read_history",
+    "detect_regressions",
+]

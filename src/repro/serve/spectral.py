@@ -152,6 +152,10 @@ class PlanPool:
         self.evictions = 0
         self.plan_seconds = 0.0  # time spent planning on the request path
         self.warm_seconds = 0.0  # time spent planning/compiling at warm start
+        #: decision provenance tally: Plan.selection_channel -> count of
+        #: plans that entered the pool via that channel (pinned /
+        #: model-argmin / measured-race / wisdom-hit / observed-overlay)
+        self.channels: Dict[str, int] = {}
 
     # -- identity ---------------------------------------------------------
     def shards(self) -> int:
@@ -197,6 +201,8 @@ class PlanPool:
         self._plans[key] = plan
         self._plans.move_to_end(key)
         self._schedule_hashes[key] = plan.schedule_hash()
+        ch = getattr(plan, "selection_channel", "pinned")
+        self.channels[ch] = self.channels.get(ch, 0) + 1
         while len(self._plans) > self.capacity:
             evicted, _ = self._plans.popitem(last=False)
             self._schedule_hashes.pop(evicted, None)
@@ -313,6 +319,7 @@ class PlanPool:
             "evictions": self.evictions,
             "plan_seconds": self.plan_seconds,
             "warm_seconds": self.warm_seconds,
+            "channels": dict(self.channels),
         }
 
 
@@ -690,7 +697,11 @@ class SpectralEngine:
         live queue depth, request/batch counters, latency and queue-wait
         percentiles, per-dispatch-stage p50s, plan-pool hit/miss/eviction
         counters, and the dispatch straggler telemetry. Culprit
-        attribution rides ``dispatch_culprit_<stage>`` counters."""
+        attribution rides ``dispatch_culprit_<stage>`` counters; planner
+        decision provenance rides ``plan_channel_<channel>`` counters
+        (how many pooled plans each selection channel produced) plus a
+        ``wisdom_stale`` gauge (entries whose observed timings drifted
+        from their recorded race)."""
         pool = self.pool.stats()
         lat = self.latency.percentiles((50, 99))
         wait = self.queue_wait.percentiles((50, 99))
@@ -716,4 +727,9 @@ class SpectralEngine:
             out[f"dispatch_{name}_p50_s"] = w.percentiles((50,))["p50"]
         for name, count in report["culprits"].items():
             out[f"dispatch_culprit_{name}"] = count
+        for name, count in sorted(pool["channels"].items()):
+            out[f"plan_channel_{name.replace('-', '_')}"] = count
+        out["wisdom_stale"] = sum(
+            1 for row in _planner.wisdom_report() if row["stale"]
+        )
         return out

@@ -83,6 +83,15 @@ except ImportError:
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# The measured planner auto-runs a ppermute calibration sweep once per
+# device kind on a fresh race (default-on in production). Under test it
+# would add real-fabric timing noise to every measure-planner test and
+# couple test outcomes to suite order, so the suite pins it off --
+# subprocesses spawned by run_subprocess inherit the env and stay
+# deterministic too. Calibration-specific tests inject timers or call
+# planner.ensure_calibrated explicitly.
+os.environ.setdefault("REPRO_AUTO_CALIBRATE", "0")
+
 
 def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600) -> str:
     """Run a python snippet with N host-platform devices; returns stdout.

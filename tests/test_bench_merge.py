@@ -2,7 +2,8 @@
 its sections into an existing BENCH_fft.json instead of clobbering the
 committed multi-section baseline (and --force must overwrite). The
 top-level ``meta`` section (planner-accuracy score) must survive row
-merges untouched."""
+merges untouched, and every write re-stamps the run-provenance fields
+(commit / device_kind / timestamp) the history ledger snapshots."""
 
 import json
 import sys
@@ -12,7 +13,7 @@ from conftest import REPO
 if REPO not in sys.path:
     sys.path.insert(0, REPO)
 
-from benchmarks.run import _merge_json  # noqa: E402
+from benchmarks.run import _merge_json, _stamp_meta  # noqa: E402
 
 
 def _write(path, rows, meta=None):
@@ -121,6 +122,59 @@ def test_meta_survives_row_merge(tmp_path):
     merged, meta = _merge_json(str(path), [{"bench": "fft2", "p": 8, "measured_us": 2.0}])
     assert meta == score
     assert merged == [{"bench": "fft2", "p": 8, "measured_us": 2.0}]
+
+
+def test_stamp_meta_injects_provenance_and_keeps_scores():
+    rows = [
+        {"bench": "fft2", "p": 8, "device_kind": "cpu"},
+        {"bench": "real", "p": 4, "device_kind": "cpu"},
+    ]
+    meta = {"planner_score": {"groups": 14}}
+    out = _stamp_meta(meta, rows, commit="abc1234", now="2026-08-08T00:00:00+00:00")
+    assert out["commit"] == "abc1234"
+    assert out["device_kind"] == "cpu"
+    assert out["timestamp"] == "2026-08-08T00:00:00+00:00"
+    assert out["planner_score"] == {"groups": 14}  # older meta survives
+    assert "commit" not in meta  # input not mutated
+
+
+def test_stamp_meta_device_kind_union_and_fallback():
+    rows = [
+        {"bench": "fft2", "device_kind": "tpu"},
+        {"bench": "fft2", "device_kind": "cpu"},
+        {"bench": "overlap"},  # rows without device_kind don't crash it
+    ]
+    out = _stamp_meta({}, rows, commit="c", now="t")
+    assert out["device_kind"] == "cpu+tpu"
+    # no rows carry a kind: the previous stamp survives, else "unknown"
+    assert _stamp_meta({"device_kind": "gpu"}, [], commit="c", now="t")["device_kind"] == "gpu"
+    assert _stamp_meta({}, [], commit="c", now="t")["device_kind"] == "unknown"
+
+
+def test_stamp_meta_roundtrips_through_merge(tmp_path):
+    """The full --json write cycle: stamp, write, merge a later partial
+    run, re-stamp -- scores survive, provenance reflects the new run."""
+    path = tmp_path / "BENCH_fft.json"
+    rows = [{"bench": "fft2", "p": 8, "measured_us": 1.0, "device_kind": "cpu"}]
+    meta = _stamp_meta(
+        {"planner_score": {"groups": 1}}, rows, commit="old1234", now="2026-01-01T00:00:00+00:00"
+    )
+    _write(path, rows, meta=meta)
+    new = [{"bench": "fft2", "p": 8, "measured_us": 2.0, "device_kind": "cpu"}]
+    merged, meta2 = _merge_json(str(path), new)
+    meta2 = _stamp_meta(meta2, merged, commit="new5678", now="2026-02-02T00:00:00+00:00")
+    assert meta2["commit"] == "new5678"
+    assert meta2["timestamp"] == "2026-02-02T00:00:00+00:00"
+    assert meta2["planner_score"] == {"groups": 1}
+    assert merged == new
+
+
+def test_stamp_meta_real_git_fallbacks():
+    """Without injected commit/now the stamp must still produce strings
+    (a short hash or 'unknown'; an ISO timestamp) -- never raise."""
+    out = _stamp_meta({}, [{"bench": "fft2", "device_kind": "cpu"}])
+    assert isinstance(out["commit"], str) and out["commit"]
+    assert "T" in out["timestamp"]
 
 
 def test_malformed_meta_dropped_not_crashed(tmp_path):

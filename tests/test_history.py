@@ -1,0 +1,441 @@
+"""Perf observatory: history ledger + noise-aware regression gates
+(:mod:`repro.obs.history`, ``benchmarks/regress.py``), persisted
+calibration (planner calibration store, wisdom round-trip), and planner
+decision provenance (``Plan.why()`` / ``selection_channel``)."""
+
+import json
+import sys
+
+import pytest
+
+from conftest import REPO
+
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from repro.core import CommParams, plan_fft, planner  # noqa: E402
+from repro.core.compat import make_mesh_1d  # noqa: E402
+from repro.obs import history as h  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stores():
+    planner.forget_wisdom()
+    planner.forget_calibration()
+    yield
+    planner.forget_wisdom()
+    planner.forget_calibration()
+
+
+def _fake_timer(table):
+    return lambda plan: table[plan.backend]
+
+
+def _snap(metrics, commit="c0", ts="2026-01-01T00:00:00+00:00"):
+    return {
+        "schema": h.HISTORY_SCHEMA,
+        "commit": commit,
+        "device_kind": "cpu",
+        "timestamp": ts,
+        "sections": {},
+        "metrics": dict(metrics),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Snapshot keys / ledger IO
+# ---------------------------------------------------------------------------
+
+
+def test_row_metrics_keys_are_stable_per_section():
+    fft = {"bench": "fft2", "n": 256, "p": 8, "backend": "scatter@f4",
+           "measured_us": 12.5}
+    assert h.row_metrics(fft) == [("fft2|n256,p8,scatter@f4|measured_us", 12.5)]
+    pencil = {"bench": "fft3_decomp", "n": 64, "p": 8, "decomp": "pencil",
+              "grid": "4x2", "backend": "alltoall+scatter", "measured_us": 3.0}
+    (key, _), = h.row_metrics(pencil)
+    assert key == "fft3_decomp|n64,p8,pencil,4x2,alltoall+scatter|measured_us"
+    serve = {"bench": "serve", "row": "load_sweep", "n": 128, "p": 8,
+             "op": "fft2", "coalesce": True, "load": 16,
+             "p50_us": 10.0, "p99_us": 20.0, "tps": 500.0}
+    keys = dict(h.row_metrics(serve))
+    assert set(keys) == {
+        "serve|load_sweep,n128,p8,fft2,coalesce=1,load16|p50_us",
+        "serve|load_sweep,n128,p8,fft2,coalesce=1,load16|p99_us",
+        "serve|load_sweep,n128,p8,fft2,coalesce=1,load16|tps",
+    }
+    # split_key inverts the format even with '|'-free configs
+    for key in keys:
+        section, config, metric = h.split_key(key)
+        assert f"{section}|{config}|{metric}" == key
+
+
+def test_untracked_rows_contribute_nothing():
+    assert h.row_metrics({"bench": "moe", "measured_us": 1.0}) == []
+    assert h.row_metrics({"bench": "fft2", "n": 1, "p": 1}) == []  # no value
+    assert h.row_metrics("not a dict") == []
+
+
+def test_snapshot_from_bench_prefers_meta_then_overrides():
+    doc = {
+        "schema": 2,
+        "meta": {"commit": "abc", "device_kind": "cpu",
+                 "timestamp": "t0", "planner_score": {"groups": 14}},
+        "rows": [
+            {"bench": "fft2", "n": 32, "p": 2, "backend": "scatter",
+             "measured_us": 5.0},
+            {"bench": "fft2", "n": 32, "p": 2, "backend": "alltoall",
+             "measured_us": 4.0},
+        ],
+    }
+    snap = h.snapshot_from_bench(doc)
+    assert (snap["commit"], snap["device_kind"], snap["timestamp"]) == (
+        "abc", "cpu", "t0")
+    assert snap["planner_score"] == {"groups": 14}
+    assert snap["sections"] == {"fft2": 2}
+    assert len(snap["metrics"]) == 2
+    over = h.snapshot_from_bench(doc, commit="xyz", timestamp="t1")
+    assert (over["commit"], over["timestamp"]) == ("xyz", "t1")
+    bare = h.snapshot_from_bench({"rows": []})
+    assert bare["commit"] == "unknown" and bare["metrics"] == {}
+
+
+def test_ledger_roundtrip_skips_malformed_lines(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    assert h.read_history(path) == []  # missing file = empty history
+    h.append_snapshot(path, _snap({"a|b|measured_us": 1.0}))
+    with open(path, "a") as f:
+        f.write("{corrupt\n")
+        f.write('"not a dict"\n')
+        f.write("\n")
+    h.append_snapshot(path, _snap({"a|b|measured_us": 2.0}, commit="c1"))
+    hist = h.read_history(path)
+    assert [s["commit"] for s in hist] == ["c0", "c1"]
+    assert h.history_values(hist, "a|b|measured_us") == [1.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# Noise-aware detection
+# ---------------------------------------------------------------------------
+
+KEY = "fft2|n256,p8,scatter|measured_us"
+
+
+def _history_of(values):
+    return [_snap({KEY: v}, commit=f"c{i}") for i, v in enumerate(values)]
+
+
+def test_detector_flags_2x_slowdown_but_not_mad_jitter():
+    # synthetic noisy trajectory around 100us (+-3% jitter)
+    base = [100.0, 103.0, 97.0, 101.0, 99.0, 102.0, 98.0, 100.0]
+    hist = _history_of(base)
+    bad = h.detect_regressions(hist, _snap({KEY: 200.0}))
+    assert len(bad) == 1
+    f = bad[0]
+    assert (f["section"], f["config"], f["metric"]) == (
+        "fft2", "n256,p8,scatter", "measured_us")
+    assert f["ratio"] == pytest.approx(2.0, rel=0.05)
+    # jitter at the trajectory's own MAD scale stays quiet
+    assert h.detect_regressions(hist, _snap({KEY: 104.0})) == []
+    # ...and a speedup never trips a time-like gate
+    assert h.detect_regressions(hist, _snap({KEY: 50.0})) == []
+
+
+def test_detector_needs_both_sigma_band_and_relative_floor():
+    # near-zero MAD history: the min_ratio floor is what guards against
+    # flagging a 1.2x wobble that is statistically "many sigmas"
+    hist = _history_of([100.0] * 8)
+    assert h.detect_regressions(hist, _snap({KEY: 120.0})) == []
+    assert h.detect_regressions(hist, _snap({KEY: 151.0}))
+    # wildly noisy history: the sigma band dominates the 1.5x floor
+    noisy = _history_of([100.0, 300.0, 80.0, 250.0, 90.0, 280.0, 110.0, 260.0])
+    assert h.detect_regressions(noisy, _snap({KEY: 300.0})) == []
+
+
+def test_detector_min_snapshots_guard():
+    hist = _history_of([100.0, 100.0])  # below the default guard of 3
+    assert h.detect_regressions(hist, _snap({KEY: 1000.0})) == []
+    hist = _history_of([100.0, 100.0, 100.0])
+    assert h.detect_regressions(hist, _snap({KEY: 1000.0}))
+    # explicit guard wins
+    assert h.detect_regressions(hist, _snap({KEY: 1000.0}), min_snapshots=4) == []
+
+
+def test_detector_throughput_direction_mirrors():
+    tkey = "serve|load_sweep,n128,p8,fft2,coalesce=1,load16|tps"
+    hist = [_snap({tkey: v}) for v in [500.0, 510.0, 490.0, 505.0]]
+    drop = h.detect_regressions(hist, _snap({tkey: 200.0}))
+    assert len(drop) == 1 and drop[0]["ratio"] > 2.0
+    assert h.detect_regressions(hist, _snap({tkey: 520.0})) == []  # faster is fine
+    assert h.detect_regressions(hist, _snap({tkey: 480.0})) == []  # jitter is fine
+
+
+def test_detector_rolling_window_forgets_ancient_history():
+    # 8 old slow points, then 8 recent fast ones: the k=8 window must
+    # judge against the recent regime only
+    hist = _history_of([1000.0] * 8 + [100.0] * 8)
+    assert h.detect_regressions(hist, _snap({KEY: 210.0}), k=8)
+    assert h.detect_regressions(hist, _snap({KEY: 210.0}), k=16) == []
+
+
+def test_findings_sorted_worst_first():
+    k2 = "real|n256,p8,r2c,scatter|measured_us"
+    hist = [_snap({KEY: 100.0, k2: 10.0}, commit=f"c{i}") for i in range(4)]
+    bad = h.detect_regressions(hist, _snap({KEY: 200.0, k2: 100.0}))
+    assert [f["metric"] for f in bad] == ["measured_us", "measured_us"]
+    assert bad[0]["key"] == k2  # 10x outranks 2x
+
+
+# ---------------------------------------------------------------------------
+# regress.py CLI (gate semantics end-to-end)
+# ---------------------------------------------------------------------------
+
+
+def _baseline_doc(us):
+    return {
+        "schema": 2,
+        "meta": {"commit": "head", "device_kind": "cpu", "timestamp": "t"},
+        "rows": [{"bench": "fft2", "n": 256, "p": 8, "backend": "scatter",
+                  "measured_us": us, "device_kind": "cpu"}],
+    }
+
+
+def _write_case(tmp_path, history_us, baseline_us):
+    from benchmarks import regress
+
+    hist_p = str(tmp_path / "BENCH_history.jsonl")
+    base_p = str(tmp_path / "BENCH_fft.json")
+    for i, v in enumerate(history_us):
+        h.append_snapshot(hist_p, _snap({KEY: v}, commit=f"c{i}"))
+    with open(base_p, "w") as f:
+        json.dump(_baseline_doc(baseline_us), f)
+    return regress, hist_p, base_p
+
+
+def test_regress_check_fails_naming_section_and_config(tmp_path, capsys):
+    regress, hist_p, base_p = _write_case(
+        tmp_path, [100.0, 101.0, 99.0, 100.0], 250.0)
+    rc = regress.main(["--history", hist_p, "--baseline", base_p, "--check"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "(fft2, n256,p8,scatter) measured_us" in err
+    assert "vs median" in err
+
+
+def test_regress_check_passes_within_noise(tmp_path, capsys):
+    regress, hist_p, base_p = _write_case(
+        tmp_path, [100.0, 101.0, 99.0, 100.0], 102.0)
+    rc = regress.main(["--history", hist_p, "--baseline", base_p, "--check"])
+    assert rc == 0
+    assert "regress OK" in capsys.readouterr().out
+
+
+def test_regress_check_fresh_ledger_never_false_fails(tmp_path, capsys):
+    regress, hist_p, base_p = _write_case(tmp_path, [], 9999.0)
+    rc = regress.main(["--history", hist_p, "--baseline", base_p, "--check"])
+    assert rc == 0
+    assert "below the 3-snapshot guard" in capsys.readouterr().out
+
+
+def test_regress_append_grows_ledger(tmp_path):
+    regress, hist_p, base_p = _write_case(tmp_path, [100.0], 100.0)
+    rc = regress.main(["--history", hist_p, "--baseline", base_p, "--append"])
+    assert rc == 0
+    hist = h.read_history(hist_p)
+    assert len(hist) == 2
+    assert hist[-1]["commit"] == "head"  # from the baseline's stamped meta
+
+
+def test_regress_table_renders_without_check(tmp_path, capsys):
+    regress, hist_p, base_p = _write_case(tmp_path, [100.0, 110.0], 105.0)
+    rc = regress.main(["--history", hist_p, "--baseline", base_p])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert KEY in out and "median" in out
+
+
+def test_committed_ledger_and_baseline_pass_the_gate():
+    """The repo's own artifacts must satisfy the CI fast-job gate."""
+    import os
+
+    from benchmarks import regress
+
+    rc = regress.main([
+        "--history", os.path.join(REPO, "BENCH_history.jsonl"),
+        "--baseline", os.path.join(REPO, "BENCH_fft.json"),
+        "--check",
+    ])
+    assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# Persisted calibration
+# ---------------------------------------------------------------------------
+
+
+def test_record_and_lookup_calibration_per_backend_class():
+    pooled = CommParams(alpha_s=2e-6, beta_bytes_s=5e10)
+    per = {"scatter": CommParams(alpha_s=4e-6, beta_bytes_s=2e10)}
+    planner.record_calibration("cpu", pooled, n=10, backends=per)
+    got = planner.calibration_for("cpu")
+    assert got.alpha_s == pytest.approx(2e-6)
+    sub = planner.calibration_for("cpu", "scatter")
+    assert sub.alpha_s == pytest.approx(4e-6)
+    # unknown backend class falls back to the pooled fit
+    assert planner.calibration_for("cpu", "alltoall").alpha_s == pytest.approx(2e-6)
+    assert planner.calibration_for("tpu") is None
+
+
+def test_record_calibration_merges_count_weighted():
+    planner.record_calibration("cpu", CommParams(alpha_s=1e-6, beta_bytes_s=1e10), n=1)
+    planner.record_calibration("cpu", CommParams(alpha_s=3e-6, beta_bytes_s=3e10), n=3)
+    cell = planner.calibration_cell("cpu")
+    assert cell["n"] == 4
+    assert cell["alpha_s"] == pytest.approx((1e-6 + 3 * 3e-6) / 4)
+
+
+def test_calibration_survives_wisdom_roundtrip(tmp_path):
+    planner.record_calibration(
+        "cpu", CommParams(alpha_s=2e-6, beta_bytes_s=5e10), n=7, source="bench_fit",
+        backends={"scatter": CommParams(alpha_s=4e-6, beta_bytes_s=2e10)},
+    )
+    path = str(tmp_path / "WISDOM.json")
+    planner.export_wisdom(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["calibration"]["cpu"]["source"] == "bench_fit"
+    planner.forget_calibration()
+    assert planner.calibration_for("cpu") is None
+    # a calibration-only wisdom file imports fine (0 entries)
+    assert planner.import_wisdom(path) == 0
+    got = planner.calibration_for("cpu", "scatter")
+    assert got.alpha_s == pytest.approx(4e-6)
+
+
+def test_ensure_calibrated_runs_once_per_device_kind():
+    mesh = make_mesh_1d(1)
+    calls = []
+
+    def sweep(m_bytes):
+        calls.append(m_bytes)
+        return 2 * 1e-6 + 2 * m_bytes / 1e11  # alpha=1us beta=100GB/s
+
+    p1 = planner.ensure_calibrated(mesh, timer=sweep)
+    assert p1.alpha_s == pytest.approx(1e-6, rel=0.05)
+    n = len(calls)
+    assert n >= 2
+    p2 = planner.ensure_calibrated(mesh, timer=sweep)  # cached: no re-sweep
+    assert len(calls) == n
+    assert p2.alpha_s == pytest.approx(p1.alpha_s)
+    planner.ensure_calibrated(mesh, timer=sweep, force=True)
+    assert len(calls) > n
+
+
+def test_auto_calibrate_switch_and_failure_memo():
+    # suite env pins REPRO_AUTO_CALIBRATE=0 (conftest)
+    assert not planner.auto_calibrate_enabled()
+    planner.set_auto_calibrate(True)
+    try:
+        assert planner.auto_calibrate_enabled()
+    finally:
+        planner.set_auto_calibrate(None)
+    assert not planner.auto_calibrate_enabled()
+
+
+def test_default_params_plan_prices_with_stored_calibration():
+    mesh = make_mesh_1d(1)
+    before = plan_fft((32, 32), mesh)
+    planner.record_calibration(
+        planner.device_kind(mesh), CommParams(alpha_s=9e-5, beta_bytes_s=1e9)
+    )
+    after = plan_fft((32, 32), mesh)
+    assert after.params.alpha_s == pytest.approx(9e-5)
+    assert before.params.alpha_s != after.params.alpha_s
+    # explicit params still win over the store
+    pinned = plan_fft((32, 32), mesh, params=CommParams(alpha_s=5e-6))
+    assert pinned.params.alpha_s == pytest.approx(5e-6)
+
+
+# ---------------------------------------------------------------------------
+# Decision provenance (Plan.why / selection_channel)
+# ---------------------------------------------------------------------------
+
+
+def _race_table(winner="scatter", loser_us=9.0):
+    from repro.core import backends
+
+    table = {n: loser_us for n in backends.available()
+             if backends.get(n).supports(1)}
+    table[winner] = 1.0
+    return table
+
+
+def test_channel_pinned_and_model_argmin():
+    mesh = make_mesh_1d(1)
+    pinned = plan_fft((32, 32), mesh, backend="scatter")
+    assert pinned.selection_channel == "pinned"
+    auto = plan_fft((32, 32), mesh, backend="auto")
+    assert auto.selection_channel == "model-argmin"
+    for plan in (pinned, auto):
+        why = plan.why()
+        assert why["channel"] == plan.selection_channel
+        assert why["backend"] == plan.backend
+        assert why["timings"]  # non-empty decision table
+        assert plan.why_text().startswith("why: backend=")
+
+
+def test_channel_measured_race_then_wisdom_hit():
+    mesh = make_mesh_1d(1)
+    timer = _fake_timer(_race_table())
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert p1.selection_channel == "measured-race"
+    assert p1.why()["timings_kind"] == "measured"
+    assert p1.why()["wisdom_key"]
+    p2 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert p2.selection_channel == "wisdom-hit"
+    assert p2.backend == p1.backend
+    assert "wisdom-hit" in p2.why_text()
+
+
+def test_channel_observed_overlay_flips_argmin():
+    mesh = make_mesh_1d(1)
+    timer = _fake_timer(_race_table(winner="scatter"))
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert p1.backend == "scatter"
+    # production telemetry says the race winner is actually slow and a
+    # rival is fast: fold enough observations to flip the argmin
+    for _ in range(5):
+        planner.record_observed(p1, 50e-6, backend="scatter")
+        planner.record_observed(p1, 0.5e-6, backend="alltoall")
+    p2 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    assert p2.backend == "alltoall"
+    assert p2.selection_channel == "observed-overlay"
+    assert "observed-overlay" in p2.why_text()
+    # the drifted entry is flagged stale for operators
+    report = planner.wisdom_report()
+    assert any(row["stale"] for row in report)
+
+
+def test_why_reports_calibration_constants():
+    mesh = make_mesh_1d(1)
+    planner.record_calibration(
+        planner.device_kind(mesh),
+        CommParams(alpha_s=7e-6, beta_bytes_s=3e10),
+        source="bench_fit",
+    )
+    plan = plan_fft((32, 32), mesh, backend="auto")
+    cal = plan.why()["calibration"]
+    assert cal["calibrated"] and cal["source"] == "bench_fit"
+    assert cal["alpha_s"] == pytest.approx(7e-6)
+    assert "bench_fit" in plan.why_text()
+
+
+def test_wisdom_report_quiet_entry_not_stale():
+    mesh = make_mesh_1d(1)
+    timer = _fake_timer(_race_table())
+    p1 = plan_fft((32, 32), mesh, planner="measure", timer=timer)
+    planner.record_observed(p1, 1.1)  # matches the 1.0s race closely
+    (row,) = planner.wisdom_report()
+    assert not row["stale"]
+    assert row["observed_n"] == 1
+    assert row["max_drift"] == pytest.approx(1.1, rel=0.05)
