@@ -17,6 +17,13 @@ plan-cache pool: first-request latency on a cold engine (``plan_fft`` +
 jit compile in the latency path) vs a wisdom-warmed engine (plan pool
 misses == 0) vs the steady-state p50.
 
+A ``chaos`` row measures the same workload under a fixed injected-fault
+rate (seeded :class:`repro.runtime.faults.FaultPlan`, 5% of Exchange
+executions poisoned): p50/p99 over the requests that still complete,
+throughput, and the engine's error/retry/quarantine/degraded counters --
+the cost of graceful degradation, as a number. ``--chaos`` runs just
+that row from the CLI.
+
 ``run_json()`` rows merge into ``BENCH_fft.json`` as the ``serve``
 section via ``benchmarks/run.py --json``; ``to_csv()`` renders the
 harness's ``name,us_per_call,derived`` format.
@@ -120,16 +127,62 @@ print("ROW " + json.dumps({
     "picked": fut.backend,
     "device_kind": dev,
 }))
+
+# ---- chaos: latency under a fixed injected-fault rate ----------------
+if __CHAOS__:
+    from repro.runtime import FaultPlan, RetryPolicy
+    RATE = 0.05
+    ch = SpectralEngine(mesh, max_batch=MAX_BATCH, max_wait_s=0.005,
+                        retry=RetryPolicy(max_retries=1))
+    for b in (1, 2, 4, MAX_BATCH):  # warm every bucket BEFORE arming chaos
+        for i in range(b):
+            ch.submit("fft", inputs[i])
+        ch.drain()
+    ch.reset_stats()
+    ch.set_faults(FaultPlan.rate(RATE, seed=7))
+    t0 = time.perf_counter()
+    done = failed = 0
+    for _ in range(16):
+        futs = [ch.submit("fft", inputs[i % MAX_BATCH]) for i in range(16)]
+        ch.flush()
+        for f in futs:
+            try:
+                f.block()
+                done += 1
+            except Exception:
+                failed += 1  # quarantined: isolated to its own future
+    elapsed = time.perf_counter() - t0
+    s = ch.stats()
+    fl = s["faults"]
+    print("ROW " + json.dumps({
+        "bench": "serve", "row": "chaos", "n": n, "p": p, "op": "fft",
+        "fault_rate": RATE, "requests": s["requests"], "completed": done,
+        "failed": failed,
+        "p50_us": round(s["latency_s"]["p50"] * 1e6, 1),
+        "p99_us": round(s["latency_s"]["p99"] * 1e6, 1),
+        "tps": round(done / elapsed, 1),
+        "errors": fl["errors"], "retries": fl["retries"],
+        "batch_splits": fl["batch_splits"],
+        "quarantined": fl["quarantined"],
+        "degraded_dispatches": fl["degraded_dispatches"],
+        "breaker_opened": fl["breaker"]["opened"],
+        "device_kind": dev,
+    }))
 """
 
 
-def run_json(n: int = 64, device_counts: Iterable[int] = (8,)) -> List[dict]:
-    """Serving rows (load sweep + warm-start) per device count."""
+def run_json(
+    n: int = 64, device_counts: Iterable[int] = (8,), *, chaos: bool = True
+) -> List[dict]:
+    """Serving rows (load sweep + warm-start + chaos) per device count."""
     rows: List[dict] = []
     for p in device_counts:
-        out = run_devices_subprocess(
-            _CODE.replace("__N__", str(n)).replace("__P__", str(p)), devices=p
+        code = (
+            _CODE.replace("__N__", str(n))
+            .replace("__P__", str(p))
+            .replace("__CHAOS__", "True" if chaos else "False")
         )
+        out = run_devices_subprocess(code, devices=p)
         for line in out.splitlines():
             if line.startswith("ROW "):
                 rows.append(json.loads(line[4:]))
@@ -139,7 +192,14 @@ def run_json(n: int = 64, device_counts: Iterable[int] = (8,)) -> List[dict]:
 def to_csv(rows: List[dict]) -> List[str]:
     out = []
     for r in rows:
-        if r.get("row") == "warm_start":
+        if r.get("row") == "chaos":
+            out.append(
+                f"serve_sweep/chaos/rate{r['fault_rate']}/p{r['p']},{r['p50_us']},"
+                f"p99_us={r['p99_us']};tps={r['tps']};"
+                f"failed={r['failed']};retries={r['retries']};"
+                f"degraded={r['degraded_dispatches']}"
+            )
+        elif r.get("row") == "warm_start":
             out.append(
                 f"serve_sweep/warm_start/p{r['p']},{r['warm_first_us']},"
                 f"cold_first_us={r['cold_first_us']};"
@@ -161,4 +221,16 @@ def run(n: int = 64) -> List[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument(
+        "--chaos", action="store_true",
+        help="print only the chaos row (latency under injected faults)",
+    )
+    cli = ap.parse_args()
+    lines = to_csv(run_json(cli.n))
+    if cli.chaos:
+        lines = [ln for ln in lines if ln.startswith("serve_sweep/chaos")]
+    print("\n".join(lines))

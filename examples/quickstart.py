@@ -158,6 +158,27 @@ def main():
     print(f"  coalesced poisson requests agree to {perr:.1e}; warm engines "
           f"(wisdom=PATH) skip plan_fft on the request path entirely")
 
+    # chaos demo: poison one coalesced request with a deterministic
+    # FaultPlan -- the batch splits, siblings answer correctly, the
+    # poisoned future quarantines and re-raises; nothing else notices
+    from repro.runtime import FaultPlan, RetryPolicy
+
+    chaos = SpectralEngine(mesh, max_batch=4, max_wait_s=100.0,
+                           retry=RetryPolicy(max_retries=0))
+    xc = [jnp.asarray((rng.standard_normal((ns2, ns2))
+                       + 1j * rng.standard_normal((ns2, ns2))).astype(np.complex64))
+          for _ in range(4)]
+    chaos.set_faults(FaultPlan.error(match="Exchange", times=2))
+    cfuts = [chaos.submit("fft", xi) for xi in xc]
+    chaos.drain()  # quarantined failures are isolated to their futures
+    survivors = [f for f in cfuts if not f.failed()]
+    cm = chaos.metrics()
+    print(f"  chaos: {len(survivors)}/4 coalesced requests survived an "
+          f"injected Exchange fault (errors={cm['errors']} "
+          f"batch_splits={cm['batch_splits']} quarantined={cm['quarantined']}); "
+          f"breakers degrade repeat offenders to xla_auto "
+          f"(degraded_dispatches={cm['degraded_dispatches']})")
+
     # one plan, cached executable, forward + inverse roundtrip
     z = plan.inverse(plan.execute(x))
     print(f"  ifft2(fft2(x)) roundtrip err: {float(jnp.abs(z - x).max()):.2e}")

@@ -2,13 +2,22 @@
 
 Durability contract for 1000-node runs:
 
-- *atomic*: a checkpoint is written into ``step_<N>.tmp`` and
-  ``os.replace``d into place only when complete; a crash mid-save never
-  corrupts the latest good checkpoint.
+- *atomic*: a checkpoint is staged into a unique same-dir temp directory
+  (``step_<N>.tmp*`` via ``tempfile.mkdtemp``, mirroring the planner's
+  ``export_wisdom`` same-filesystem discipline) with the manifest
+  written LAST, then ``os.replace``d into place only when complete; a
+  crash mid-save never corrupts the latest good checkpoint and never
+  collides with a concurrent saver.
 - *async*: the device->host transfer blocks, the disk write happens on a
   background thread (joined before the next save / on close) so the
   train loop loses ~0 step time.
 - *keep-N*: bounded disk usage with the newest N checkpoints retained.
+- *corrupt-skip restore*: ``latest_step``/``restore_latest`` consider
+  only checkpoints whose manifest parses and whose shard file exists,
+  and ``restore_latest`` falls back to the previous step when the
+  newest one fails to load (truncated npz, bit rot) instead of raising
+  -- a half-written or damaged directory costs one checkpoint interval,
+  not the run.
 - *mesh-agnostic restore*: leaves are stored as full logical arrays with
   a manifest of shapes/dtypes; ``restore(..., shardings=...)`` re-shards
   onto whatever mesh the restart got (elastic re-scale). On multi-host,
@@ -19,14 +28,18 @@ Durability contract for 1000-node runs:
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
+import tempfile
 import threading
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
 
 
 def _flatten_with_names(tree) -> dict:
@@ -47,6 +60,9 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
         self.wait()
@@ -58,15 +74,22 @@ class CheckpointManager:
         }
 
         def write():
-            tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
-            final = os.path.join(self.dir, f"step_{step:010d}")
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, f"proc{self.process_index}.npz"), **host)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
+            # unique same-dir tempdir: same filesystem (so os.replace is
+            # atomic) and no collision if two savers race the same step;
+            # the ".tmp" infix keeps it invisible to all_steps()
+            tmp = tempfile.mkdtemp(prefix=f"step_{step:010d}.tmp", dir=self.dir)
+            final = self._step_dir(step)
+            try:
+                np.savez(os.path.join(tmp, f"proc{self.process_index}.npz"), **host)
+                # manifest last: its presence marks the payload complete
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+            except BaseException:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
             self._gc()
 
         if blocking:
@@ -83,28 +106,51 @@ class CheckpointManager:
     def _gc(self):
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # --------------------------------------------------------------- restore
-    def all_steps(self):
+    def all_steps(self) -> List[int]:
+        """Every step directory present on disk, complete or not."""
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
+            if name.startswith("step_") and ".tmp" not in name:
                 try:
                     out.append(int(name[5:]))
                 except ValueError:
                     pass
         return sorted(out)
 
+    def _is_valid(self, step: int) -> bool:
+        """Cheap completeness check: the manifest parses, names this
+        step, and this process's shard file exists. (Deeper corruption
+        -- a truncated npz -- is caught at load time by
+        :meth:`restore_latest`'s fallback.)"""
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        if not isinstance(manifest, dict) or manifest.get("step") != step:
+            return False
+        return os.path.exists(os.path.join(d, f"proc{self.process_index}.npz"))
+
+    def valid_steps(self) -> List[int]:
+        """Steps whose checkpoint passes the completeness check."""
+        return [s for s in self.all_steps() if self._is_valid(s)]
+
     def latest_step(self) -> Optional[int]:
-        steps = self.all_steps()
+        """Newest *complete* checkpoint step (a partial or corrupt
+        directory -- missing/unparseable manifest, missing shard -- is
+        skipped rather than offered for restore)."""
+        steps = self.valid_steps()
         return steps[-1] if steps else None
 
     def restore(self, step: int, target: Any, *, shardings: Any = None) -> Any:
         """Restore into the structure of ``target``; ``shardings`` (same
         structure, NamedShardings) re-shards for the current mesh."""
         self.wait()
-        path = os.path.join(self.dir, f"step_{step:010d}", f"proc{self.process_index}.npz")
+        path = os.path.join(self._step_dir(step), f"proc{self.process_index}.npz")
         data = np.load(path)
         names = list(_flatten_with_names(target).keys())
         flat_target, treedef = jax.tree.flatten(target)
@@ -123,8 +169,19 @@ class CheckpointManager:
                 out.append(jnp.asarray(arr))
         return treedef.unflatten(out)
 
-    def restore_latest(self, target: Any, *, shardings: Any = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, target, shardings=shardings)
+    def restore_latest(
+        self, target: Any, *, shardings: Any = None
+    ) -> Tuple[Optional[int], Any]:
+        """Restore the newest checkpoint that actually loads, walking
+        back past corrupt/partial ones (one warning each) -- the
+        recovery loop's entry point. Returns ``(None, None)`` when no
+        checkpoint survives."""
+        for step in reversed(self.valid_steps()):
+            try:
+                return step, self.restore(step, target, shardings=shardings)
+            except Exception as e:  # noqa: BLE001 -- fall back to the previous step
+                log.warning(
+                    "checkpoint step %d unreadable (%s: %s); falling back",
+                    step, type(e).__name__, e,
+                )
+        return None, None

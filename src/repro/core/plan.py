@@ -33,6 +33,7 @@ A :class:`Plan`:
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Dict, NamedTuple, Optional, Tuple
 
@@ -256,8 +257,16 @@ class Plan:
         # set by the measured planner (repro.core.planner.plan_measured)
         self.planner = "estimate"
         self.measured: Optional[Dict[str, float]] = None
+        #: candidate id -> "ExcType: msg" for candidates that raised
+        #: mid-race (recorded as inf, excluded from the argmin)
+        self.race_failures: Dict[str, str] = {}
         self.wisdom_hit = False
         self.wisdom_key: Optional[str] = None
+        #: chaos hook (repro.runtime.faults.FaultPlan). While armed,
+        #: execute/inverse run the segmented chaos executor so the plan
+        #: consults it before every Exchange; once exhausted (or None)
+        #: the cached jitted executables run untouched.
+        self.faults = None
         #: decision provenance: which channel picked this plan's backend
         #: -- "pinned" (caller named it), "model-argmin" (alpha-beta
         #: auto), or -- overwritten by plan_measured -- "measured-race" /
@@ -834,10 +843,12 @@ class Plan:
         from repro.core import planner as _planner
 
         if self.planner == "measure" and self.measured:
+            # failed candidates carry timing inf -- keep them out of the
+            # table and the argmin; they are reported under "failed"
             timings = {
                 k: float(v)
                 for k, v in self.measured.items()
-                if isinstance(v, (int, float))
+                if isinstance(v, (int, float)) and math.isfinite(v)
             }
             timings_kind = "measured"
         else:
@@ -856,6 +867,7 @@ class Plan:
             "timings_kind": timings_kind,
             "timings": timings,
             "argmin": argmin,
+            "failed": dict(self.race_failures),
             "wisdom_key": self.wisdom_key,
             "wisdom_hit": self.wisdom_hit,
             "calibration": {
@@ -888,6 +900,11 @@ class Plan:
             f"beta={cal['beta_bytes_s'] / 1e9:.1f}GB/s "
             f"({cal['source'] if cal['calibrated'] else 'default'})",
         ]
+        if w["failed"]:
+            lines.append(
+                "  failed candidates (excluded from argmin): "
+                + ", ".join(f"{k} ({v})" for k, v in sorted(w["failed"].items()))
+            )
         if w["wisdom_key"]:
             lines.append(f"  wisdom_key: {w['wisdom_key']}")
         return "\n".join(lines)
@@ -987,16 +1004,33 @@ class Plan:
             self.compiles += 1
         return fn
 
+    def _faults_armed(self) -> bool:
+        return self.faults is not None and self.faults.active()
+
     def execute(self, x: jax.Array) -> jax.Array:
-        """Run the planned direction through the cached executable."""
+        """Run the planned direction through the cached executable (or,
+        while a :attr:`faults` plan is armed, through the segmented
+        chaos executor so injected failures fire deterministically)."""
         x = jnp.asarray(x)
-        return self._executable(self.direction == "inverse", x.dtype)(x)
+        inv = self.direction == "inverse"
+        if self._faults_armed():
+            return sch.run_schedule(
+                x, self.schedule(inv), self.mesh,
+                impl=self.local_impl, faults=self.faults,
+            )
+        return self._executable(inv, x.dtype)(x)
 
     def inverse(self, x: jax.Array) -> jax.Array:
         """Run the opposite of the planned direction. Not available for
         ``ndim=1`` (raises before executing anything -- see class doc)."""
         x = jnp.asarray(x)
-        return self._executable(self.direction != "inverse", x.dtype)(x)
+        inv = self.direction != "inverse"
+        if self._faults_armed():
+            return sch.run_schedule(
+                x, self.schedule(inv), self.mesh,
+                impl=self.local_impl, faults=self.faults,
+            )
+        return self._executable(inv, x.dtype)(x)
 
     def executable_stats(self) -> Dict[Tuple[str, str], int]:
         """(direction, dtype) -> number of compiled specializations held
@@ -1152,6 +1186,7 @@ def plan_fft(
     real: bool = False,
     pad: bool = True,
     pipeline="auto",
+    faults=None,
 ) -> Plan:
     """Plan a distributed FFT (the FFTW ``plan`` analogue).
 
@@ -1232,7 +1267,10 @@ def plan_fft(
         ``timer(plan) -> seconds`` replaces the real clock (tests).
 
     Pass any name from ``repro.core.backends.available()`` as
-    ``backend=`` to pin the backend under either planner.
+    ``backend=`` to pin the backend under either planner. ``faults=``
+    installs a chaos hook (:class:`repro.runtime.faults.FaultPlan`) on
+    the returned plan: while armed, execute/inverse consult it before
+    every Exchange stage (see :attr:`Plan.faults`).
     """
     if real and fuse_dft:
         fuse_dft = _warn_real_fuse_dft()
@@ -1245,7 +1283,7 @@ def plan_fft(
     if planner == "measure":
         from repro.core import planner as _planner
 
-        return _planner.plan_measured(
+        plan = _planner.plan_measured(
             global_shape,
             mesh,
             ndim=ndim,
@@ -1267,7 +1305,9 @@ def plan_fft(
             pad=pad,
             pipeline=pipeline,
         )
-    return Plan(
+        plan.faults = faults
+        return plan
+    plan = Plan(
         global_shape,
         mesh,
         ndim=ndim,
@@ -1287,6 +1327,8 @@ def plan_fft(
         pad=pad,
         pipeline=pipeline,
     )
+    plan.faults = faults
+    return plan
 
 
 # ---------------------------------------------------------------------------

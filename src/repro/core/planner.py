@@ -32,6 +32,7 @@ selection logic is testable without a fabric.
 from __future__ import annotations
 
 import json
+import math
 import os
 import tempfile
 import time
@@ -913,6 +914,8 @@ def plan_measured(
             plan = build(best)  # still validates shape/mesh/backend
             plan.planner = "measure"
             plan.measured = dict(timings)
+            failed = entry.get("failed")
+            plan.race_failures = dict(failed) if isinstance(failed, dict) else {}
             plan.wisdom_hit = True
             plan.wisdom_key = key
             # provenance: did the observed channel (production
@@ -946,19 +949,37 @@ def plan_measured(
     timer = timer or default_timer(warmup=warmup, iters=iters)
     plans: Dict[str, Plan] = {}
     timings: Dict[str, float] = {}
+    failures: Dict[str, str] = {}
     for name in names:
-        plans[name] = build(name)
-        timings[name] = float(timer(plans[name]))
-    best = min(sorted(timings), key=timings.__getitem__)
+        # a candidate that raises mid-race (backend bug, injected fault,
+        # a collective that lost its ring) is recorded as failed --
+        # timing inf, excluded from the argmin, noted in Plan.why() --
+        # instead of aborting the whole measured race
+        try:
+            plans[name] = build(name)
+            timings[name] = float(timer(plans[name]))
+        except Exception as e:  # noqa: BLE001 -- race isolation boundary
+            timings[name] = float("inf")
+            failures[name] = f"{type(e).__name__}: {e}"
+    finite = {k: v for k, v in timings.items() if math.isfinite(v)}
+    if not finite:
+        raise RuntimeError(
+            f"measured race: every candidate failed for {key}: {failures}"
+        )
+    best = min(sorted(finite), key=finite.__getitem__)
 
     _WISDOM[key] = {
         "backend": best,
-        "timings": dict(timings),  # own copy: Plan.measured stays mutable
+        # finite timings only: inf is not JSON, and a failed candidate
+        # must never win a later wisdom-hit argmin
+        "timings": dict(finite),  # own copy: Plan.measured stays mutable
         "device_kind": device_kind(mesh),
+        **({"failed": dict(failures)} if failures else {}),
     }
     plan = plans[best]
     plan.planner = "measure"
     plan.measured = timings
+    plan.race_failures = failures
     plan.wisdom_hit = False
     plan.wisdom_key = key
     plan.selection_channel = "measured-race"

@@ -1128,7 +1128,7 @@ def _reference_executable(sched: Schedule, mesh: Mesh, ndim: int):
 
 
 def run_schedule(
-    x: jax.Array, sched: Schedule, mesh: Mesh, *, impl="jnp", trace=None
+    x: jax.Array, sched: Schedule, mesh: Mesh, *, impl="jnp", trace=None, faults=None
 ) -> jax.Array:
     """Run a schedule on a globally-sharded array: shard_map the
     interpreter with the schedule's own partition specs, or dispatch the
@@ -1141,7 +1141,21 @@ def run_schedule(
     per stage -- Exchange spans carry backend/role/wire-bytes/pipeline
     attributes (the paper's comm-vs-compute breakdown, per stage). The
     default ``trace=None`` path is byte-identical to the untraced
-    executor and stays jittable."""
+    executor and stays jittable.
+
+    With ``faults`` (an *armed* :class:`repro.runtime.faults.FaultPlan`)
+    the schedule also executes segmented, consulting the fault plan
+    before every Exchange segment (and before a ``global:`` reference
+    dispatch) so a matching spec can raise, stall, or report device loss
+    at exactly the stage it names -- deterministic chaos on the IR. An
+    exhausted (``active() == False``) or absent fault plan costs
+    nothing: the fast path runs unchanged."""
+    if faults is not None and faults.active():
+        if trace is not None:
+            return _run_schedule_traced(
+                x, sched, mesh, impl=impl, trace=trace, faults=faults
+            )
+        return _run_schedule_faulted(x, sched, mesh, impl=impl, faults=faults)
     if trace is not None:
         return _run_schedule_traced(x, sched, mesh, impl=impl, trace=trace)
     if sched.global_backend is not None:
@@ -1152,6 +1166,38 @@ def run_schedule(
         return execute_schedule(xl, sched, impl=impl)
 
     return shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)(x)
+
+
+def _run_schedule_faulted(
+    x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, faults
+) -> jax.Array:
+    """Chaos-mode executor: the trace-mode segment walk without spans or
+    fences, calling ``faults.on_stage(label, index=...)`` before every
+    Exchange segment (Twiddles ride their Exchange, as in tracing).
+    Injected faults therefore surface as *host* exceptions at dispatch
+    time -- synchronously and deterministically -- while the segments
+    themselves still launch async; numerics of a non-firing run match
+    the untraced executor (same per-segment shard_maps over the same
+    simulated boundary specs)."""
+    if sched.global_backend is not None:
+        faults.on_stage(f"global:{sched.kind}", index=0)
+        return _xla_reference(x, sched, mesh)
+    bounds = simulate_specs(sched, x.ndim)
+    v = jnp.conj(x) if sched.conj else x
+    for start, seg in _segments(sched):
+        report = seg[-1]
+        if isinstance(report, Exchange):
+            faults.on_stage(_stage_label(report), index=start + len(seg) - 1)
+        fn = _segment_executable(
+            sched, start, len(seg), impl, mesh,
+            P(*bounds[start]), P(*bounds[start + len(seg)]),
+        )
+        v = fn(v)
+    if sched.conj:
+        v = jnp.conj(v)
+    if sched.scale is not None:
+        v = v / sched.scale
+    return v
 
 
 def _segments(sched: Schedule) -> Tuple[Tuple[int, Tuple[object, ...]], ...]:
@@ -1215,7 +1261,9 @@ def _segment_executable(
     ))
 
 
-def _run_schedule_traced(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, trace) -> jax.Array:
+def _run_schedule_traced(
+    x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, trace, faults=None
+) -> jax.Array:
     """Trace-mode executor: host-side segmentation with a wall-clock
     span per stage. Each segment is its own shard_map over the
     spec-simulated boundary shardings (no resharding between segments --
@@ -1226,6 +1274,8 @@ def _run_schedule_traced(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, tra
     (``Plan.profile`` does) for steady-state numbers."""
     r_item, c_item = _itemsizes(x)
     if sched.global_backend is not None:
+        if faults is not None:
+            faults.on_stage(f"global:{sched.kind}", index=0)
         with trace.span(
             f"global:{sched.kind}",
             cat="stage",
@@ -1256,6 +1306,10 @@ def _run_schedule_traced(x: jax.Array, sched: Schedule, mesh: Mesh, *, impl, tra
             cat = "stage"
             args = {"stage": type(report).__name__}
         args["index"] = start + len(seg) - 1
+        if faults is not None and isinstance(report, Exchange):
+            # consult the chaos hook OUTSIDE the span: an injected raise
+            # must not leave a half-open span in the recorder
+            faults.on_stage(_stage_label(report), index=start + len(seg) - 1)
         fn = _segment_executable(sched, start, len(seg), impl, mesh, in_spec, out_spec)
         with trace.span(_stage_label(report), cat=cat, **args):
             v = fn(v)

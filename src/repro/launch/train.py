@@ -24,7 +24,13 @@ from repro.configs import TrainConfig, get_config
 from repro.data import DataConfig, SyntheticLM, make_batch_arrays
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import Model
-from repro.runtime import FailureInjector, StepMonitor, run_with_recovery
+from repro.runtime import (
+    FailureInjector,
+    Resume,
+    StepMonitor,
+    elastic_mesh,
+    run_with_recovery,
+)
 from repro.train import init_train_state, make_train_step, state_shardings
 
 log = logging.getLogger("repro.train")
@@ -45,6 +51,23 @@ def build_argparser():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at", type=int, default=None, help="inject a failure (recovery demo)")
+    ap.add_argument(
+        "--fail-every", type=int, default=None,
+        help="repeat the injected failure every N steps after --fail-at",
+    )
+    ap.add_argument(
+        "--fail-times", type=int, default=1,
+        help="total injected failures (with --fail-every; default one)",
+    )
+    ap.add_argument(
+        "--elastic", action="store_true",
+        help="rebuild the mesh from whatever devices are alive on each "
+             "restart (may resume on fewer devices than the failed run)",
+    )
+    ap.add_argument(
+        "--backoff-s", type=float, default=0.0,
+        help="base restart backoff; grows exponentially, capped, jittered",
+    )
     ap.add_argument("--attn-impl", default="chunked", choices=["chunked", "naive"])
     ap.add_argument(
         "--monitor-window", type=int, default=512,
@@ -55,8 +78,6 @@ def build_argparser():
 
 def train(args, *, injector: Optional[FailureInjector] = None) -> dict:
     cfg = get_config(args.arch, reduced=args.reduced)
-    mesh = make_local_mesh(args.model_parallel)
-    model = Model(cfg, mesh=mesh, attn_impl=args.attn_impl)
     tcfg = TrainConfig(
         learning_rate=args.lr,
         warmup_steps=max(args.steps // 20, 5),
@@ -68,17 +89,37 @@ def train(args, *, injector: Optional[FailureInjector] = None) -> dict:
     ds = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed))
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)
     monitor = StepMonitor(history_limit=getattr(args, "monitor_window", 512))
-    injector = injector or FailureInjector(args.fail_at)
+    injector = injector or FailureInjector(
+        args.fail_at,
+        every=getattr(args, "fail_every", None),
+        times=getattr(args, "fail_times", 1),
+    )
     history = {"loss": [], "restarts": 0}
 
-    def loop(resume: Optional[int]):
+    def loop(resume: Optional[Resume]):
+        # mesh (and everything sharded on it) is rebuilt per attempt:
+        # under --elastic a restart re-discovers whatever devices are
+        # still alive and may come back at a smaller data-parallel width
+        if getattr(args, "elastic", False):
+            mesh = elastic_mesh(("data", "model"), model_parallel=args.model_parallel)
+        else:
+            mesh = make_local_mesh(args.model_parallel)
+        model = Model(cfg, mesh=mesh, attn_impl=args.attn_impl)
         state, specs = init_train_state(model, jax.random.PRNGKey(tcfg.seed), tcfg)
         start = 0
-        latest = ckpt.latest_step()
+        # restore_latest walks back past corrupt/partial checkpoints --
+        # a crash mid-save costs one interval, never the run
+        latest, restored = ckpt.restore_latest(state)
         if latest is not None:
-            state = ckpt.restore(latest, state)
+            state = restored
             start = latest
-            log.info("resumed from checkpoint step %d", start)
+            if resume is not None:
+                log.info(
+                    "restart %d (%s): resumed from checkpoint step %d on %d devices",
+                    resume.restarts, resume.cause, start, mesh.size,
+                )
+            else:
+                log.info("resumed from checkpoint step %d", start)
             # the pre-failure EMA would flag every post-restart step
             # (recompiles, cold caches) -- start the baseline fresh
             monitor.reset()
@@ -112,7 +153,12 @@ def train(args, *, injector: Optional[FailureInjector] = None) -> dict:
                 ckpt.save(step + 1, state)
         ckpt.wait()
 
-    restarts = run_with_recovery(loop, max_restarts=2)
+    restarts = run_with_recovery(
+        loop,
+        max_restarts=2,
+        backoff_s=getattr(args, "backoff_s", 0.0),
+        seed=args.seed,
+    )
     history["restarts"] = restarts
     history["straggler_report"] = monitor.straggler_report()
     return history

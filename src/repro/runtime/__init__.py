@@ -1,7 +1,36 @@
-from repro.runtime.elastic import FailureInjector, SimulatedFailure, elastic_mesh, run_with_recovery
+from repro.runtime.elastic import (
+    FailureInjector,
+    Resume,
+    SimulatedFailure,
+    backoff_delay,
+    elastic_mesh,
+    run_with_recovery,
+)
+from repro.runtime.faults import (
+    CircuitBreaker,
+    DeviceLossFault,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    RetryPolicy,
+)
 from repro.runtime.monitor import LatencyWindow, StepMonitor, StepStats, percentiles
 
 __all__ = [
-    "FailureInjector", "LatencyWindow", "SimulatedFailure", "StepMonitor",
-    "StepStats", "elastic_mesh", "percentiles", "run_with_recovery",
+    "CircuitBreaker",
+    "DeviceLossFault",
+    "FailureInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "LatencyWindow",
+    "Resume",
+    "RetryPolicy",
+    "SimulatedFailure",
+    "StepMonitor",
+    "StepStats",
+    "backoff_delay",
+    "elastic_mesh",
+    "percentiles",
+    "run_with_recovery",
 ]

@@ -7,14 +7,27 @@ pipeline is a pure function of step (data/pipeline.py) and checkpoints
 are mesh-agnostic (checkpoint/manager.py), the resumed run is bitwise
 consistent with an uninterrupted one (asserted by tests), and a restart
 may come back on a *different* device count -- ``elastic_mesh`` picks
-the largest valid mesh for whatever is alive.
+the largest valid mesh for whatever is alive (shrink it explicitly with
+``max_devices``/``devices`` when chaos tests simulate rank loss).
+
+Restart pacing is capped exponential backoff with deterministic jitter:
+``backoff_s * 2**(restart-1)`` up to ``backoff_cap_s``, scaled by a
+``seed``-ed jitter factor so a thundering herd of restarts de-correlates
+*reproducibly*. ``sleep`` is injectable, so tests assert the exact delay
+sequence without waiting for it. The loop function receives ``None`` on
+the first run and an explicit :class:`Resume` value afterwards (which
+replaced an old ``resume_step = -1`` sentinel): the restart ordinal, the
+failure that caused it, and the step to resume from (``None`` = restore
+the latest checkpoint, the usual contract).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import logging
+import random
 import time
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -27,45 +40,132 @@ class SimulatedFailure(RuntimeError):
 
 
 class FailureInjector:
-    """Raises SimulatedFailure the first time ``step == at_step``."""
+    """Raises :class:`SimulatedFailure` on a repeatable step schedule.
 
-    def __init__(self, at_step: Optional[int] = None):
+    ``FailureInjector(k)`` fires once at step ``k`` (the historical
+    contract); ``every=n`` extends the schedule to ``{k, k+n, k+2n,
+    ...}``, capped at ``times`` total firings (None = unlimited). The
+    schedule is pure arithmetic on the step counter, so a chaos run
+    replays identically; :attr:`fired_steps` records each firing."""
+
+    def __init__(
+        self,
+        at_step: Optional[int] = None,
+        *,
+        every: Optional[int] = None,
+        times: Optional[int] = 1,
+    ):
         self.at_step = at_step
-        self.fired = False
+        self.every = every
+        self.times = times
+        self.fired_steps: List[int] = []
+
+    @property
+    def fired(self) -> bool:
+        return bool(self.fired_steps)
+
+    def scheduled(self, step: int) -> bool:
+        """Whether ``maybe_fail(step)`` would raise."""
+        if self.at_step is None or step < self.at_step:
+            return False
+        if self.times is not None and len(self.fired_steps) >= self.times:
+            return False
+        if step == self.at_step:
+            return True
+        return self.every is not None and (step - self.at_step) % self.every == 0
 
     def maybe_fail(self, step: int):
-        if self.at_step is not None and step == self.at_step and not self.fired:
-            self.fired = True
+        if self.scheduled(step):
+            self.fired_steps.append(step)
             raise SimulatedFailure(f"injected failure at step {step}")
 
 
-def elastic_mesh(axis_names=("data", "model"), *, model_parallel: int = 1):
+def elastic_mesh(
+    axis_names=("data", "model"),
+    *,
+    model_parallel: int = 1,
+    devices=None,
+    max_devices: Optional[int] = None,
+):
     """Build the largest mesh available right now (restart may see fewer
     hosts). model_parallel is fixed by the checkpointed layout; the data
-    axis absorbs whatever devices remain."""
-    n = len(jax.devices())
-    if n % model_parallel:
-        raise ValueError(f"{n} devices not divisible by model_parallel={model_parallel}")
+    axis absorbs whatever devices remain (devices that do not fill a
+    whole model-parallel group are dropped). ``devices`` pins an explicit
+    alive list and ``max_devices`` truncates it -- the knobs chaos tests
+    use to simulate rank loss on a forced-device host."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if max_devices is not None:
+        devs = devs[:max_devices]
+    n = len(devs) - (len(devs) % model_parallel)
+    if n < model_parallel:
+        raise ValueError(
+            f"{len(devs)} alive devices cannot fill one "
+            f"model_parallel={model_parallel} group"
+        )
+    devs = devs[:n]
     from jax.sharding import Mesh
 
-    devs = np.asarray(jax.devices()).reshape(n // model_parallel, model_parallel)
-    return Mesh(devs, axis_names)
+    if len(axis_names) == 1:
+        if model_parallel != 1:
+            raise ValueError("model_parallel needs a second mesh axis")
+        return Mesh(np.asarray(devs), axis_names)
+    return Mesh(np.asarray(devs).reshape(n // model_parallel, model_parallel), axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class Resume:
+    """Explicit restart token handed to the recovery loop's ``loop_fn``
+    (first run gets ``None``). ``step=None`` means 'restore the latest
+    checkpoint' -- the contract the old ``-1`` sentinel spelled
+    implicitly."""
+
+    restarts: int
+    cause: str = ""
+    step: Optional[int] = None
+
+
+def backoff_delay(
+    restart: int,
+    base_s: float,
+    *,
+    cap_s: float = 30.0,
+    jitter: float = 0.25,
+    rng: Optional[random.Random] = None,
+) -> float:
+    """Capped exponential backoff for the ``restart``-th retry (1-based):
+    ``base_s * 2**(restart-1)`` clamped to ``cap_s``, scaled by a
+    uniform ``1 +- jitter`` factor drawn from ``rng`` (deterministic for
+    a seeded Random; no jitter when rng is None)."""
+    if base_s <= 0:
+        return 0.0
+    delay = min(cap_s, base_s * (2.0 ** max(0, restart - 1)))
+    if jitter and rng is not None:
+        delay *= 1.0 + jitter * (2.0 * rng.random() - 1.0)
+    return min(delay, cap_s)
 
 
 def run_with_recovery(
-    loop_fn: Callable[[Optional[int]], None],
+    loop_fn: Callable[[Optional[Resume]], None],
     *,
     max_restarts: int = 3,
     backoff_s: float = 0.0,
+    backoff_cap_s: float = 30.0,
+    jitter: float = 0.25,
+    seed: int = 0,
+    sleep: Callable[[float], None] = time.sleep,
     on_restart: Optional[Callable[[int, Exception], None]] = None,
-):
-    """loop_fn(resume_step) runs until completion or raises. Returns the
-    number of restarts consumed."""
+) -> int:
+    """``loop_fn(resume)`` runs until completion or raises; returns the
+    number of restarts consumed. ``resume`` is ``None`` on the first
+    attempt and a :class:`Resume` afterwards. ``on_restart(restarts,
+    exc)`` runs before the backoff sleep -- the hook elastic callers use
+    to shrink the device pool / rebuild state for the next attempt."""
+    rng = random.Random(seed)
     restarts = 0
-    resume_step = None
+    resume: Optional[Resume] = None
     while True:
         try:
-            loop_fn(resume_step)
+            loop_fn(resume)
             return restarts
         except Exception as e:  # noqa: BLE001 -- recovery boundary
             restarts += 1
@@ -74,6 +174,9 @@ def run_with_recovery(
             log.warning("run failed (%s); restart %d/%d", e, restarts, max_restarts)
             if on_restart is not None:
                 on_restart(restarts, e)
-            if backoff_s:
-                time.sleep(backoff_s)
-            resume_step = -1  # sentinel: loop_fn restores latest checkpoint
+            delay = backoff_delay(
+                restarts, backoff_s, cap_s=backoff_cap_s, jitter=jitter, rng=rng
+            )
+            if delay > 0:
+                sleep(delay)
+            resume = Resume(restarts=restarts, cause=f"{type(e).__name__}: {e}")

@@ -1,3 +1,4 @@
+from repro.runtime.faults import CircuitBreaker, FaultPlan, RetryPolicy
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.queue import Admission, CoalescingQueue, PendingQueue
 from repro.serve.spectral import (
@@ -10,10 +11,13 @@ from repro.serve.spectral import (
 
 __all__ = [
     "Admission",
+    "CircuitBreaker",
     "CoalescingQueue",
+    "FaultPlan",
     "PendingQueue",
     "PlanPool",
     "Request",
+    "RetryPolicy",
     "ServeEngine",
     "SpectralEngine",
     "SpectralFuture",

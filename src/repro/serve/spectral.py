@@ -28,6 +28,20 @@ workload, on top of the plan front-end:
   factor, and plan-pool hit/miss/eviction counters -- the numbers
   ``benchmarks/serve_sweep.py`` turns into the serve section of
   ``BENCH_fft.json``.
+- **Fault tolerance**: per-request error isolation (a poisoned request
+  in a coalesced batch is split out, retried solo under a
+  :class:`repro.runtime.faults.RetryPolicy` budget, and quarantined --
+  its siblings still resolve with correct numerics and its
+  :meth:`SpectralFuture.result` re-raises the recorded error); a
+  per-(backend, plan-key) :class:`repro.runtime.faults.CircuitBreaker`
+  that degrades repeatedly-failing plan keys to the ``xla_auto``
+  reference schedule and re-probes the fast path after a cool-down; and
+  :meth:`SpectralEngine.remesh` for elastic re-scale after device loss
+  (invalidate + re-warm the pool on the survivor mesh). Chaos is
+  injected with :meth:`SpectralEngine.set_faults` (a seeded
+  :class:`repro.runtime.faults.FaultPlan`), and
+  ``error/retry/breaker/degraded`` counters ride ``stats()`` and
+  ``metrics()``.
 
 Request ops (all flow through any :class:`repro.core.Plan`): ``fft``,
 ``rfft``, ``ifft`` (c2c spectrum in the plan's own layout), ``poisson``,
@@ -49,6 +63,7 @@ from repro.apps import derivatives as _derivatives
 from repro.apps import poisson as _poisson
 from repro.core import planner as _planner
 from repro.core.plan import plan_fft
+from repro.runtime.faults import CircuitBreaker, RetryPolicy
 from repro.runtime.monitor import LatencyWindow, StepMonitor
 from repro.serve.queue import Admission, CoalescingQueue
 
@@ -132,12 +147,16 @@ class PlanPool:
         capacity: int = 32,
         planner: str = "estimate",
         plan_kwargs: Optional[dict] = None,
+        faults=None,
     ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.mesh = mesh
         self.capacity = capacity
         self.planner = planner
+        #: optional FaultPlan installed on every plan the pool hands out
+        #: (chaos testing); see :meth:`set_faults`
+        self.faults = faults
         self.plan_kwargs = dict(plan_kwargs or {})
         self.decomp = self.plan_kwargs.get("decomp", "slab")
         self._plans: "collections.OrderedDict[str, object]" = collections.OrderedDict()
@@ -198,6 +217,8 @@ class PlanPool:
         )
 
     def _insert(self, key: str, plan) -> None:
+        if self.faults is not None:
+            plan.faults = self.faults
         self._plans[key] = plan
         self._plans.move_to_end(key)
         self._schedule_hashes[key] = plan.schedule_hash()
@@ -207,6 +228,28 @@ class PlanPool:
             evicted, _ = self._plans.popitem(last=False)
             self._schedule_hashes.pop(evicted, None)
             self.evictions += 1
+
+    def set_faults(self, faults) -> None:
+        """Install (or clear, with ``None``) a fault plan on the pool
+        AND retrofit it onto every already-warm plan -- warm first, then
+        arm chaos, so pre-compilation itself is never poisoned."""
+        self.faults = faults
+        for plan in self._plans.values():
+            plan.faults = faults
+
+    def invalidate(self) -> None:
+        """Drop every cached plan (and its compiled executables).
+        Hit/miss history and provenance tallies are kept -- this is the
+        'plans are stale' path, not a telemetry reset."""
+        self._plans.clear()
+        self._schedule_hashes.clear()
+
+    def remesh(self, mesh) -> None:
+        """Point the pool at a new mesh (elastic re-scale after device
+        loss): cached plans bake the old mesh's shardings and P, so they
+        are all invalidated; re-warm from wisdom at the new P next."""
+        self.invalidate()
+        self.mesh = mesh
 
     def schedule_hash(self, key: str) -> Optional[str]:
         """Stage-schedule hash of the pooled plan under ``key`` (None
@@ -348,7 +391,12 @@ class SpectralFuture:
     polling the engine at its admission deadline -- it never waits
     longer than the queue's max-wait. ``block()`` additionally waits for
     the device and records the request's end-to-end latency into the
-    engine's telemetry window."""
+    engine's telemetry window.
+
+    A request that failed every retry is *quarantined*: its future
+    carries the recorded exception in ``error`` and both ``result()``
+    and ``block()`` re-raise it -- the failure is isolated to this
+    handle; coalesced siblings resolve normally."""
 
     def __init__(self, engine: "SpectralEngine", request: SpectralRequest):
         self._engine = engine
@@ -360,26 +408,50 @@ class SpectralFuture:
         self.batch_size: Optional[int] = None
         self.pool_hit: Optional[bool] = None
         self.backend: Optional[str] = None
+        self.degraded: Optional[bool] = None
+        self.error: Optional[BaseException] = None
 
-    def _resolve(self, value, *, dispatch_t, batch_size, pool_hit, backend) -> None:
+    def _resolve(
+        self, value, *, dispatch_t, batch_size, pool_hit, backend, degraded=False
+    ) -> None:
         self._value = value
         self._dispatched = True
         self.dispatch_t = dispatch_t
         self.batch_size = batch_size
         self.pool_hit = pool_hit
         self.backend = backend
+        self.degraded = degraded
+
+    def _reject(self, error: BaseException, *, dispatch_t) -> None:
+        self.error = error
+        self._dispatched = True
+        self.dispatch_t = dispatch_t
+        self.batch_size = 1  # quarantined requests always ran solo last
 
     def done(self) -> bool:
         """Dispatched (output possibly still in flight on device)."""
         return self._dispatched
 
+    def failed(self) -> bool:
+        """Quarantined: every attempt (batch, solo retries) failed."""
+        return self.error is not None
+
     def result(self):
         while not self._dispatched:
             self._engine._force_dispatch()
+        if self.error is not None:
+            raise self.error
         return self._value
 
     def block(self):
-        value = self.result()
+        while not self._dispatched:
+            self._engine._force_dispatch()
+        if self.error is not None:
+            if not self._recorded:
+                self._recorded = True
+                self._engine._record_completion(self, failed=True)
+            raise self.error
+        value = self._value
         jax.block_until_ready(value)
         if not self._recorded:
             self._recorded = True
@@ -417,6 +489,9 @@ class SpectralEngine:
         warm_compile: bool = True,
         clock: Callable[[], float] = time.monotonic,
         window: int = 2048,
+        faults=None,
+        retry: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
     ):
         self.mesh = mesh
         self.max_batch = max_batch
@@ -430,11 +505,21 @@ class SpectralEngine:
             coalesce=coalesce,
             clock=clock,
         )
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker = breaker if breaker is not None else CircuitBreaker(clock=clock)
+        self.faults = None
+        #: pool_key -> xla_auto reference plan, the degradation target a
+        #: tripped breaker routes that key's traffic through
+        self._degraded: Dict[str, object] = {}
         self._window_len = window
         self.reset_stats()
         self._outstanding: List[SpectralFuture] = []
         if wisdom is not None:
             self.warm_start(wisdom, compile=warm_compile)
+        if faults is not None:
+            # armed AFTER any warm start so pre-compilation is never
+            # poisoned; chaos begins with the first real request
+            self.set_faults(faults)
 
     def reset_stats(self) -> None:
         """Zero the telemetry windows and counters (the plan pool and
@@ -457,6 +542,13 @@ class SpectralEngine:
         self.requests = 0
         self.batches = 0
         self.padded = 0  # zero-pad rows added to fill buckets
+        # fault-tolerance counters (see module docstring)
+        self.errors = 0  # failed batch executions, retries included
+        self.retries = 0  # solo re-attempts under the retry policy
+        self.batch_splits = 0  # poisoned batches split into solo retries
+        self.quarantined = 0  # requests that exhausted every attempt
+        self.failed_requests = 0  # quarantined futures observed via block()
+        self.degraded_dispatches = 0  # dispatches routed to xla_auto
 
     # -- warm start -------------------------------------------------------
     def warm_start(self, source: Optional[str] = None, *, compile: bool = True) -> int:
@@ -485,6 +577,39 @@ class SpectralEngine:
                 except (ValueError, NotImplementedError):
                     continue
         return warmed
+
+    # -- fault tolerance --------------------------------------------------
+    def set_faults(self, faults) -> None:
+        """Arm (or, with ``None``, disarm) a
+        :class:`repro.runtime.faults.FaultPlan` on every plan the engine
+        executes -- pooled, future, and degraded alike. Call after
+        :meth:`warm_start` so warm-up itself is never poisoned; which
+        stages actually fire is the plan's ``match`` business (the
+        ``xla_auto`` degradation path runs under a ``global:<kind>``
+        label, so ``match="Exchange"`` chaos leaves it healthy)."""
+        self.faults = faults
+        self.pool.set_faults(faults)
+        for plan in self._degraded.values():
+            plan.faults = faults
+
+    def remesh(self, mesh, *, wisdom: Optional[str] = None, warm: bool = True,
+               compile: bool = True) -> int:
+        """Elastic re-scale: point the engine at a new (typically
+        smaller, post-device-loss) mesh. Flushes anything queued against
+        the old mesh, invalidates every pooled plan (they bake the old
+        shardings and P), drops the degraded-plan cache, resets the
+        circuit breaker (its keys embed the old P), and -- with ``warm``
+        -- re-warms the pool from wisdom at the new P (``wisdom`` may
+        name a file; ``None`` uses wisdom already in process). Returns
+        the number of plans warmed."""
+        self.flush()
+        self.mesh = mesh
+        self.pool.remesh(mesh)
+        self._degraded.clear()
+        self.breaker.reset()
+        if warm:
+            return self.warm_start(wisdom, compile=compile)
+        return 0
 
     def _buckets(self) -> List[int]:
         out, b = [], 1
@@ -568,12 +693,22 @@ class SpectralEngine:
         """Dispatch everything queued, policy or not."""
         return self._dispatch_batches(self.queue.flush())
 
-    def drain(self) -> None:
+    def drain(self, *, raise_errors: bool = False) -> None:
         """Flush the queue and block until every outstanding request's
-        output is on device (recording latencies, in submission order)."""
+        output is on device (recording latencies, in submission order).
+        Quarantined futures do not abort the drain: their failures are
+        counted (``failed_requests``) and, with ``raise_errors``, the
+        first one re-raises after every sibling has been blocked."""
         self.flush()
+        first: Optional[BaseException] = None
         for fut in list(self._outstanding):
-            fut.block()
+            try:
+                fut.block()
+            except Exception as e:  # noqa: BLE001 -- keep draining siblings
+                if first is None:
+                    first = e
+        if first is not None and raise_errors:
+            raise first
 
     def _force_dispatch(self) -> None:
         """A caller is blocked on a queued future: advance the clock to
@@ -612,6 +747,56 @@ class SpectralEngine:
         return len(batches)
 
     def _dispatch(self, key, futs: List[SpectralFuture]) -> None:
+        """Failure-isolation wrapper around :meth:`_execute_batch`: a
+        batch that raises is split into solo dispatches (one poisoned
+        request must not take its coalesced siblings down); a solo
+        request that raises is retried under the engine's
+        :class:`RetryPolicy` budget and finally quarantined -- its
+        future records the error, nothing propagates to the caller's
+        submit/poll path."""
+        try:
+            self._execute_batch(key, futs)
+            return
+        except Exception as e:  # noqa: BLE001 -- per-request isolation boundary
+            self.errors += 1
+            err = e
+        if len(futs) > 1:
+            self.batch_splits += 1
+            for fut in futs:
+                self._dispatch(key, [fut])
+            return
+        t0 = self._clock()
+        attempt = 0
+        while (
+            attempt < self.retry.max_retries
+            and self._clock() - t0 <= self.retry.deadline_s
+        ):
+            attempt += 1
+            self.retries += 1
+            try:
+                self._execute_batch(key, futs)
+                return
+            except Exception as e:  # noqa: BLE001
+                self.errors += 1
+                err = e
+        self.quarantined += 1
+        now = self._clock()
+        futs[0]._reject(err, dispatch_t=now)
+        self.queue_wait.record(now - futs[0].request.submit_t)
+
+    def _degraded_plan(self, pool_key: str, shape, ndim, dtype, real):
+        """The ``xla_auto`` (GSPMD reference schedule) plan a tripped
+        breaker degrades ``pool_key``'s traffic to -- cached outside the
+        LRU pool so degradation never evicts healthy plans."""
+        plan = self._degraded.get(pool_key)
+        if plan is None:
+            plan = self.pool._build(shape, ndim, dtype, real, backend="xla_auto")
+            if self.faults is not None:
+                plan.faults = self.faults
+            self._degraded[pool_key] = plan
+        return plan
+
+    def _execute_batch(self, key, futs: List[SpectralFuture]) -> None:
         op = key[0]
         fn, arity = _OPS[op]
         req0 = futs[0].request
@@ -620,12 +805,16 @@ class SpectralEngine:
         bucket = self._bucket(k)
         self.dispatch_monitor.start()
         t0 = self._clock()
-        plan, hit = self.pool.get(
-            (bucket,) + self._plan_shape(op, shape, ndim),
-            ndim,
-            req0.operands[0].dtype,
-            real,
-        )
+        plan_shape = (bucket,) + self._plan_shape(op, shape, ndim)
+        dtype = req0.operands[0].dtype
+        plan, hit = self.pool.get(plan_shape, ndim, dtype, real)
+        pool_key = self.pool.key(plan_shape, ndim, dtype, real)
+        bkey = (plan.backend, pool_key)
+        degraded = False
+        if not self.breaker.allow(bkey):
+            plan = self._degraded_plan(pool_key, plan_shape, ndim, dtype, real)
+            self.degraded_dispatches += 1
+            degraded = True
         t_pool = self._clock()
         sharding = plan.input_sharding(opposite=(op == "ifft"))
         stacked = []
@@ -636,9 +825,19 @@ class SpectralEngine:
                     [block, jnp.zeros((bucket - k,) + shape, block.dtype)]
                 )
             stacked.append(jax.device_put(block, sharding))
-        self.padded += bucket - k
         t_stack = self._clock()
-        out = fn(plan, tuple(stacked), lengths)  # async launch, not device time
+        try:
+            out = fn(plan, tuple(stacked), lengths)  # async launch, not device time
+        except Exception:
+            # injected/armed faults surface synchronously here; only the
+            # fast path feeds the breaker -- a failing degraded dispatch
+            # must not re-open a breaker that already tripped
+            if not degraded:
+                self.breaker.record_failure(bkey)
+            raise
+        if not degraded:
+            self.breaker.record_success(bkey)
+        self.padded += bucket - k
         now = self._clock()
         spans = [
             ("pool", t_pool - t0), ("stack", t_stack - t_pool),
@@ -659,12 +858,16 @@ class SpectralEngine:
                 batch_size=k,
                 pool_hit=hit,
                 backend=plan.backend,
+                degraded=degraded,
             )
             self.queue_wait.record(now - fut.request.submit_t)
 
     # -- telemetry --------------------------------------------------------
-    def _record_completion(self, fut: SpectralFuture) -> None:
-        self.latency.record(self._clock() - fut.request.submit_t)
+    def _record_completion(self, fut: SpectralFuture, *, failed: bool = False) -> None:
+        if failed:
+            self.failed_requests += 1
+        else:
+            self.latency.record(self._clock() - fut.request.submit_t)
         try:
             self._outstanding.remove(fut)
         except ValueError:
@@ -689,6 +892,15 @@ class SpectralEngine:
             },
             "dispatch": self.dispatch_monitor.straggler_report(),
             "pool": self.pool.stats(),
+            "faults": {
+                "errors": self.errors,
+                "retries": self.retries,
+                "batch_splits": self.batch_splits,
+                "quarantined": self.quarantined,
+                "failed_requests": self.failed_requests,
+                "degraded_dispatches": self.degraded_dispatches,
+                "breaker": self.breaker.stats(),
+            },
         }
 
     def metrics(self) -> dict:
@@ -732,4 +944,15 @@ class SpectralEngine:
         out["wisdom_stale"] = sum(
             1 for row in _planner.wisdom_report() if row["stale"]
         )
+        # fault-tolerance counters: errors/retries on dispatch, batch
+        # isolation splits, quarantines, degraded (xla_auto) dispatches,
+        # and the circuit breaker's state/transition gauges
+        out["errors"] = self.errors
+        out["retries"] = self.retries
+        out["batch_splits"] = self.batch_splits
+        out["quarantined"] = self.quarantined
+        out["failed_requests"] = self.failed_requests
+        out["degraded_dispatches"] = self.degraded_dispatches
+        for name, v in self.breaker.stats().items():
+            out[f"breaker_{name}"] = v
         return out
